@@ -1,0 +1,65 @@
+"""Paper Figure 5: ablation on ToolBench with Zipf-1.1 tool popularity.
+
+Features are added incrementally, matching the paper's stack:
+  rr            round-robin + local prefix cache (baseline)
+  +e2           per-request E2 exploit/explore
+  +rebalance    post-assignment load shifting + prefix autoscaling
+  +pd           prefill/decode balancing at the global scheduler
+  +priority     local priority-group fair queueing (full Preble)
+"""
+
+from __future__ import annotations
+
+from repro.data import assign_arrivals, gen_workload, poisson_arrivals
+from repro.serving.simulator import simulate
+
+from .common import emit
+
+STEPS = [
+    ("rr", dict(policy="rr", fcfs_local=True, enable_rebalance=False,
+                enable_autoscale=False, enable_pd_balance=False)),
+    ("+e2", dict(policy="e2", fcfs_local=True, enable_rebalance=False,
+                 enable_autoscale=False, enable_pd_balance=False)),
+    ("+rebalance", dict(policy="e2", fcfs_local=True,
+                        enable_rebalance=True, enable_autoscale=True,
+                        enable_pd_balance=False)),
+    ("+pd", dict(policy="e2", fcfs_local=True, enable_rebalance=True,
+                 enable_autoscale=True, enable_pd_balance=True)),
+    ("+priority", dict(policy="e2", fcfs_local=False,
+                       enable_rebalance=True, enable_autoscale=True,
+                       enable_pd_balance=True)),
+]
+
+
+def run(n: int = 600, rps: float = 40.0, quick: bool = False):
+    # rps past the 4-instance knee + a mid-run Zipf popularity SHIFT:
+    # at steady skew E2 alone already balances (rebalance/autoscale
+    # never trigger — measured); the post-assignment mechanisms exist
+    # for load shifts, so the ablation exercises one (paper §3.2).
+    if quick:
+        n, rps = 200, 40.0
+    times = poisson_arrivals(n, rps, seed=13)
+    rows = []
+    for name, kw in STEPS:
+        reqs = assign_arrivals(
+            gen_workload("toolbench", n, seed=4, zipf=1.1,
+                         popularity_shift=True),
+            times, shuffle=False)
+        # history window scaled to the run length (paper: H=180s over
+        # multi-minute runs; this run lasts ~25s of simulated time)
+        s = simulate(reqs, num_instances=4, window=8.0, **kw).summary()
+        rows.append({"config": name,
+                     "avg_latency": s["avg_latency"],
+                     "p99_latency": s["p99_latency"],
+                     "cache_hit": s["cache_hit_frac"],
+                     "exploit": s.get("gs_exploit", 0),
+                     "explore": s.get("gs_explore", 0),
+                     "rebalance": s.get("gs_rebalance", 0),
+                     "autoscale": s.get("gs_autoscale", 0),
+                     "pd": s.get("gs_pd_balance", 0)})
+    emit("fig5_ablation", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,42 @@
+"""Shared benchmark helpers: CSV emission + sweep utilities."""
+
+from __future__ import annotations
+
+import csv
+import io
+import os
+import sys
+import time
+from typing import Any, Dict, List, Sequence
+
+RESULTS_DIR = os.environ.get("BENCH_RESULTS", "results/bench")
+
+
+def emit(name: str, rows: Sequence[Dict[str, Any]],
+         keys: Sequence[str] | None = None) -> None:
+    """Print a CSV table and persist it under results/bench/<name>.csv."""
+    if not rows:
+        print(f"[{name}] no rows")
+        return
+    keys = list(keys or rows[0].keys())
+    buf = io.StringIO()
+    w = csv.DictWriter(buf, fieldnames=keys, extrasaction="ignore")
+    w.writeheader()
+    for r in rows:
+        w.writerow({k: (f"{v:.4g}" if isinstance(v, float) else v)
+                    for k, v in r.items()})
+    text = buf.getvalue()
+    print(f"===== {name} =====")
+    print(text)
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, f"{name}.csv"), "w") as f:
+        f.write(text)
+
+
+class timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.s = time.time() - self.t0

@@ -1,0 +1,72 @@
+"""Deliverable (g): the three-term roofline table, per (arch x shape),
+read from the dry-run JSON records in results/dryrun/.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report [--pod2] [--md]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+from repro.analysis.roofline import roofline_from_record
+
+from .common import emit
+
+
+def load_records(dryrun_dir: str = "results/dryrun", pod: str = "pod1",
+                 tag: str = ""):
+    recs = []
+    suffix = f"__{pod}{('__' + tag) if tag else ''}.json"
+    for p in sorted(glob.glob(os.path.join(dryrun_dir, f"*{suffix}"))):
+        base = os.path.basename(p)
+        if not tag and base.count("__") != 2:
+            continue
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def rows_from(recs):
+    rows = []
+    for rec in recs:
+        t = roofline_from_record(rec, rec["model"]["model_flops"])
+        peak = (rec["memory"].get("peak_bytes") or 0) / 2**30
+        rows.append({
+            "arch": rec["arch"], "shape": rec["shape"],
+            "compute_s": t.compute_s, "memory_s": t.memory_s,
+            "collective_s": t.collective_s,
+            "bound": t.dominant,
+            "step_s": t.step_time_s,
+            "roofline_frac": t.roofline_fraction,
+            "useful": t.useful_ratio,
+            "peak_GiB": peak,
+        })
+    return rows
+
+
+def run(quick: bool = False, dryrun_dir: str = "results/dryrun",
+        pod: str = "pod1"):
+    recs = load_records(dryrun_dir, pod)
+    if not recs:
+        print(f"[roofline] no dry-run records under {dryrun_dir} ({pod}) "
+              "- run `python -m repro.launch.dryrun --all` first")
+        return []
+    rows = rows_from(recs)
+    emit(f"roofline_{pod}", rows)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pod2", action="store_true")
+    ap.add_argument("--dir", default="results/dryrun")
+    args = ap.parse_args()
+    run(dryrun_dir=args.dir, pod="pod2" if args.pod2 else "pod1")
+
+
+if __name__ == "__main__":
+    main()

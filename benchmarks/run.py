@@ -1,0 +1,51 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+
+Emits CSVs to results/bench/ and prints them. The roofline report reads
+results/dryrun/ (produced by repro.launch.dryrun --all).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced sizes (CI)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from . import (bench_ablation, bench_azure, bench_e2e, bench_kernels,
+                   bench_scheduler, bench_workloads, roofline_report)
+    suites = {
+        "workloads": bench_workloads.run,     # Table 1
+        "e2e": bench_e2e.run,                 # Figure 3
+        "azure": bench_azure.run,             # Figure 4
+        "ablation": bench_ablation.run,       # Figure 5
+        "scheduler": bench_scheduler.run,     # §4.4
+        "kernels": bench_kernels.run,         # Pallas kernels
+        "roofline": roofline_report.run,      # deliverable (g)
+    }
+    failures = 0
+    for name, fn in suites.items():
+        if args.only and name != args.only:
+            continue
+        t0 = time.time()
+        try:
+            fn(quick=args.quick)
+            print(f"[{name}] done in {time.time()-t0:.1f}s\n", flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            import traceback
+            traceback.print_exc()
+            print(f"[{name}] FAILED: {e}\n", flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from .hlo_stats import HloStats, analyze_hlo
+from .roofline import RooflineTerms, roofline_from_record, HW
+
+__all__ = ["HloStats", "analyze_hlo", "RooflineTerms",
+           "roofline_from_record", "HW"]

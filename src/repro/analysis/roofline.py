@@ -1,0 +1,128 @@
+"""Three-term roofline from dry-run records (deliverable g).
+
+    compute    = HLO_dot_FLOPs_per_dev / peak_FLOP/s
+    memory     = HLO_bytes_per_dev / HBM_bw
+    collective = per-kind collective bytes / effective link bw
+
+All HLO quantities are per-device (the SPMD per-partition module), so
+no division by chip count. Hardware: TPU v5e — 197 TFLOP/s bf16,
+819 GB/s HBM, ~50 GB/s/link ICI.
+
+Collective time model (ring algorithms on a 2D torus axis of size n):
+an all-reduce moves 2(n-1)/n x bytes through each link; all-gather /
+reduce-scatter move (n-1)/n x their FULL (gathered) size — the HLO
+shape of an all-gather is already the gathered output, while for
+reduce-scatter it's the scattered output (x n to recover full). We fold
+these into an effective "bytes on wire" per chip and divide by one link
+bandwidth (conservative: single-direction ring).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # B/s / chip
+ICI_BW = 50e9              # B/s / link
+
+HW = {"peak_flops": PEAK_FLOPS, "hbm_bw": HBM_BW, "ici_bw": ICI_BW}
+
+
+@dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops: float
+    bytes_accessed: float
+    collective_wire_bytes: float
+    model_flops: float = 0.0
+    useful_ratio: float = 0.0          # MODEL_FLOPS / (HLO_FLOPs * devices)
+    collectives: Dict[str, float] = field(default_factory=dict)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Perfect-overlap lower bound: max of the three terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the ideal (compute-only) roofline achieved by the
+        bound: compute_s / max(all terms). 1.0 = compute-bound at peak."""
+        t = self.step_time_s
+        return (self.compute_s / t) if t > 0 else 0.0
+
+
+def _wire_bytes(kind: str, nbytes: float, axis_n: int = 16) -> float:
+    """Bytes through a chip's link for one collective of HLO-shape size
+    ``nbytes`` over an axis of ``axis_n`` chips (ring algorithm)."""
+    f = (axis_n - 1) / axis_n
+    if kind == "all-reduce":
+        return 2.0 * f * nbytes
+    if kind == "all-gather":
+        return f * nbytes                    # shape is the gathered size
+    if kind == "reduce-scatter":
+        return f * nbytes * axis_n           # shape is the scattered size
+    if kind == "all-to-all":
+        return f * nbytes
+    if kind == "collective-permute":
+        return nbytes
+    return nbytes
+
+
+def roofline_from_record(rec: Dict[str, Any],
+                         model_flops: Optional[float] = None,
+                         axis_n: int = 16) -> RooflineTerms:
+    """rec: one dry-run JSON record (results/dryrun/*.json)."""
+    flops = rec["hlo"]["dot_flops"]
+    # memory term: fusion-aware dot-operand bytes (see hlo_stats);
+    # XLA's raw 'bytes accessed' kept in the record for reference only.
+    # cpu_f32_correction: XLA:CPU upcasts bf16->f32, doubling all byte
+    # counts relative to the TPU compile this models.
+    corr = rec["hlo"].get("cpu_f32_correction", 1.0)
+    nbytes = (rec["hlo"].get("dot_bytes")
+              or rec["hlo"].get("bytes_accessed") or 0.0) * corr
+    colls = rec["hlo"].get("collective_bytes", {})
+    wire = {k: _wire_bytes(k, v * corr, axis_n) for k, v in colls.items()}
+    wire_total = sum(wire.values())
+    t = RooflineTerms(
+        compute_s=flops / PEAK_FLOPS,
+        memory_s=nbytes / HBM_BW,
+        collective_s=wire_total / ICI_BW,
+        flops=flops,
+        bytes_accessed=nbytes,
+        collective_wire_bytes=wire_total,
+        collectives=wire,
+    )
+    if model_flops:
+        t.model_flops = model_flops
+        total_hlo = flops * rec["devices"]
+        t.useful_ratio = model_flops / total_hlo if total_hlo else 0.0
+    return t
+
+
+def model_flops_for(cfg, shape, n_active_params: int) -> float:
+    """Analytic MODEL_FLOPS for the cell (the 'useful work' yardstick).
+
+    train:   6 * N_active * tokens  (fwd 2ND + bwd 4ND)
+    prefill: 2 * N_active * tokens
+    decode:  2 * N_active * batch   (one token per sequence)
+    + causal attention term 12*L*d*S^2/2 etc. is omitted (documented:
+    <10% for the assigned shapes except long-context attention archs).
+    """
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        tokens = B * (shape.seq_len if not cfg.encoder_decoder
+                      else cfg.max_target_len + S)
+        return 6.0 * n_active_params * tokens
+    if shape.kind == "prefill":
+        tokens = B * S + (B * 16 if cfg.encoder_decoder else 0)
+        return 2.0 * n_active_params * tokens
+    return 2.0 * n_active_params * B

@@ -1,0 +1,21 @@
+# The paper's primary contribution: E2 distributed prompt scheduling
+# (global request-level + local iteration-level schedulers over a token
+# radix forest with window-H load accounting).
+
+from .radix_tree import RadixTree, RadixNode, MatchResult
+from .cost_model import CostModel, HardwareSpec, ModelSpec, cost_model_for
+from .request import Request, RequestState
+from .e2 import InstanceState, ScheduleDecision, e2_schedule, load_cost, subtree_load
+from .global_scheduler import GlobalScheduler, GlobalSchedulerConfig, PodRouter
+from .local_scheduler import (Batch, BatchItem, LocalScheduler,
+                              LocalSchedulerConfig)
+
+__all__ = [
+    "RadixTree", "RadixNode", "MatchResult",
+    "CostModel", "HardwareSpec", "ModelSpec", "cost_model_for",
+    "Request", "RequestState",
+    "InstanceState", "ScheduleDecision", "e2_schedule", "load_cost",
+    "subtree_load",
+    "GlobalScheduler", "GlobalSchedulerConfig", "PodRouter",
+    "Batch", "BatchItem", "LocalScheduler", "LocalSchedulerConfig",
+]

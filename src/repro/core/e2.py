@@ -1,0 +1,203 @@
+"""E2 (Exploitation + Exploration) — Preble Algorithms 1 & 2.
+
+Pure-algorithm module: stateless functions over the global scheduler's
+view of the world.  ``GlobalScheduler`` wires these to live state.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from collections import deque
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from .cost_model import CostModel
+from .radix_tree import MatchResult, RadixNode, RadixTree
+
+
+@dataclass
+class InstanceState:
+    """Global scheduler's per-instance bookkeeping (one model instance =
+    one data-parallel slice; possibly multiple chips under TP)."""
+
+    instance_id: int
+    capacity_tokens: int                  # KV/state cache capacity in tokens
+    cost_model: CostModel
+    window: float = 180.0                 # history H (seconds)
+    speed_factor: float = 1.0             # >1 == straggler (runs slower)
+    alive: bool = True
+
+    # window-H event log: (time, prefill_sec, decode_sec)
+    events: deque = field(default_factory=deque)
+    prefill_sec_sum: float = 0.0
+    decode_sec_sum: float = 0.0
+    request_times: deque = field(default_factory=deque)  # assignment times
+    inflight: int = 0
+    cached_tokens: int = 0                # tracked estimate of cache use
+    # running average of observed output lengths (paper: avg output len in H)
+    out_len_events: deque = field(default_factory=deque)  # (time, out_len)
+    out_len_sum: float = 0.0
+
+    # ---- window maintenance --------------------------------------------------
+
+    def _trim(self, now: float) -> None:
+        cutoff = now - self.window
+        ev = self.events
+        while ev and ev[0][0] < cutoff:
+            _, p, d = ev.popleft()
+            self.prefill_sec_sum -= p
+            self.decode_sec_sum -= d
+        rt = self.request_times
+        while rt and rt[0] < cutoff:
+            rt.popleft()
+        ol = self.out_len_events
+        while ol and ol[0][0] < cutoff:
+            self.out_len_sum -= ol.popleft()[1]
+
+    def add_work(self, now: float, prefill_sec: float, decode_sec: float) -> None:
+        self.events.append((now, prefill_sec, decode_sec))
+        self.prefill_sec_sum += prefill_sec
+        self.decode_sec_sum += decode_sec
+        self.request_times.append(now)
+        self._trim(now)
+
+    def observe_output_len(self, now: float, out_len: int) -> None:
+        self.out_len_events.append((now, out_len))
+        self.out_len_sum += out_len
+        self._trim(now)
+
+    def avg_output_len(self, now: float, default: float = 32.0) -> float:
+        self._trim(now)
+        n = len(self.out_len_events)
+        return (self.out_len_sum / n) if n else default
+
+    def requests_in_window(self, now: float) -> int:
+        self._trim(now)
+        return len(self.request_times)
+
+    def window_load(self, now: float) -> float:
+        """L_i in Algorithm 2: total windowed compute seconds, scaled by the
+        straggler speed factor (a 2x-slow instance carries 2x the time)."""
+        self._trim(now)
+        return (self.prefill_sec_sum + self.decode_sec_sum) * self.speed_factor
+
+    def decode_ratio(self, now: float) -> float:
+        """Fraction of windowed compute that is decode-phase (PD balancing)."""
+        self._trim(now)
+        total = self.prefill_sec_sum + self.decode_sec_sum
+        return (self.decode_sec_sum / total) if total > 0 else 0.0
+
+
+@dataclass
+class ScheduleDecision:
+    instance: int
+    mode: str                       # "exploit" | "explore" | "pd_balance" | "rebalance" | "autoscale"
+    cached_len: int
+    missed_len: int
+    cost: float = 0.0
+    candidates: Dict[int, float] = field(default_factory=dict)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2: LOADCOST(i, R_k)
+# ---------------------------------------------------------------------------
+
+def load_cost(inst: InstanceState, tree: RadixTree, match: MatchResult,
+              prompt_len: int, now: float) -> float:
+    """L_i + M_i + P_i for assigning the matched request to ``inst``."""
+    cm = inst.cost_model
+    # L_i — windowed history load (maintained incrementally; the paper's
+    # Σ PREFILLTIME(missed_j) + DECODETIME(avg_out) is what add_work stored).
+    L = inst.window_load(now)
+
+    # per-instance missed length: tokens of this prompt NOT cached on inst
+    inst_cached = match.per_instance_len.get(inst.instance_id, 0)
+    missed = max(prompt_len - inst_cached, 0)
+
+    # M_i — eviction cost: recompute time of evicted nodes x their hit rate.
+    M = 0.0
+    tokens_needed = inst.cached_tokens + missed - inst.capacity_tokens
+    if tokens_needed > 0:
+        protected: Set[int] = {n.node_id for n in match.path}
+        plan = tree.plan_eviction(inst.instance_id, tokens_needed, protected)
+        total_req = max(inst.requests_in_window(now), 1)
+        for node in plan:
+            n_j = tree.hits_in_window(node, now, inst.instance_id) / total_req
+            M += cm.prefill_time(len(node.tokens)) * n_j
+
+    # P_i — prefill time of the new request's missed tokens on this instance.
+    P = cm.prefill_time(missed)
+
+    return L + (M + P) * inst.speed_factor
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1: SCHEDULEREQUEST(R_k)
+# ---------------------------------------------------------------------------
+
+def e2_schedule(instances: Dict[int, InstanceState], tree: RadixTree,
+                match: MatchResult, prompt_len: int, now: float,
+                imbal_ratio: float = 0.85,
+                pd_min_load: float = 1.0) -> ScheduleDecision:
+    """Pure E2 decision (no tree mutation): exploit vs explore.
+
+    ``imbal_ratio``: ImbalR in Algorithm 1 — an instance whose windowed
+    compute is more decode-heavy than this is handed explore requests
+    (prefill-phase units) outright, as its MXU capacity is nearly idle.
+    ``pd_min_load``: PD balancing only kicks in above this absolute load
+    (an idle cluster is trivially "decode heavy" at ratio 0/0 edge cases).
+    """
+    alive = {i: s for i, s in instances.items() if s.alive}
+    if not alive:
+        raise RuntimeError("no alive instances")
+
+    cached_len = match.matched_len
+    missed_len = prompt_len - cached_len
+
+    if missed_len < cached_len and match.per_instance_len:
+        # ---- EXPLOIT: instances caching the longest part of the match ----
+        best_len = max(
+            l for i, l in match.per_instance_len.items() if i in alive
+        ) if any(i in alive for i in match.per_instance_len) else 0
+        if best_len > 0:
+            K = [i for i, l in match.per_instance_len.items()
+                 if l == best_len and i in alive]
+            costs = {i: load_cost(alive[i], tree, match, prompt_len, now)
+                     for i in K}
+            pick = min(costs, key=costs.get)
+            return ScheduleDecision(pick, "exploit", cached_len, missed_len,
+                                    costs[pick], costs)
+        # matched prefix exists in tree but no alive instance caches it —
+        # fall through to explore.
+
+    # ---- EXPLORE ----
+    # Prefill/decode balancing first (paper: prioritized over cost compare).
+    # Only meaningful when the whole cluster is busy (paper §3.2 assumes
+    # GPUs run at full capacity): an idle instance is always the better
+    # explore target than a decode-heavy one, so skip PD-balance if any
+    # instance is (near-)idle and let the cost comparison find it.
+    loads_now = {i: s.window_load(now) for i, s in alive.items()}
+    if min(loads_now.values()) > pd_min_load:
+        ratios = {i: s.decode_ratio(now) for i, s in alive.items()}
+        max_i = max(ratios, key=ratios.get)
+        if ratios[max_i] > imbal_ratio:
+            return ScheduleDecision(max_i, "pd_balance", cached_len,
+                                    missed_len, 0.0, ratios)
+
+    costs = {i: load_cost(s, tree, match, prompt_len, now)
+             for i, s in alive.items()}
+    pick = min(costs, key=costs.get)
+    return ScheduleDecision(pick, "explore", cached_len, missed_len,
+                            costs[pick], costs)
+
+
+def subtree_load(tree: RadixTree, node: RadixNode, cm: CostModel,
+                 now: float) -> float:
+    """Windowed exploitation load concentrated on a prefix subtree —
+    used by autoscaling (paper: 'calculate the subtree's load using
+    Algorithm 2'). Saved-prefill seconds per window for requests hitting
+    the subtree."""
+    total = 0.0
+    for n in tree.subtree_nodes(node):
+        hits = tree.hits_in_window(n, now)
+        total += hits * cm.prefill_time(len(n.tokens))
+    return total

@@ -1,0 +1,286 @@
+"""Preble global scheduler — request-level scheduling (paper §3.1/§3.2).
+
+Maintains the global prefix forest, per-instance window loads, and applies
+E2 plus the post-assignment mechanisms: load rebalancing (Th_bal) and
+prefix autoscaling. Also implements the beyond-paper production concerns:
+instance failure repair, elastic add/remove, straggler awareness, and a
+PodRouter for >1-pod deployments (one global scheduler per pod, as the
+paper itself prescribes for datacenter scale).
+"""
+
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+from .cost_model import CostModel, cost_model_for
+from .e2 import InstanceState, ScheduleDecision, e2_schedule, load_cost, subtree_load
+from .radix_tree import MatchResult, RadixNode, RadixTree
+from .request import Request
+
+
+@dataclass
+class GlobalSchedulerConfig:
+    window: float = 180.0            # history H (paper default: 3 minutes)
+    th_bal: float = 2.0              # rebalance when max_load > th_bal * min_load
+    imbal_ratio: float = 0.85        # ImbalR for PD balancing
+    pd_min_load: float = 1.0         # PD balancing only above this load (s)
+    autoscale_frac: float = 0.5      # subtree load > frac * H  => replicate
+    capacity_tokens: int = 2_000_000 # per-instance KV capacity (tokens)
+    rebalance_every: float = 1.0     # seconds between rebalance scans
+    autoscale_every: float = 5.0     # seconds between autoscale scans
+
+
+class GlobalScheduler:
+    def __init__(self, num_instances: int = 0,
+                 cost_model: Optional[CostModel] = None,
+                 config: Optional[GlobalSchedulerConfig] = None):
+        self.config = config or GlobalSchedulerConfig()
+        self.cost_model = cost_model or cost_model_for()
+        self.tree = RadixTree(window=self.config.window)
+        self.instances: Dict[int, InstanceState] = {}
+        self._redirects: Dict[int, int] = {}          # heavy -> light
+        self._hot_nodes: Dict[int, int] = {}          # node_id -> replica target
+        self._last_rebalance = 0.0
+        self._last_autoscale = 0.0
+        self.decisions: List[ScheduleDecision] = []
+        self.stats = {"exploit": 0, "explore": 0, "pd_balance": 0,
+                      "rebalance": 0, "autoscale": 0, "scheduled": 0,
+                      "failures": 0}
+        for i in range(num_instances):
+            self.add_instance(i)
+
+    # ---- elastic membership --------------------------------------------------
+
+    def add_instance(self, instance_id: int,
+                     capacity_tokens: Optional[int] = None,
+                     speed_factor: float = 1.0) -> None:
+        self.instances[instance_id] = InstanceState(
+            instance_id=instance_id,
+            capacity_tokens=capacity_tokens or self.config.capacity_tokens,
+            cost_model=self.cost_model,
+            window=self.config.window,
+            speed_factor=speed_factor,
+        )
+
+    def remove_instance(self, instance_id: int) -> None:
+        """Graceful drain: stop routing to it; its cache entries are dropped."""
+        inst = self.instances.get(instance_id)
+        if inst is None:
+            return
+        inst.alive = False
+        self.tree.drop_instance_everywhere(instance_id)
+        self._redirects.pop(instance_id, None)
+        self._redirects = {h: l for h, l in self._redirects.items()
+                           if l != instance_id}
+
+    def on_instance_failure(self, instance_id: int) -> None:
+        """Hard failure: identical tree repair, counted for observability.
+        The cluster runtime re-enqueues that instance's in-flight requests
+        through ``schedule`` again (their prefixes now resolve elsewhere)."""
+        self.stats["failures"] += 1
+        self.remove_instance(instance_id)
+
+    def set_speed_factor(self, instance_id: int, factor: float) -> None:
+        """Straggler mitigation hook: runtime reports observed slowdown
+        (measured iteration time / expected); E2 then sees inflated costs
+        for this instance and organically sheds load from it."""
+        if instance_id in self.instances:
+            self.instances[instance_id].speed_factor = max(factor, 1e-3)
+
+    def alive_instances(self) -> List[int]:
+        return [i for i, s in self.instances.items() if s.alive]
+
+    # ---- the scheduling entry point -------------------------------------------
+
+    def schedule(self, request: Request, now: float) -> ScheduleDecision:
+        cfg = self.config
+        match = self.tree.match(request.tokens, now=now, update_stats=True)
+        decision = e2_schedule(self.instances, self.tree, match,
+                               request.prompt_len, now,
+                               imbal_ratio=cfg.imbal_ratio,
+                               pd_min_load=cfg.pd_min_load)
+
+        # Post-assignment adjustment 1 — load rebalancing: redirect exploit
+        # traffic from a flagged-heavy instance to its light partner.
+        if decision.mode == "exploit":
+            tgt = self._redirects.get(decision.instance)
+            if tgt is not None and self.instances[tgt].alive:
+                decision = ScheduleDecision(tgt, "rebalance",
+                                            decision.cached_len,
+                                            decision.missed_len)
+        # Post-assignment adjustment 2 — autoscaling: a hot prefix seeds a
+        # replica on its designated target; once cached both copies are
+        # load-balanced by plain E2 exploit.
+        if decision.mode == "exploit" and match.path:
+            for node in match.path:
+                tgt = self._hot_nodes.pop(node.node_id, None)
+                if tgt is not None and self.instances[tgt].alive \
+                        and tgt != decision.instance:
+                    decision = ScheduleDecision(tgt, "autoscale",
+                                                decision.cached_len,
+                                                decision.missed_len)
+                    break
+
+        self._commit(request, decision, match, now)
+
+        # periodic background work (runs inline here; the real deployment
+        # runs it on a separate thread — both are control-plane-cheap)
+        if now - self._last_rebalance >= cfg.rebalance_every:
+            self.rebalance(now)
+        if now - self._last_autoscale >= cfg.autoscale_every:
+            self.maybe_autoscale(now)
+        return decision
+
+    def _commit(self, request: Request, decision: ScheduleDecision,
+                match: MatchResult, now: float) -> None:
+        inst = self.instances[decision.instance]
+        inst_cached = match.per_instance_len.get(decision.instance, 0)
+        missed = max(request.prompt_len - inst_cached, 0)
+
+        # Insert/extend prompt path; mark the chosen instance on every node.
+        self.tree.insert(request.tokens, instance=decision.instance, now=now)
+
+        # window-H load accounting (Alg. 2's L term source)
+        cm = inst.cost_model
+        est_out = inst.avg_output_len(now, default=float(request.max_new_tokens))
+        inst.add_work(now, cm.prefill_time(missed), cm.decode_time(est_out))
+        inst.cached_tokens = min(inst.cached_tokens + missed,
+                                 inst.capacity_tokens)
+        inst.inflight += 1
+
+        request.instance = decision.instance
+        request.cached_len = inst_cached
+        request.scheduled_time = now
+
+        self.stats[decision.mode] += 1
+        self.stats["scheduled"] += 1
+
+    # ---- runtime feedback ------------------------------------------------------
+
+    def on_request_complete(self, request: Request, now: float) -> None:
+        inst = self.instances.get(request.instance)
+        if inst is None:
+            return
+        inst.inflight = max(inst.inflight - 1, 0)
+        inst.observe_output_len(now, len(request.output_tokens)
+                                or request.max_new_tokens)
+
+    def on_evictions(self, instance_id: int, node_ids: Sequence[int],
+                     now: float = 0.0) -> None:
+        """Async eviction notification from a local scheduler (§3.3)."""
+        inst = self.instances.get(instance_id)
+        by_id = {n.node_id: n for n in self.tree.iter_nodes()}
+        freed = 0
+        for nid in node_ids:
+            node = by_id.get(nid)
+            if node is not None and instance_id in node.instances:
+                self.tree.remove_instance(node, instance_id)
+                freed += len(node.tokens)
+        if inst is not None:
+            inst.cached_tokens = max(inst.cached_tokens - freed, 0)
+        self.tree.prune_dead(now)
+
+    # ---- post-assignment load management ----------------------------------------
+
+    def rebalance(self, now: float) -> Optional[Tuple[int, int]]:
+        self._last_rebalance = now
+        alive = {i: s for i, s in self.instances.items() if s.alive}
+        if len(alive) < 2:
+            self._redirects.clear()
+            return None
+        loads = {i: s.window_load(now) for i, s in alive.items()}
+        heavy = max(loads, key=loads.get)
+        light = min(loads, key=loads.get)
+        if loads[light] <= 0 and loads[heavy] <= 0:
+            self._redirects.clear()
+            return None
+        if loads[heavy] > self.config.th_bal * max(loads[light], 1e-9):
+            self._redirects = {heavy: light}
+            return (heavy, light)
+        self._redirects.clear()
+        return None
+
+    def maybe_autoscale(self, now: float) -> List[int]:
+        """Replicate prefixes whose subtree load exceeds what one instance
+        should absorb (paper: queueing doubling over H; we use the subtree
+        windowed-work fraction, same signal expressed in seconds)."""
+        self._last_autoscale = now
+        alive = {i: s for i, s in self.instances.items() if s.alive}
+        if len(alive) < 2:
+            return []
+        threshold = self.config.autoscale_frac * self.config.window
+        scaled: List[int] = []
+        loads = {i: s.window_load(now) for i, s in alive.items()}
+        for node in self.tree.iter_nodes():
+            if not node.instances or len(node.instances) >= len(alive):
+                continue
+            sload = subtree_load(self.tree, node, self.cost_model, now)
+            if sload <= threshold:
+                continue
+            candidates = [i for i in alive if i not in node.instances]
+            if not candidates:
+                continue
+            target = min(candidates, key=lambda i: loads[i])
+            self._hot_nodes[node.node_id] = target
+            scaled.append(node.node_id)
+        return scaled
+
+    # ---- introspection -----------------------------------------------------------
+
+    def loads(self, now: float) -> Dict[int, float]:
+        return {i: s.window_load(now) for i, s in self.instances.items()
+                if s.alive}
+
+
+class PodRouter:
+    """Datacenter-scale front tier: one GlobalScheduler per pod (paper
+    §3.1: 'one can deploy several Preble clusters, each having one global
+    scheduler'). Routes each request to a pod by prefix-affinity digest
+    (first-k-token hash, so requests sharing a prefix head land on the
+    same pod's scheduler) with load-based fallback & failover."""
+
+    def __init__(self, pods: Dict[int, GlobalScheduler],
+                 head_tokens: int = 64, spill_ratio: float = 2.0,
+                 spill_min_load: float = 1.0):
+        self.pods = pods
+        self.head_tokens = head_tokens
+        self.spill_ratio = spill_ratio
+        # absolute seconds of load before spilling can trigger: without
+        # this, any nonzero load "exceeds 2x" an idle pod and affinity
+        # degenerates to round-robin (caught by test_pod_router)
+        self.spill_min_load = spill_min_load
+        self._affinity: Dict[str, int] = {}
+
+    def _digest(self, tokens: Sequence[int]) -> str:
+        head = bytes(str(list(tokens[: self.head_tokens])), "utf-8")
+        return hashlib.blake2b(head, digest_size=8).hexdigest()
+
+    def _healthy(self) -> Dict[int, GlobalScheduler]:
+        return {p: s for p, s in self.pods.items() if s.alive_instances()}
+
+    def pod_loads(self, now: float) -> Dict[int, float]:
+        out = {}
+        for pid, sched in self._healthy().items():
+            l = sched.loads(now)
+            out[pid] = (sum(l.values()) / max(len(l), 1)) if l else 0.0
+        return out
+
+    def route(self, request: Request, now: float) -> Tuple[int, ScheduleDecision]:
+        key = self._digest(request.tokens)
+        loads = self.pod_loads(now)     # healthy pods only
+        if not loads:
+            raise RuntimeError("no healthy pods")
+        pid = self._affinity.get(key)
+        if pid is None or pid not in loads:
+            pid = min(loads, key=loads.get)
+            self._affinity[key] = pid
+        else:
+            lightest = min(loads, key=loads.get)
+            if (lightest != pid
+                    and loads[pid] > self.spill_min_load
+                    and loads[pid] > self.spill_ratio * loads[lightest]):
+                pid = lightest
+                self._affinity[key] = pid
+        return pid, self.pods[pid].schedule(request, now)

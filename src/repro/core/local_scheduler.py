@@ -1,0 +1,264 @@
+"""Preble local scheduler — iteration-level scheduling (paper §3.3).
+
+One per model instance.  Maintains:
+  * a wait queue of requests assigned by the global scheduler,
+  * a local radix tree mirroring what this instance caches,
+  * per-node active-request pin counts (via RadixNode.ref_count).
+
+Every iteration it forms the next batch with the priority-group policy
+(fairness by cached-token percentage), applies Sarathi-style chunked
+prefill for long missed prompts, and LRU-evicts tree nodes when the
+token budget overflows — asynchronously notifying the global scheduler.
+
+The scheduler is engine-agnostic: the serving engine and the simulator
+both drive it. Token-budget accounting is in tokens (1 token of KV/state
+= 1 unit), matching how the engines size their page pools.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+from .radix_tree import RadixNode, RadixTree
+from .request import Request, RequestState
+
+
+@dataclass
+class LocalSchedulerConfig:
+    instance_id: int = 0
+    capacity_tokens: int = 2_000_000     # KV/state pool size in tokens
+    chunk_size: int = 512                # Sarathi chunked-prefill chunk
+    max_batch_tokens: int = 2048         # per-iteration token budget
+    max_batch_requests: int = 64
+    priority_groups: int = 10            # P in §3.3
+    fcfs: bool = False                   # ablation: plain FCFS ordering
+    window: float = 180.0
+
+
+@dataclass
+class BatchItem:
+    request: Request
+    phase: str            # "prefill" | "decode"
+    chunk_tokens: int     # tokens processed this iteration
+    cached_len: int = 0   # cache hit for this request (first chunk only)
+
+
+@dataclass
+class Batch:
+    items: List[BatchItem] = field(default_factory=list)
+
+    @property
+    def prefill_tokens(self) -> int:
+        return sum(i.chunk_tokens for i in self.items if i.phase == "prefill")
+
+    @property
+    def decode_tokens(self) -> int:
+        return sum(i.chunk_tokens for i in self.items if i.phase == "decode")
+
+    def __len__(self) -> int:
+        return len(self.items)
+
+
+class LocalScheduler:
+    def __init__(self, config: LocalSchedulerConfig,
+                 on_evict: Optional[Callable[[int, List[int]], None]] = None):
+        self.config = config
+        self.tree = RadixTree(window=config.window)
+        self.waiting: List[Request] = []
+        self.running: List[Request] = []    # requests in decode phase
+        self.prefilling: List[Request] = [] # requests mid-chunked-prefill
+        self.used_tokens = 0                # cache pool usage
+        self.on_evict = on_evict            # async global notification
+        self._pinned: Dict[int, List[RadixNode]] = {}  # req id -> pinned path
+        self.evicted_log: List[int] = []
+        self.stats = {"batches": 0, "evicted_tokens": 0, "admitted": 0,
+                      "starved_max_wait": 0.0}
+
+    # ---- request intake ---------------------------------------------------------
+
+    def enqueue(self, request: Request, now: float) -> None:
+        match = self.tree.match(request.tokens, now=now, update_stats=True)
+        request.cached_len = match.matched_len
+        request.state = RequestState.QUEUED_LOCAL
+        self.waiting.append(request)
+        self.stats["admitted"] += 1
+
+    # ---- priority-group wait-queue policy (§3.3) ----------------------------------
+
+    def _priority(self, request: Request) -> int:
+        """Group by cached-token percentage: 63% cached & P=10 -> group 6."""
+        p = self.config.priority_groups
+        if request.prompt_len == 0:
+            return 0
+        ratio = request.cached_len / request.prompt_len
+        return min(int(ratio * p), p - 1)
+
+    def _ordered_waiting(self, now: float) -> List[Request]:
+        if self.config.fcfs or not self.waiting:
+            return sorted(self.waiting, key=lambda r: r.arrival_time)
+        p = self.config.priority_groups
+        groups: Dict[int, List[Request]] = {}
+        for r in self.waiting:
+            # re-match: cache contents may have changed since enqueue
+            m = self.tree.match(r.tokens, now=now)
+            r.cached_len = m.matched_len
+            groups.setdefault(self._priority(r), []).append(r)
+        for g in groups.values():
+            g.sort(key=lambda r: r.arrival_time)   # FCFS within a group
+        # proportional selection: group k gets quota proportional to (k+1),
+        # realized as a round-robin draw weighted by priority (paper's
+        # example: 10 from group 10, 9 from group 9, ...).
+        order: List[Request] = []
+        keys = sorted(groups.keys(), reverse=True)
+        quotas = {k: k + 1 for k in keys}
+        while any(groups[k] for k in keys):
+            for k in keys:
+                take = min(quotas[k], len(groups[k]))
+                order.extend(groups[k][:take])
+                del groups[k][:take]
+        return order
+
+    # ---- batch formation -----------------------------------------------------------
+
+    def form_batch(self, now: float) -> Batch:
+        """Continuous batching: all running decodes + waiting/chunked
+        prefills under the token budget (chunked prefill piggybacks
+        decodes, Sarathi-style)."""
+        cfg = self.config
+        batch = Batch()
+        budget = cfg.max_batch_tokens
+
+        # 1. decode-phase requests: 1 token each
+        for r in list(self.running):
+            if len(batch) >= cfg.max_batch_requests or budget <= 0:
+                break
+            batch.items.append(BatchItem(r, "decode", 1))
+            budget -= 1
+
+        # 2. in-flight chunked prefills continue first (no re-admission cost)
+        for r in list(self.prefilling):
+            if len(batch) >= cfg.max_batch_requests or budget <= 0:
+                break
+            remaining = r.prompt_len - r.prefill_done
+            chunk = min(remaining, cfg.chunk_size, budget)
+            if chunk <= 0:
+                continue
+            batch.items.append(BatchItem(r, "prefill", chunk))
+            budget -= chunk
+
+        # 3. admit new requests by priority order
+        if budget > 0 and len(batch) < cfg.max_batch_requests:
+            for r in self._ordered_waiting(now):
+                if budget <= 0 or len(batch) >= cfg.max_batch_requests:
+                    break
+                needed = r.prompt_len - r.cached_len
+                if not self._reserve(r, now):
+                    continue      # could not free memory: stays queued
+                chunk = min(max(needed, 1), cfg.chunk_size, budget)
+                r.prefill_done = r.cached_len
+                r.state = RequestState.PREFILLING
+                if r.first_run_time == 0.0:
+                    r.first_run_time = now
+                self.waiting.remove(r)
+                self.prefilling.append(r)
+                batch.items.append(
+                    BatchItem(r, "prefill", chunk, cached_len=r.cached_len))
+                budget -= chunk
+
+        if self.waiting:
+            oldest = min(r.arrival_time for r in self.waiting)
+            self.stats["starved_max_wait"] = max(
+                self.stats["starved_max_wait"], now - oldest)
+        self.stats["batches"] += 1
+        return batch
+
+    # ---- memory management (tree + pool accounting) -----------------------------------
+
+    def _reserve(self, request: Request, now: float) -> bool:
+        """Reserve cache space for a request's full prompt + expected output;
+        evict LRU tree nodes if needed (§3.3). Pins the match path."""
+        m = self.tree.match(request.tokens, now=now, update_stats=True)
+        request.cached_len = m.matched_len
+        new_tokens = (request.prompt_len - m.matched_len
+                      + request.max_new_tokens)
+        if new_tokens + self.used_tokens > self.config.capacity_tokens:
+            need = new_tokens + self.used_tokens - self.config.capacity_tokens
+            protected = {n.node_id for n in m.path}
+            plan = self.tree.plan_eviction(self.config.instance_id, need,
+                                           protected)
+            freed = sum(len(n.tokens) for n in plan)
+            if freed < need:
+                return False
+            self.tree.evict(plan, self.config.instance_id)
+            self.used_tokens -= freed
+            self.stats["evicted_tokens"] += freed
+            ids = [n.node_id for n in plan]
+            self.evicted_log.extend(ids)
+            if self.on_evict is not None:
+                self.on_evict(self.config.instance_id, ids)  # async in prod
+        # pin matched path so concurrent eviction can't pull our prefix
+        path = self.tree.insert(request.tokens,
+                                instance=self.config.instance_id, now=now)
+        for n in path:
+            n.ref_count += 1
+        self._pinned[request.request_id] = path
+        self.used_tokens += new_tokens
+        return True
+
+    # ---- iteration completion -----------------------------------------------------------
+
+    def complete_iteration(self, batch: Batch, now: float,
+                           finished_fn: Optional[Callable[[Request], bool]] = None
+                           ) -> List[Request]:
+        """Advance request states after the engine ran ``batch``.
+        ``finished_fn`` lets the engine signal EOS; default: request
+        finishes after max_new_tokens decodes."""
+        finished: List[Request] = []
+        for item in batch.items:
+            r = item.request
+            if item.phase == "prefill":
+                r.prefill_done += item.chunk_tokens
+                if r.prefill_done >= r.prompt_len:
+                    self.prefilling.remove(r)
+                    self.running.append(r)
+                    r.state = RequestState.DECODING
+                    if r.first_token_time == 0.0:
+                        r.first_token_time = now
+            else:
+                r.output_tokens.append(0)  # engine overwrites real ids
+                done = (finished_fn(r) if finished_fn
+                        else len(r.output_tokens) >= r.max_new_tokens)
+                if done:
+                    self.running.remove(r)
+                    r.state = RequestState.FINISHED
+                    r.finish_time = now
+                    self._release(r)
+                    finished.append(r)
+        return finished
+
+    def _release(self, request: Request) -> None:
+        for n in self._pinned.pop(request.request_id, []):
+            n.ref_count = max(n.ref_count - 1, 0)
+        # output tokens + non-shared prompt stay cached until LRU-evicted;
+        # pool usage stays (they are cached KV) — only eviction frees it.
+
+    # ---- failure handling -----------------------------------------------------------------
+
+    def drain(self) -> List[Request]:
+        """Pull every queued/in-flight request (instance dying/restarting)."""
+        out = self.waiting + self.prefilling + self.running
+        for r in out:
+            r.state = RequestState.QUEUED_GLOBAL
+            r.instance = None
+            r.prefill_done = 0
+            r.output_tokens = []
+        self.waiting, self.prefilling, self.running = [], [], []
+        self._pinned.clear()
+        self.used_tokens = 0
+        self.tree = RadixTree(window=self.config.window)
+        return out
+
+    @property
+    def depth(self) -> int:
+        return len(self.waiting) + len(self.prefilling) + len(self.running)

@@ -1,0 +1,350 @@
+"""Token-level radix (compressed prefix) tree — Preble §3.2/§3.3.
+
+Used in two places:
+  * the GLOBAL scheduler keeps one forest of these trees with per-node
+    instance sets and window-H hit histories (who caches what, how hot);
+  * each LOCAL scheduler keeps one tree tracking what its own instance
+    caches, with LRU timestamps for eviction.
+
+The tree stores sequences of token ids.  Each edge/node holds a token
+span; children are indexed by their first token for O(1) fan-out lookup.
+A node is "cached on instance i" when i appears in ``node.instances``.
+
+This is pure host-side control-plane code (no jax).
+"""
+
+from __future__ import annotations
+
+import itertools
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Iterable, Iterator, List, Optional, Sequence, Set, Tuple
+
+_node_ids = itertools.count()
+
+
+class RadixNode:
+    """One node of the radix tree.  ``tokens`` is the edge label."""
+
+    __slots__ = (
+        "node_id",
+        "tokens",
+        "parent",
+        "children",
+        "instances",
+        "hit_times",
+        "last_access",
+        "ref_count",
+    )
+
+    def __init__(self, tokens: Tuple[int, ...], parent: Optional["RadixNode"]):
+        self.node_id: int = next(_node_ids)
+        self.tokens: Tuple[int, ...] = tokens
+        self.parent = parent
+        self.children: Dict[int, RadixNode] = {}
+        # Which model instances currently cache this node's KV/state.
+        self.instances: Set[int] = set()
+        # Per-instance deque of hit timestamps within the history window H.
+        self.hit_times: Dict[int, deque] = {}
+        self.last_access: float = 0.0
+        # Number of in-flight requests pinning this node (eviction guard).
+        self.ref_count: int = 0
+
+    # ---- structure helpers -------------------------------------------------
+
+    def depth_tokens(self) -> int:
+        """Total tokens from root to (and including) this node."""
+        n, total = self, 0
+        while n is not None:
+            total += len(n.tokens)
+            n = n.parent
+        return total
+
+    def path(self) -> List["RadixNode"]:
+        out: List[RadixNode] = []
+        n = self
+        while n is not None:
+            out.append(n)
+            n = n.parent
+        out.reverse()
+        return out
+
+    def is_leaf(self) -> bool:
+        return not self.children
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return f"RadixNode(id={self.node_id}, len={len(self.tokens)}, inst={sorted(self.instances)})"
+
+
+@dataclass
+class MatchResult:
+    """Result of matching a prompt against the tree."""
+
+    matched_len: int                       # total matched tokens
+    path: List[RadixNode]                  # matched nodes root→deepest
+    last_node: Optional[RadixNode]         # deepest node touched (may be partial)
+    last_node_matched: int                 # tokens matched inside last_node
+    # per-instance matched length: how many of matched_len each instance caches
+    per_instance_len: Dict[int, int] = field(default_factory=dict)
+
+
+class RadixTree:
+    """A forest rooted at a sentinel node (paper: several global trees —
+    a sentinel root with children is an equivalent representation)."""
+
+    def __init__(self, window: float = 180.0):
+        self.root = RadixNode((), None)
+        self.window = window  # history window H in seconds (default 3 min)
+        self._token_count = 0  # cached tokens (nodes with >=1 instance count full)
+
+    # ---- matching ----------------------------------------------------------
+
+    def match(self, tokens: Sequence[int], now: float = 0.0,
+              update_stats: bool = False, instance: Optional[int] = None) -> MatchResult:
+        """Longest-prefix match of ``tokens`` against the tree.
+
+        ``per_instance_len`` reports, for every instance appearing on the
+        matched path, the number of matched tokens that instance caches —
+        this is what E2 uses to pick the exploit target (GPU with the
+        longest cached prefix, Alg. 1).
+        """
+        node = self.root
+        matched: List[RadixNode] = []
+        i = 0
+        per_inst: Dict[int, int] = {}
+        last_node: Optional[RadixNode] = None
+        last_matched = 0
+        while i < len(tokens):
+            child = node.children.get(tokens[i])
+            if child is None:
+                break
+            span = child.tokens
+            j = 0
+            limit = min(len(span), len(tokens) - i)
+            while j < limit and span[j] == tokens[i + j]:
+                j += 1
+            if j == 0:
+                break
+            last_node = child
+            last_matched = j
+            if j == len(span):
+                matched.append(child)
+                for inst in child.instances:
+                    per_inst[inst] = per_inst.get(inst, 0) + j
+                if update_stats:
+                    child.last_access = now
+                i += j
+                node = child
+                if j < limit or i == len(tokens):
+                    if j < len(span):
+                        break
+                continue
+            # partial match inside this child's span
+            for inst in child.instances:
+                per_inst[inst] = per_inst.get(inst, 0) + j
+            i += j
+            break
+        return MatchResult(
+            matched_len=i,
+            path=matched,
+            last_node=last_node,
+            last_node_matched=last_matched,
+            per_instance_len=per_inst,
+        )
+
+    # ---- insertion ---------------------------------------------------------
+
+    def insert(self, tokens: Sequence[int], instance: Optional[int] = None,
+               now: float = 0.0) -> List[RadixNode]:
+        """Insert ``tokens``; splits partially-matched nodes (paper §3.2).
+
+        Returns the full node path covering the sequence. If ``instance`` is
+        given, marks every node on the path as cached there and records a
+        window-H hit.
+        """
+        tokens = tuple(tokens)
+        node = self.root
+        i = 0
+        path: List[RadixNode] = []
+        while i < len(tokens):
+            child = node.children.get(tokens[i])
+            if child is None:
+                leaf = RadixNode(tokens[i:], node)
+                node.children[tokens[i]] = leaf
+                path.append(leaf)
+                i = len(tokens)
+                break
+            span = child.tokens
+            j = 0
+            limit = min(len(span), len(tokens) - i)
+            while j < limit and span[j] == tokens[i + j]:
+                j += 1
+            if j == len(span):
+                path.append(child)
+                node = child
+                i += j
+                continue
+            # split child at j: child keeps span[:j], new tail node gets span[j:]
+            self._split(child, j)
+            path.append(child)
+            node = child
+            i += j
+            # loop continues: either insert remainder as new leaf or done
+        for n in path:
+            n.last_access = now
+            if instance is not None:
+                n.instances.add(instance)
+                self.record_hit(n, instance, now)
+        return path
+
+    def _split(self, node: RadixNode, at: int) -> RadixNode:
+        """Split ``node`` so it keeps tokens[:at]; tail becomes its child."""
+        assert 0 < at < len(node.tokens)
+        tail = RadixNode(node.tokens[at:], node)
+        tail.children = node.children
+        for c in tail.children.values():
+            c.parent = tail
+        tail.instances = set(node.instances)
+        tail.hit_times = {k: deque(v) for k, v in node.hit_times.items()}
+        tail.last_access = node.last_access
+        tail.ref_count = node.ref_count
+        node.tokens = node.tokens[:at]
+        node.children = {tail.tokens[0]: tail}
+        return tail
+
+    # ---- window-H statistics ------------------------------------------------
+
+    def record_hit(self, node: RadixNode, instance: int, now: float) -> None:
+        dq = node.hit_times.setdefault(instance, deque())
+        dq.append(now)
+        self._trim(dq, now)
+
+    def _trim(self, dq: deque, now: float) -> None:
+        cutoff = now - self.window
+        while dq and dq[0] < cutoff:
+            dq.popleft()
+
+    def hits_in_window(self, node: RadixNode, now: float,
+                       instance: Optional[int] = None) -> int:
+        if instance is not None:
+            dq = node.hit_times.get(instance)
+            if not dq:
+                return 0
+            self._trim(dq, now)
+            return len(dq)
+        total = 0
+        for dq in node.hit_times.values():
+            self._trim(dq, now)
+            total += len(dq)
+        return total
+
+    # ---- instance bookkeeping ----------------------------------------------
+
+    def remove_instance(self, node: RadixNode, instance: int) -> None:
+        node.instances.discard(instance)
+        node.hit_times.pop(instance, None)
+
+    def drop_instance_everywhere(self, instance: int) -> int:
+        """Instance failure: remove it from every node. Returns #nodes touched."""
+        touched = 0
+        for n in self.iter_nodes():
+            if instance in n.instances:
+                self.remove_instance(n, instance)
+                touched += 1
+        return touched
+
+    def prune_dead(self, now: float) -> int:
+        """Remove leaf nodes with no caching instance and no window-H hits
+        (paper §3.2 'we remove it from the tree'). Iterates to a fixpoint."""
+        removed = 0
+        changed = True
+        while changed:
+            changed = False
+            for n in list(self.iter_nodes()):
+                if (n.is_leaf() and not n.instances and n.ref_count == 0
+                        and self.hits_in_window(n, now) == 0 and n.parent is not None):
+                    del n.parent.children[n.tokens[0]]
+                    removed += 1
+                    changed = True
+        return removed
+
+    # ---- traversal ----------------------------------------------------------
+
+    def iter_nodes(self) -> Iterator[RadixNode]:
+        stack = list(self.root.children.values())
+        while stack:
+            n = stack.pop()
+            yield n
+            stack.extend(n.children.values())
+
+    def nodes_cached_on(self, instance: int) -> List[RadixNode]:
+        return [n for n in self.iter_nodes() if instance in n.instances]
+
+    def cached_tokens(self, instance: int) -> int:
+        return sum(len(n.tokens) for n in self.nodes_cached_on(instance))
+
+    def subtree_nodes(self, node: RadixNode) -> List[RadixNode]:
+        out = [node]
+        stack = list(node.children.values())
+        while stack:
+            n = stack.pop()
+            out.append(n)
+            stack.extend(n.children.values())
+        return out
+
+    # ---- eviction (local-scheduler view) -------------------------------------
+
+    def lru_eviction_order(self, instance: int) -> List[RadixNode]:
+        """Leaf-first LRU order of this instance's cached nodes (§3.3):
+        a node may only be evicted after all its cached descendants."""
+        nodes = self.nodes_cached_on(instance)
+        # depth ensures children sort before parents on timestamp ties
+        return sorted(nodes, key=lambda n: (n.last_access, -n.depth_tokens()))
+
+    def plan_eviction(self, instance: int, tokens_needed: int,
+                      protected: Optional[Set[int]] = None) -> List[RadixNode]:
+        """Pick nodes to evict (LRU, leaf-first) to free >= tokens_needed.
+
+        ``protected`` node-ids (e.g. the match path of the incoming request)
+        are skipped. Used both by the local scheduler to actually evict and
+        by the global scheduler to *estimate* M_i (Alg. 2) without evicting.
+        """
+        protected = protected or set()
+        freed = 0
+        plan: List[RadixNode] = []
+        planned: Set[int] = set()
+        candidates = self.lru_eviction_order(instance)
+        for n in candidates:
+            if freed >= tokens_needed:
+                break
+            if n.node_id in protected or n.ref_count > 0:
+                continue
+            # cannot evict a node whose descendants are still cached here
+            # unless those descendants are already in the plan
+            blocked = False
+            for d in self.subtree_nodes(n)[1:]:
+                if instance in d.instances and d.node_id not in planned:
+                    blocked = True
+                    break
+            if blocked:
+                continue
+            plan.append(n)
+            planned.add(n.node_id)
+            freed += len(n.tokens)
+        return plan
+
+    def evict(self, nodes: Iterable[RadixNode], instance: int) -> int:
+        freed = 0
+        for n in nodes:
+            if instance in n.instances:
+                self.remove_instance(n, instance)
+                freed += len(n.tokens)
+        return freed
+
+    # ---- debug / stats -------------------------------------------------------
+
+    def total_nodes(self) -> int:
+        return sum(1 for _ in self.iter_nodes())
+
+    def total_tokens(self) -> int:
+        return sum(len(n.tokens) for n in self.iter_nodes())

@@ -1,0 +1,54 @@
+"""Request lifecycle objects shared by schedulers, engines and simulator."""
+
+from __future__ import annotations
+
+import enum
+import itertools
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence, Tuple
+
+_req_ids = itertools.count()
+
+
+class RequestState(enum.Enum):
+    QUEUED_GLOBAL = "queued_global"
+    QUEUED_LOCAL = "queued_local"
+    PREFILLING = "prefilling"
+    DECODING = "decoding"
+    FINISHED = "finished"
+    FAILED = "failed"
+
+
+@dataclass
+class Request:
+    tokens: Tuple[int, ...]                 # prompt token ids
+    max_new_tokens: int = 32
+    arrival_time: float = 0.0
+    request_id: int = field(default_factory=lambda: next(_req_ids))
+    workload: str = ""                      # tag for mixed-workload stats
+
+    # -- filled in by schedulers / engines --
+    state: RequestState = RequestState.QUEUED_GLOBAL
+    instance: Optional[int] = None
+    cached_len: int = 0                     # prefix tokens found cached
+    prefill_done: int = 0                   # prompt tokens prefilled so far
+    output_tokens: List[int] = field(default_factory=list)
+    # timeline
+    scheduled_time: float = 0.0             # global scheduler decision
+    first_run_time: float = 0.0             # first iteration on an engine
+    first_token_time: float = 0.0
+    finish_time: float = 0.0
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.tokens)
+
+    @property
+    def missed_len(self) -> int:
+        return max(self.prompt_len - self.cached_len, 0)
+
+    def latency(self) -> float:
+        return self.finish_time - self.arrival_time
+
+    def ttft(self) -> float:
+        return self.first_token_time - self.arrival_time

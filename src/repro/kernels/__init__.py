@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the serving hot paths (validated vs ref.py).
+
+flash_attention  — causal GQA flash attention (prefill)
+decode_attention — split-K flash decoding + LSE merge (decode)
+prefix_attention — Hydragen-style shared-prefix batch decode (the
+                   kernel-level realization of Preble's prompt sharing)
+"""
+
+from . import ops, ref
+from .flash_attention import flash_attention
+from .decode_attention import decode_attention, lse_merge
+from .prefix_attention import prefix_attention, prefix_partial
+from .paged_attention import paged_decode_attention
+
+__all__ = ["ops", "ref", "flash_attention", "decode_attention",
+           "lse_merge", "prefix_attention", "prefix_partial",
+           "paged_decode_attention"]

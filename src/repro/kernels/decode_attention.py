@@ -1,0 +1,107 @@
+"""Flash-decoding — Pallas TPU kernel: split-K over the KV length.
+
+One decode step reads the whole KV cache once (memory-bound). The cache
+is split into ``n_splits`` chunks along S; each grid cell computes an
+independent partial softmax (acc, m, l) for its chunk — the TPU analogue
+of GPU flash-decoding's thread-block split, realized as grid parallelism
+over (B, KH, split) instead of SM scheduling. A cheap jnp LSE-merge
+combines the partials.
+
+GQA batching: the G = H//KH query heads of one kv head form the matmul's
+row dim, so the kernel issues [G, Bk] x [Bk, D] MXU ops rather than G
+GEMVs — KV bytes are read once per kv head, not once per q head.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float("-inf")
+
+
+def _kernel(lens_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *,
+            scale: float, block_k: int):
+    b = pl.program_id(0)
+    si = pl.program_id(2)
+    q = q_ref[0, 0]                                        # [G, D]
+    k = k_ref[0, 0]                                        # [Bk, D]
+    v = v_ref[0, 0]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale        # [G, Bk]
+    k_pos = si * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, s.shape, 1)
+    mask = k_pos < lens_ref[b]
+    s = jnp.where(mask, s, NEG_INF)
+    m = s.max(-1, keepdims=True)                           # [G, 1]
+    m_safe = jnp.where(m == NEG_INF, 0.0, m)
+    p = jnp.exp(s - m_safe)
+    l = p.sum(-1, keepdims=True)
+    acc = jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                # [G, D]
+    o_ref[0, 0, 0] = acc
+    m_ref[0, 0, 0] = m
+    l_ref[0, 0, 0] = l
+
+
+def decode_attention(q, k, v, lens, *, n_splits: int = 8,
+                     interpret: bool = False) -> jax.Array:
+    """q: [B, H, D]; k/v: [B, KH, S, D]; lens: [B] -> [B, H, D]."""
+    B, H, D = q.shape
+    KH, S = k.shape[1], k.shape[2]
+    G = H // KH
+    n_splits = max(min(n_splits, S // max(1, min(S, 128))), 1)
+    block_k = -(-S // n_splits)                 # ceil
+    block_k = max(block_k, 8)
+    pk = (-S) % block_k
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    ns = k.shape[2] // block_k
+    qg = q.reshape(B, KH, G, D)
+    lens = jnp.asarray(lens, jnp.int32).reshape(B)
+
+    kernel = functools.partial(_kernel, scale=D ** -0.5, block_k=block_k)
+    acc, m, l = pl.pallas_call(
+        kernel,
+        grid=(B, KH, ns),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),     # lens, whole array
+            pl.BlockSpec((1, 1, G, D), lambda b, h, si: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, si: (b, h, si, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, si: (b, h, si, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, G, D), lambda b, h, si: (b, h, si, 0, 0)),
+            pl.BlockSpec((1, 1, 1, G, 1), lambda b, h, si: (b, h, si, 0, 0)),
+            pl.BlockSpec((1, 1, 1, G, 1), lambda b, h, si: (b, h, si, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, KH, ns, G, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, KH, ns, G, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B, KH, ns, G, 1), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel")),
+        interpret=interpret,
+    )(lens, qg, k, v)
+
+    return lse_merge(acc, m, l).reshape(B, H, D).astype(q.dtype)
+
+
+def lse_merge(acc, m, l, axis: int = 2):
+    """Combine split-K softmax partials: acc [..., ns, G, D],
+    m/l [..., ns, G, 1] -> [..., G, D]."""
+    m_max = m.max(axis=axis, keepdims=True)
+    m_safe = jnp.where(m_max == NEG_INF, 0.0, m_max)
+    w = jnp.exp(m - m_safe)                      # [..., ns, G, 1]
+    l_tot = (l * w).sum(axis=axis)               # [..., G, 1]
+    o = (acc * w).sum(axis=axis)                 # [..., G, D]
+    return o / jnp.maximum(l_tot, 1e-30)

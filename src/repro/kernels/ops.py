@@ -1,0 +1,62 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Adapts the model-side layout [B, S, H, D] to the kernel-side head-major
+layout, and selects interpret mode automatically off-TPU so the same
+call sites work in tests (CPU, interpret=True) and production (TPU,
+compiled kernels).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import decode_attention as _dec
+from . import flash_attention as _fa
+from . import prefix_attention as _pre
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window",
+                                             "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool | None = None):
+    """Model layout: q [B, Sq, H, D]; k/v [B, Skv, KH, D]."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    out = _fa.flash_attention(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=causal, window=window,
+        block_q=block_q, block_k=block_k, interpret=interpret)
+    return out.transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("n_splits", "interpret"))
+def decode_attention(q, k_cache, v_cache, lens, *, n_splits: int = 8,
+                     interpret: bool | None = None):
+    """Model layout: q [B, H, D]; caches [B, S, KH, D]; lens [B]."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    return _dec.decode_attention(
+        q, k_cache.transpose(0, 2, 1, 3), v_cache.transpose(0, 2, 1, 3),
+        lens, n_splits=n_splits, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def prefix_attention(q, kp, vp, ks, vs, lens, *, block_k: int = 128,
+                     interpret: bool | None = None):
+    """Model layout: q [B, H, D]; shared prefix kp/vp [Sp, KH, D];
+    suffixes ks/vs [B, Ss, KH, D]; lens [B]."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    return _pre.prefix_attention(
+        q, kp.transpose(1, 0, 2), vp.transpose(1, 0, 2),
+        ks.transpose(0, 2, 1, 3), vs.transpose(0, 2, 1, 3), lens,
+        block_k=block_k, interpret=interpret)

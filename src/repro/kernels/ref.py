@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+Layout convention for kernels: head-major [B, H, S, D] (queries) and
+[B, KH, S, D] (KV) — ops.py adapts from the model's [B, S, H, D].
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = float("-inf")
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                        kv_len: Optional[int] = None) -> jax.Array:
+    """q: [B, H, Sq, D]; k/v: [B, KH, Skv, D] (GQA G = H // KH)."""
+    B, H, Sq, D = q.shape
+    KH, Skv = k.shape[1], k.shape[2]
+    G = H // KH
+    qg = q.reshape(B, KH, G, Sq, D).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kf) * (D ** -0.5)
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window:
+        mask &= k_pos > q_pos - window
+    if kv_len is not None:
+        mask &= k_pos < kv_len
+    s = jnp.where(mask, s, NEG_INF)
+    # rows with no valid key produce 0 (matches kernel's l=0 guard)
+    w = jax.nn.softmax(s, axis=-1)
+    w = jnp.where(mask.any(-1)[..., None], w, 0.0)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", w, vf)
+    return o.reshape(B, H, Sq, D).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, lens) -> jax.Array:
+    """q: [B, H, D]; k/v: [B, KH, S, D]; lens: [B] valid cache lengths."""
+    B, H, D = q.shape
+    KH, S = k.shape[1], k.shape[2]
+    G = H // KH
+    qg = q.reshape(B, KH, G, D).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bhkd->bhgk", qg, k.astype(jnp.float32)) * (D ** -0.5)
+    mask = jnp.arange(S)[None, :] < lens[:, None]          # [B, S]
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bhkd->bhgd", w, v.astype(jnp.float32))
+    return o.reshape(B, H, D).astype(q.dtype)
+
+
+def prefix_attention_ref(q, kp, vp, ks, vs, lens) -> jax.Array:
+    """Shared-prefix (Hydragen) decode attention oracle.
+
+    q: [B, H, D] decode queries; kp/vp: [KH, Sp, D] the SHARED prefix KV
+    (one copy for the whole batch); ks/vs: [B, KH, Ss, D] per-request
+    suffix KV; lens: [B] valid suffix lengths. Equivalent to attention
+    over the concatenation [prefix ++ suffix]."""
+    B, H, D = q.shape
+    KH, Sp = kp.shape[0], kp.shape[1]
+    k_full = jnp.broadcast_to(kp[None], (B, KH, Sp, D))
+    v_full = jnp.broadcast_to(vp[None], (B, KH, Sp, D))
+    k_cat = jnp.concatenate([k_full, ks], axis=2)
+    v_cat = jnp.concatenate([v_full, vs], axis=2)
+    return decode_attention_ref(q, k_cat, v_cat, Sp + lens)

@@ -1,0 +1,3 @@
+# launch layer: production mesh, sharding policy, dry-run, entry points.
+# NOTE: dryrun.py must be imported/run FIRST in a fresh process (it sets
+# XLA_FLAGS for 512 host devices before jax initializes).

@@ -1,0 +1,393 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^ MUST be the first two lines: jax locks the device count on first
+# init, and the dry-run needs 512 placeholder host devices to build the
+# production meshes. Never set this globally — smoke tests and benches
+# run on 1 device.
+#
+# Multi-pod dry-run (deliverable e): for every (architecture x shape x
+# mesh) cell, build the real train/prefill/decode step, pjit it with the
+# production sharding policy, .lower().compile(), and record
+# memory_analysis / cost_analysis / per-collective bytes to JSON for the
+# roofline analysis (deliverable g).
+#
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-360m \
+#       --shape train_4k [--multi-pod] [--out results/dryrun]
+#   PYTHONPATH=src python -m repro.launch.dryrun --all
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import ARCHS, ASSIGNED, SHAPES, get_config, shape_applicable
+from ..models import zoo
+from ..train.optimizer import AdamWConfig
+from ..train.train_loop import TrainConfig, TrainState, make_train_step
+from .mesh import axis_size, data_axes, make_production_mesh
+from .sharding import (batch_shardings, cache_shardings, dp_spec,
+                       param_shardings, serve_policy, train_policy)
+
+Pytree = Any
+
+
+# ---------------------------------------------------------------------
+# abstract inputs per (arch, shape)
+# ---------------------------------------------------------------------
+
+def input_specs(cfg, shape) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell
+    (weak-type-correct, shardable, no device allocation)."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    dt = jnp.dtype(cfg.dtype)
+    sd = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        if cfg.encoder_decoder:
+            T = cfg.max_target_len
+            return {"frames": sd((B, S, cfg.d_model), dt),
+                    "tokens": sd((B, T), i32), "labels": sd((B, T), i32)}
+        out = {"tokens": sd((B, S), i32), "labels": sd((B, S), i32)}
+        if cfg.cross_attn_period:
+            out["vision"] = sd((B, cfg.n_vision_tokens, cfg.d_model), dt)
+        return out
+    if shape.kind == "prefill":
+        if cfg.encoder_decoder:
+            return {"frames": sd((B, S, cfg.d_model), dt),
+                    "tokens": sd((B, 16), i32)}
+        out = {"tokens": sd((B, S), i32)}
+        if cfg.cross_attn_period:
+            out["vision"] = sd((B, cfg.n_vision_tokens, cfg.d_model), dt)
+        return out
+    # decode: one new token against a seq_len cache
+    return {"tokens": sd((B,), i32), "pos": sd((), i32)}
+
+
+def pick_grad_accum(cfg, shape, mesh, budget_bytes: float = 2 << 30) -> int:
+    """Microbatch so the widest per-chip activation fits the budget."""
+    dp = axis_size(mesh, data_axes(mesh))
+    width = max(cfg.d_ff, 4 * cfg.d_model)
+    for accum in (1, 2, 4, 8, 16, 32):
+        if shape.global_batch % accum:
+            continue
+        tokens_per_chip = shape.global_batch // accum * shape.seq_len / dp
+        tp = axis_size(mesh, "model")
+        if tokens_per_chip * (width / tp) * 2 <= budget_bytes:
+            return accum
+    return 32
+
+
+# ---------------------------------------------------------------------
+# building the jitted step for one cell
+# ---------------------------------------------------------------------
+
+def build_cell(arch: str, shape_name: str, multi_pod: bool,
+               overrides: Optional[Dict[str, Any]] = None):
+    """Returns (jitted_fn, example_args_abstract) for lower()."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        raise SkipCell(why)
+    ov = overrides or {}
+    expert_mesh = ov.get("expert_mesh", False)
+    mesh = make_production_mesh(multi_pod=multi_pod,
+                                expert_axis=expert_mesh)
+    from ..models.common import set_expert_axes, set_mesh
+    set_mesh(mesh)
+    set_expert_axes("expert" if expert_mesh
+                    and cfg.n_experts and cfg.n_experts % 8 == 0 else None)
+    # halfexpert shard_map MoE: DEFAULT for applicable train/prefill
+    # cells — exact (tests/test_moe_a2a.py) and 5x less collective
+    # traffic than the GSPMD dispatch (EXPERIMENTS §Perf it7). Decode
+    # keeps the topology-aware it5 variants.
+    import dataclasses as _dc
+    from ..models import moe_a2a
+    tp = axis_size(mesh, "model")
+    shape0 = SHAPES[shape_name]
+    want_he = ov.get("moe_impl",
+                     "halfexpert" if shape0.kind in ("train", "prefill")
+                     else "standard")
+    if want_he == "halfexpert" and moe_a2a.applicable(cfg, tp):
+        cfg = _dc.replace(cfg, moe_impl="halfexpert", moe_tp=tp)
+    api = zoo.build(cfg)
+
+    # pin activation batch sharding (GSPMD alone can drop it — see
+    # models/common.constrain_batch); no-op when B doesn't divide.
+    from ..models.common import set_batch_axes, set_seq_axes
+    from ..models.transformer import layer_plan
+    ba = dp_spec(mesh, shape.global_batch)
+    set_batch_axes(ba if ba is None or isinstance(ba, tuple) else (ba,))
+    # prefill attention strategy (see EXPERIMENTS.md §Perf):
+    #  * head-TP when the head count divides the model axis (classic
+    #    Megatron: weights stay resident, 2 activation ARs/layer) —
+    #    pinned via constrain_heads so GSPMD can't drift into gathering
+    #    the repeated-KV stream (measured 4GiB/layer on command-r-35b);
+    #  * sequence-parallel residual otherwise (smollm 15H, whisper 6H:
+    #    S shards over model, weights gathered per layer);
+    #  * neither for recurrent archs (state flows sequentially over S).
+    from ..models.common import set_ep_decode, set_head_axes
+    recurrent = any(p.mixer in ("mamba", "rwkv") for p in layer_plan(cfg))
+    tp = axis_size(mesh, "model")
+    set_seq_axes(None)
+    set_head_axes(None)
+    set_ep_decode(cfg.n_experts > 0 and cfg.n_experts % tp == 0)
+    if shape.kind == "prefill" and not recurrent:
+        # measured (§Perf it3): seq-parallel beats head-TP on every
+        # arch (head-TP's activation ARs outweigh seq's weight AGs at
+        # 32k context); default "seq", "head" kept as an override.
+        mode = ov.get("prefill_mode", "seq")
+        if mode == "head" and cfg.n_heads % tp == 0:
+            set_head_axes("model", tp)
+        elif mode == "seq" and shape.seq_len % tp == 0:
+            set_seq_axes("model", tp)
+
+    params_abs = api.abstract()
+    pol_train = train_policy(mesh)
+    pol_serve = serve_policy(mesh, api.n_bytes,
+                             fsdp_bytes_per_chip=ov.get(
+                                 "fsdp_bytes_per_chip", 6 << 30))
+    batch_abs = input_specs(cfg, shape)
+    batch_sh = batch_shardings(batch_abs, mesh)
+
+    if shape.kind == "train":
+        p_sh = param_shardings(api.specs, mesh, pol_train)
+        accum = ov.get("grad_accum", pick_grad_accum(cfg, shape, mesh))
+        # int8 AdamW moments when fp32 state would overflow 16GB HBM
+        # (314B grok: 14B/param / 256 chips = 17.2GB > 16GB). The "pod"
+        # axis is pure DP — state shards over data x model = 256 chips
+        # regardless of pod count.
+        n_shards = axis_size(mesh, "data") * axis_size(mesh, "model")
+        quant = ov.get("quant_moments",
+                       api.n_params * 14.0 / n_shards > 15e9)
+        tc = TrainConfig(adamw=AdamWConfig(), grad_accum=accum,
+                         quant_moments=quant, remat=ov.get("remat", True))
+        step = make_train_step(api, tc)
+        to32 = lambda t: jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), t)
+
+        if quant:
+            q8 = lambda t: jax.tree.map(
+                lambda s: {"q": jax.ShapeDtypeStruct(s.shape, jnp.int8),
+                           "s": jax.ShapeDtypeStruct(
+                               s.shape[:-1] + (1,), jnp.float32)}, t)
+            m_abs, v_abs = q8(params_abs), q8(params_abs)
+
+            def q8_sharding(ns, spec_abs):
+                # scale has keepdims shape[:-1]+(1,): drop the last dim's
+                # mesh axis only if the pspec actually covers it
+                pspec = tuple(ns.spec)
+                if len(pspec) == len(spec_abs.shape):
+                    pspec = pspec[:-1]
+                return {"q": ns, "s": NamedSharding(mesh, P(*pspec))}
+
+            q8_sh = jax.tree.map(q8_sharding, p_sh, params_abs,
+                                 is_leaf=lambda x: isinstance(
+                                     x, NamedSharding))
+            m_sh = v_sh = q8_sh
+        else:
+            m_abs, v_abs = to32(params_abs), to32(params_abs)
+            m_sh = v_sh = p_sh
+
+        state_abs = TrainState(
+            params=params_abs,
+            opt={"m": m_abs, "v": v_abs,
+                 "master": to32(params_abs),
+                 "count": jax.ShapeDtypeStruct((), jnp.int32)},
+            ef_error=None,
+            step=jax.ShapeDtypeStruct((), jnp.int32))
+        state_sh = TrainState(
+            params=p_sh,
+            opt={"m": m_sh, "v": v_sh, "master": p_sh,
+                 "count": NamedSharding(mesh, P())},
+            ef_error=None,
+            step=NamedSharding(mesh, P()))
+        fn = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                     donate_argnums=(0,))
+        return mesh, fn, (state_abs, batch_abs), {"grad_accum": accum,
+                                                  "quant_moments": quant}
+
+    if shape.kind == "prefill":
+        p_sh = param_shardings(api.specs, mesh, pol_serve)
+        c_sh = cache_shardings(
+            api.cache_specs(shape.global_batch, shape.seq_len), mesh)
+
+        def prefill_step(params, batch):
+            return api.prefill(params, batch,
+                               attn_impl=ov.get("attn_impl", "blockwise"))
+
+        fn = jax.jit(prefill_step, in_shardings=(p_sh, batch_sh),
+                     out_shardings=(NamedSharding(mesh, P(None,)), c_sh))
+        return mesh, fn, (params_abs, batch_abs), {}
+
+    # decode
+    p_sh = param_shardings(api.specs, mesh, pol_serve)
+    cache_abs = api.cache_specs(shape.global_batch, shape.seq_len)
+    c_sh = cache_shardings(cache_abs, mesh)
+    tok_sh = NamedSharding(mesh, P(dp_spec(mesh, shape.global_batch)))
+
+    def serve_step(params, cache, tokens, pos):
+        return api.decode(params, cache, {"tokens": tokens, "pos": pos})
+
+    fn = jax.jit(serve_step,
+                 in_shardings=(p_sh, c_sh, tok_sh, NamedSharding(mesh, P())),
+                 out_shardings=(tok_sh, c_sh),
+                 donate_argnums=(1,))
+    args = (params_abs, cache_abs,
+            jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32),
+            jax.ShapeDtypeStruct((), jnp.int32))
+    return mesh, fn, args, {}
+
+
+class SkipCell(Exception):
+    pass
+
+
+# ---------------------------------------------------------------------
+# run one cell
+# ---------------------------------------------------------------------
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             overrides: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    from ..analysis.hlo_stats import analyze_hlo
+    from ..analysis.roofline import model_flops_for
+
+    t0 = time.time()
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    api = zoo.build(cfg)
+    mesh, fn, args, extra = build_cell(arch, shape_name, multi_pod,
+                                       overrides)
+    with mesh:
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+    stats = analyze_hlo(hlo)
+    # lift XLA's loop-once byte count to a full-execution estimate using
+    # the dot-flop loop multiplier (loop bodies dominate both)
+    raw_bytes = (cost or {}).get("bytes accessed", 0.0)
+    bytes_corrected = raw_bytes * stats.loop_correction
+
+    n_dev = mesh.devices.size
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "multi_pod": multi_pod,
+        "kind": shape.kind,
+        "devices": int(n_dev),
+        "extra": extra,
+        "overrides": overrides or {},
+        "time_lower_s": round(t_lower, 1),
+        "time_compile_s": round(t_compile, 1),
+        "model": {
+            "n_params": api.n_params,
+            "n_active_params": api.n_active_params,
+            "model_flops": model_flops_for(cfg, shape,
+                                           api.n_active_params),
+        },
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        },
+        "cost": {k: (cost or {}).get(k) for k in
+                 ("flops", "bytes accessed", "transcendentals")},
+        "hlo": {
+            "dot_flops": stats.dot_flops,
+            "dot_flops_unscaled": stats.dot_flops_unscaled,
+            "loop_correction": stats.loop_correction,
+            "dot_bytes": stats.dot_bytes,
+            # XLA:CPU upcasts bf16 tensors to f32 (no native bf16
+            # matmul), so every byte count in this module is ~2x the
+            # TPU compile's; roofline applies this factor to byte terms
+            "cpu_f32_correction": 0.5 if cfg.dtype == "bfloat16" else 1.0,
+            "bytes_accessed": bytes_corrected,
+            "collective_bytes": stats.collective_bytes,
+            "collective_counts": stats.collective_counts,
+            "n_while": stats.n_while,
+        },
+        "hlo_text_bytes": len(hlo),
+    }
+    return result
+
+
+def cell_list():
+    cells = []
+    for arch in ASSIGNED:
+        cfg = get_config(arch)
+        for sname, shape in SHAPES.items():
+            ok, why = shape_applicable(cfg, shape)
+            cells.append((arch, sname, ok, why))
+    return cells
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--overrides", default=None,
+                    help="JSON dict of cell overrides (perf iterations)")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    if args.list:
+        for arch, sname, ok, why in cell_list():
+            print(f"{arch:24s} {sname:12s} {'RUN' if ok else 'SKIP: ' + why}")
+        return 0
+
+    os.makedirs(args.out, exist_ok=True)
+    overrides = json.loads(args.overrides) if args.overrides else None
+
+    if args.all:
+        todo = [(a, s) for a, s, ok, _ in cell_list() if ok]
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        todo = [(args.arch, args.shape)]
+
+    failures = 0
+    for arch, sname in todo:
+        tag = f"{arch}__{sname}__{'pod2' if args.multi_pod else 'pod1'}"
+        if args.tag:
+            tag += f"__{args.tag}"
+        path = os.path.join(args.out, tag + ".json")
+        try:
+            res = run_cell(arch, sname, args.multi_pod, overrides)
+            with open(path, "w") as f:
+                json.dump(res, f, indent=1)
+            mem = res["memory"]
+            peak = (mem["peak_bytes"] or 0) / 2**30
+            args_gib = (mem["argument_bytes"] or 0) / 2**30
+            print(f"OK  {tag}: compile={res['time_compile_s']}s "
+                  f"peak/dev={peak:.2f}GiB args/dev={args_gib:.2f}GiB "
+                  f"dotF/dev={res['hlo']['dot_flops']:.3g} "
+                  f"useful={res['model']['model_flops'] / max(res['hlo']['dot_flops'] * res['devices'], 1):.2f}",
+                  flush=True)
+        except SkipCell as e:
+            print(f"SKIP {tag}: {e}")
+        except Exception as e:
+            failures += 1
+            print(f"FAIL {tag}: {type(e).__name__}: {e}")
+            with open(path + ".err", "w") as f:
+                f.write(traceback.format_exc())
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,54 @@
+"""Production mesh construction.
+
+Single pod: (16, 16) = ("data", "model") — 256 chips (one v5e pod).
+Multi-pod:  (2, 16, 16) = ("pod", "data", "model") — 512 chips; the
+"pod" axis carries pure data parallelism (gradient reduce / request
+routing) so only DP-sized collectives ever cross the pod boundary.
+
+Functions, not module constants — importing this module must never
+touch jax device state (device count locks on first use).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False,
+                         expert_axis: bool = False):
+    """expert_axis: re-slice the 16-way model dim into
+    ("expert"=8, "model"=2) so 8-expert MoE models get true expert
+    parallelism (the dispatch becomes an all-to-all over "expert"
+    instead of scatter/gather transposes) — EXPERIMENTS.md §Perf it6.
+    Same physical 256/512 chips, different logical view."""
+    if expert_axis:
+        shape = (2, 16, 8, 2) if multi_pod else (16, 8, 2)
+        axes = (("pod", "data", "expert", "model") if multi_pod
+                else ("data", "expert", "model"))
+    else:
+        shape = (2, 16, 16) if multi_pod else (16, 16)
+        axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh) -> Tuple[str, ...]:
+    """The data-parallel axes (batch dim sharding): pod+data."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)
+
+
+def axis_size(mesh, axes) -> int:
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def make_host_mesh(n_instances: int = 1):
+    """Tiny mesh for CPU tests (1 device): all axes size 1 except data."""
+    ndev = len(jax.devices())
+    return jax.make_mesh((min(n_instances, ndev), 1), ("data", "model"))

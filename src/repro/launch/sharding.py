@@ -1,0 +1,213 @@
+"""Divisibility-aware sharding policy: logical axes -> PartitionSpecs.
+
+Every parameter Spec carries logical axis names (models/spec.py); this
+module maps them onto mesh axes through ordered preference lists. An
+axis candidate is taken only if (a) every mesh axis in it exists, (b)
+the dim size divides the combined mesh-axis size, and (c) none of its
+mesh axes are already used by another dim of the same tensor. Otherwise
+the next preference is tried; an exhausted list replicates the dim.
+
+Policies:
+  train  — TP over "model" (heads/ff/vocab/experts/inner) + FSDP over
+           "data" on the embed dim; "pod" is pure DP (gradient reduce
+           only crosses pods).
+  serve  — TP over "model"; models whose TP shard would still exceed
+           ``fsdp_bytes_per_chip`` also FSDP the embed dim (XLA then
+           all-gathers one layer at a time inside the scan).
+  KV cache (decode) — batch over DP axes, sequence over "model"
+           (distributed flash-decoding: softmax partials psum over the
+           sequence shards); if batch can't shard (long-context B=1),
+           the sequence takes every axis.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.spec import Spec, _walk
+from .mesh import axis_size, data_axes
+
+Pytree = Any
+AxisPref = Union[str, Tuple[str, ...]]
+
+
+def _norm(pref: AxisPref) -> Tuple[str, ...]:
+    return (pref,) if isinstance(pref, str) else tuple(pref)
+
+
+@dataclass(frozen=True)
+class Policy:
+    rules: Dict[str, Tuple[AxisPref, ...]]
+
+    def pspec(self, spec: Spec, mesh: Mesh) -> P:
+        used: set = set()
+        out: List[Optional[Union[str, Tuple[str, ...]]]] = []
+        for dim, name in zip(spec.shape, spec.axes):
+            picked = None
+            for pref in self.rules.get(name, ()):  # type: ignore[arg-type]
+                axes = _norm(pref)
+                if not all(a in mesh.shape for a in axes):
+                    continue
+                if any(a in used for a in axes):
+                    continue
+                if dim % axis_size(mesh, axes) != 0:
+                    continue
+                picked = axes[0] if len(axes) == 1 else tuple(axes)
+                used.update(axes)
+                break
+            out.append(picked)
+        while out and out[-1] is None:
+            out.pop()
+        return P(*out)
+
+
+def train_policy(mesh: Mesh) -> Policy:
+    return Policy(rules={
+        "vocab": ("model",),
+        "heads": ("model",),
+        "kv_heads": ("model",),          # KH=8 vs 16 -> replicated (GQA)
+        "ff": ("model",),
+        # "expert" exists only on the expert-axis mesh (it6)
+        "experts": ("expert", "model"),
+        # expert weights: FSDP goes on the ff dim jointly with TP, NEVER
+        # on the input dim (a data-sharded contraction dim turns the
+        # expert matmuls into 20GiB fp32 partial-sum all-reduces)
+        "expert_ff": (("model", "data"), ("model",), ("data",)),
+        "expert_in": (),
+        # halfexpert MoE (shard_map EP): one half-expert per model
+        # column, its ff columns FSDP'd over data
+        "halfexpert": ("model",),
+        "expert_ff_fsdp": ("data",),
+        "inner": ("model",),
+        "embed": ("data",),              # FSDP
+    })
+
+
+def serve_policy(mesh: Mesh, param_bytes: int,
+                 fsdp_bytes_per_chip: int = 6 << 30) -> Policy:
+    tp = axis_size(mesh, "model")
+    big = param_bytes // tp > fsdp_bytes_per_chip
+    rules = {
+        "vocab": ("model",),
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        "ff": ("model",),
+        "experts": ("model",),
+        "expert_ff": ((("model", "data"), ("model",), ("data",))
+                      if big else (("model",),)),
+        "expert_in": (),
+        "halfexpert": ("model",),
+        "expert_ff_fsdp": (("data",) if big else ()),
+        "inner": ("model",),
+    }
+    if big:
+        rules["embed"] = ("data",)       # weight shard must go 2D
+    return Policy(rules=rules)
+
+
+# ---------------------------------------------------------------------
+# parameter / state shardings
+# ---------------------------------------------------------------------
+
+def param_shardings(specs: Pytree, mesh: Mesh, policy: Policy) -> Pytree:
+    return _walk(specs, lambda _, s: NamedSharding(mesh,
+                                                   policy.pspec(s, mesh)))
+
+
+def param_pspecs(specs: Pytree, mesh: Mesh, policy: Policy) -> Pytree:
+    return _walk(specs, lambda _, s: policy.pspec(s, mesh))
+
+
+def like_tree(template: Pytree, target: Pytree) -> Pytree:
+    """Map a spec-tree-derived sharding tree onto a same-structure tree
+    (e.g. optimizer moments mirror the param shardings)."""
+    return jax.tree.map(lambda _, s: s, target, template)
+
+
+# ---------------------------------------------------------------------
+# activation / batch shardings
+# ---------------------------------------------------------------------
+
+def dp_spec(mesh: Mesh, batch: int) -> Optional[Union[str, Tuple[str, ...]]]:
+    """Mesh axes for a batch dim (pod+data when divisible, else data,
+    else replicate)."""
+    cands = [data_axes(mesh), ("data",)]
+    for axes in cands:
+        if axes and all(a in mesh.shape for a in axes) \
+                and batch % axis_size(mesh, axes) == 0:
+            return axes[0] if len(axes) == 1 else tuple(axes)
+    return None
+
+
+def batch_shardings(batch_specs: Dict[str, jax.ShapeDtypeStruct],
+                    mesh: Mesh) -> Dict[str, NamedSharding]:
+    out = {}
+    for name, s in batch_specs.items():
+        if s.shape == ():
+            out[name] = NamedSharding(mesh, P())
+            continue
+        bspec = dp_spec(mesh, s.shape[0])
+        rest = [None] * (len(s.shape) - 1)
+        out[name] = NamedSharding(mesh, P(bspec, *rest))
+    return out
+
+
+# ---------------------------------------------------------------------
+# KV / state cache shardings (decode cells)
+# ---------------------------------------------------------------------
+
+_SEQ_PREFS = (("pod", "data", "model"), ("data", "model"), ("model",),
+              ("data",))
+
+
+def _cache_pspec(name: str, shape: Tuple[int, ...], mesh: Mesh,
+                 used_batch: bool = True) -> P:
+    """Leaf-name-aware cache sharding. Shapes:
+      k/v/ck/cv : [G, B, S, KH, D]
+      conv      : [G, B, W, ed]      ssm: [G, B, ed, N]
+      state     : [G, B, H, Dh, Dh]  shift/shift_c: [G, B, d]
+    """
+    used: set = set()
+    B = shape[1]
+    bspec = dp_spec(mesh, B)
+    if bspec is not None:
+        used.update(_norm(bspec))
+    if name in ("k", "v", "ck", "cv"):
+        S = shape[2]
+        sspec = None
+        for axes in _SEQ_PREFS:
+            if all(a in mesh.shape for a in axes) \
+                    and not (set(axes) & used) \
+                    and S % axis_size(mesh, axes) == 0:
+                sspec = axes[0] if len(axes) == 1 else tuple(axes)
+                break
+        return P(None, bspec, sspec, None, None)
+    if name == "conv":
+        ed = shape[3]
+        m = "model" if ed % axis_size(mesh, "model") == 0 else None
+        return P(None, bspec, None, m)
+    if name == "ssm":
+        ed = shape[2]
+        m = "model" if ed % axis_size(mesh, "model") == 0 else None
+        return P(None, bspec, m, None)
+    if name == "state":
+        H = shape[2]
+        m = "model" if H % axis_size(mesh, "model") == 0 else None
+        return P(None, bspec, m, None, None)
+    # shift / shift_c / anything else: batch-sharded only
+    return P(None, bspec, *([None] * (len(shape) - 2)))
+
+
+def cache_shardings(cache_specs: Pytree, mesh: Mesh) -> Pytree:
+    def walk(tree):
+        if isinstance(tree, dict):
+            return {k: (NamedSharding(mesh, _cache_pspec(k, v.shape, mesh))
+                        if not isinstance(v, dict) else walk(v))
+                    for k, v in tree.items()}
+        raise TypeError(tree)
+    return walk(cache_specs)

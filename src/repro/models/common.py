@@ -1,0 +1,264 @@
+"""Shared model building blocks (pure JAX, no framework)."""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+def dtype_of(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------- activation sharding constraints --------------------------
+#
+# GSPMD propagation alone can drop the batch sharding through the
+# embed-gather + scan + transpose(jvp) chain (observed: train attention
+# replicated on all 256 devices). The launcher pins the batch axes here
+# before tracing; model code then constrains activations at layer
+# boundaries. No-op when unset (CPU tests, engine).
+
+_BATCH_AXES: Optional[Tuple[str, ...]] = None
+_SEQ_AXES: Optional[Tuple[str, ...]] = None
+_SEQ_SIZE: int = 1
+_HEAD_AXES: Optional[Tuple[str, ...]] = None
+_HEAD_SIZE: int = 1
+# decode-MoE variant: dispatch (EP; when the expert dim is sharded a
+# weight gather would all-gather whole expert tensors) vs gather (when
+# experts are replicated/2D-ff-sharded, per-token weight slicing is
+# shard-local and cheaper than dispatch's E/K x overcompute)
+_EP_DECODE: bool = False
+
+
+def set_ep_decode(on: bool) -> None:
+    global _EP_DECODE
+    _EP_DECODE = bool(on)
+
+
+def ep_decode() -> bool:
+    return _EP_DECODE
+
+
+_MESH = None
+
+
+def set_mesh(mesh) -> None:
+    """Ambient mesh for model code that needs explicit shard_map
+    (the halfexpert MoE path). None on single-device tests."""
+    global _MESH
+    _MESH = mesh
+
+
+def get_mesh():
+    return _MESH
+
+
+_EXPERT_AXES: Optional[Tuple[str, ...]] = None
+
+
+def set_expert_axes(axes) -> None:
+    """Mesh axes carrying the expert dim of MoE dispatch buffers
+    (expert-axis meshes only — EXPERIMENTS §Perf it6)."""
+    global _EXPERT_AXES
+    if axes is None:
+        _EXPERT_AXES = None
+    else:
+        _EXPERT_AXES = (axes,) if isinstance(axes, str) else tuple(axes)
+
+
+def constrain_moe_dispatch(x: jax.Array) -> jax.Array:
+    """[B, E, cap, d] dispatch tensors: batch over dp, experts over the
+    expert axes when configured (the scatter then lowers to an
+    all-to-all), replicated otherwise."""
+    if _BATCH_AXES is None or x.ndim != 4:
+        return constrain_batch(x)
+    from jax.sharding import PartitionSpec as P
+    lead = _BATCH_AXES[0] if len(_BATCH_AXES) == 1 else _BATCH_AXES
+    if _EXPERT_AXES is None:
+        return jax.lax.with_sharding_constraint(x, P(lead, None, None, None))
+    e = _EXPERT_AXES[0] if len(_EXPERT_AXES) == 1 else _EXPERT_AXES
+    return jax.lax.with_sharding_constraint(x, P(lead, e, None, None))
+
+
+def set_batch_axes(axes) -> None:
+    """axes: mesh axis name(s) for the batch dim, or None to disable."""
+    global _BATCH_AXES
+    if axes is None:
+        _BATCH_AXES = None
+    elif isinstance(axes, str):
+        _BATCH_AXES = (axes,)
+    else:
+        _BATCH_AXES = tuple(axes)
+
+
+def set_seq_axes(axes, size: int = 1) -> None:
+    """Sequence-parallel residual stream (prefill): [B, S, d] activations
+    shard S over ``axes``. Must stay None for recurrent archs (mamba /
+    rwkv states flow sequentially across S shards)."""
+    global _SEQ_AXES, _SEQ_SIZE
+    if axes is None:
+        _SEQ_AXES = None
+    else:
+        _SEQ_AXES = (axes,) if isinstance(axes, str) else tuple(axes)
+        _SEQ_SIZE = size
+
+
+def set_head_axes(axes, size: int = 1) -> None:
+    """Head-TP attention (prefill): [B, S, H, D] tensors shard H over
+    ``axes`` — pins the classic Megatron pattern so GSPMD cannot drift
+    into gathering the (G-times larger) repeated-KV stream."""
+    global _HEAD_AXES, _HEAD_SIZE
+    if axes is None:
+        _HEAD_AXES = None
+    else:
+        _HEAD_AXES = (axes,) if isinstance(axes, str) else tuple(axes)
+        _HEAD_SIZE = size
+
+
+def constrain_heads(x: jax.Array) -> jax.Array:
+    """Constrain a [B, S, H, D] tensor's head dim (no-op if unset or
+    the head count doesn't divide)."""
+    if _HEAD_AXES is None or _BATCH_AXES is None or x.ndim != 4 \
+            or x.shape[2] % _HEAD_SIZE != 0:
+        return x
+    from jax.sharding import PartitionSpec as P
+    lead = _BATCH_AXES[0] if len(_BATCH_AXES) == 1 else _BATCH_AXES
+    heads = _HEAD_AXES[0] if len(_HEAD_AXES) == 1 else _HEAD_AXES
+    return jax.lax.with_sharding_constraint(x, P(lead, None, heads, None))
+
+
+def constrain_batch(x: jax.Array) -> jax.Array:
+    """Constrain dim 0 of ``x`` to the data-parallel axes (+ dim 1 to
+    the sequence axes for rank-3 activations when configured)."""
+    if _BATCH_AXES is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+    lead = _BATCH_AXES[0] if len(_BATCH_AXES) == 1 else _BATCH_AXES
+    if _SEQ_AXES is not None and x.ndim == 3 \
+            and x.shape[1] % _SEQ_SIZE == 0:
+        seq = _SEQ_AXES[0] if len(_SEQ_AXES) == 1 else _SEQ_AXES
+        return jax.lax.with_sharding_constraint(x, P(lead, seq, None))
+    return jax.lax.with_sharding_constraint(
+        x, P(lead, *([None] * (x.ndim - 1))))
+
+
+# ---------------- init helpers --------------------------------------------------
+
+def ninit(key, shape, scale=0.02, dtype=jnp.bfloat16):
+    return (scale * jax.random.normal(key, shape, dtype=jnp.float32)).astype(dtype)
+
+
+def zinit(shape, dtype=jnp.bfloat16):
+    return jnp.zeros(shape, dtype=dtype)
+
+
+def oinit(shape, dtype=jnp.bfloat16):
+    return jnp.ones(shape, dtype=dtype)
+
+
+class KeyGen:
+    """Deterministic named key derivation (stable across param-tree edits)."""
+
+    def __init__(self, key):
+        self.key = key
+
+    def __call__(self, name: str):
+        from .spec import stable_hash
+        return jax.random.fold_in(self.key, stable_hash(name) % (2 ** 31))
+
+
+# ---------------- norms ---------------------------------------------------------
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, weight: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------- rotary embeddings ---------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, D]; positions: broadcastable to [..., S]."""
+    d = x.shape[-1]
+    freq = theta ** (-jnp.arange(0, d, 2, dtype=jnp.float32) / d)   # [D/2]
+    angles = positions[..., None].astype(jnp.float32) * freq        # [..., S, D/2]
+    angles = angles[..., None, :]                                   # [..., S, 1, D/2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------- feed-forward --------------------------------------------------
+
+def swiglu(x: jax.Array, wg: jax.Array, wu: jax.Array, wd: jax.Array) -> jax.Array:
+    g = jax.nn.silu(jnp.einsum("...d,df->...f", x, wg).astype(jnp.float32))
+    u = jnp.einsum("...d,df->...f", x, wu).astype(jnp.float32)
+    return jnp.einsum("...f,fd->...d", (g * u).astype(x.dtype), wd)
+
+
+def gelu_mlp(x: jax.Array, w1: jax.Array, b1: jax.Array,
+             w2: jax.Array, b2: jax.Array) -> jax.Array:
+    h = jax.nn.gelu(jnp.einsum("...d,df->...f", x, w1) + b1)
+    return jnp.einsum("...f,fd->...d", h, w2) + b2
+
+
+# ---------------- chunked cross-entropy -----------------------------------------
+
+def chunked_ce_loss(hidden: jax.Array, w_out: jax.Array, labels: jax.Array,
+                    mask: Optional[jax.Array] = None,
+                    chunk: int = 512) -> jax.Array:
+    """Causal-LM loss without materializing [B, S, V].
+
+    hidden: [B, S, d]; w_out: [d, V]; labels: [B, S] (next-token ids,
+    already shifted). Scans over sequence chunks; inside a chunk the logits
+    are [B, chunk, V] — with V sharded over the model axis this is the only
+    vocab-sized activation that ever exists.
+    """
+    B, S, d = hidden.shape
+    V = w_out.shape[-1]
+    n = max(S // chunk, 1)
+    chunk = S // n
+    h = hidden.reshape(B, n, chunk, d).transpose(1, 0, 2, 3)
+    y = labels.reshape(B, n, chunk).transpose(1, 0, 2)
+    if mask is None:
+        mask = jnp.ones_like(labels, dtype=jnp.float32)
+    m = mask.reshape(B, n, chunk).transpose(1, 0, 2)
+
+    def body(carry, xs):
+        hc, yc, mc = xs
+        logits = jnp.einsum("bcd,dv->bcv", hc, w_out).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        # gold score via masked reduction (NOT take_along_axis: a gather
+        # on the vocab-sharded logits would force an all-gather; the
+        # iota-mask reduce stays sharded and psums a scalar per token)
+        vio = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+        gold = jnp.where(vio == yc[..., None], logits, 0.0).sum(-1)
+        nll = (lse - gold) * mc
+        return (carry[0] + nll.sum(), carry[1] + mc.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())),
+                                 (h, y, m))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def top1_logits(hidden_last: jax.Array, w_out: jax.Array) -> jax.Array:
+    """Greedy next-token from last-position hidden states: [B, d] -> [B]."""
+    logits = jnp.einsum("bd,dv->bv", hidden_last, w_out).astype(jnp.float32)
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)

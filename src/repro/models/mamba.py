@@ -1,0 +1,157 @@
+"""Mamba (S6 selective-scan) layer — used by jamba's hybrid stack.
+
+Two execution forms:
+  * ``mamba_full``  — train/prefill over a whole sequence. The recurrence
+      h_t = dA_t * h_{t-1} + dB_t x_t  is associative, so we scan over
+      fixed-size chunks (bounded memory) and run ``lax.associative_scan``
+      within each chunk (parallel depth log C instead of C).
+  * ``mamba_step``  — O(1) decode step against a recurrent state cache.
+
+Cache entry: {"conv": [B, d_conv-1, ed] last raw conv inputs,
+              "ssm":  [B, ed, N] fp32 state}.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .spec import Spec
+
+
+def pick_chunk(S: int, want: int) -> int:
+    """Largest divisor of S that is <= want (>=1)."""
+    c = min(want, S)
+    while S % c:
+        c -= 1
+    return c
+
+
+def dt_rank(cfg) -> int:
+    return max(cfg.d_model // 16, 1)
+
+
+def mamba_specs(cfg) -> Dict[str, Spec]:
+    d = cfg.d_model
+    ed = cfg.mamba_expand * d
+    N = cfg.mamba_d_state
+    R = dt_rank(cfg)
+    conv = cfg.mamba_d_conv
+    return {
+        "in_proj": Spec((d, 2 * ed), ("embed", "inner"), init="fan_in"),
+        "conv_w": Spec((conv, ed), (None, "inner"), init="normal", scale=0.2),
+        "conv_b": Spec((ed,), ("inner",), init="zeros"),
+        "x_proj": Spec((ed, R + 2 * N), ("inner", None), init="fan_in"),
+        "dt_w": Spec((R, ed), (None, "inner"), init="fan_in"),
+        "dt_b": Spec((ed,), ("inner",), init="zeros"),
+        # A = -exp(A_log): zeros -> A = -1 everywhere (selectivity enters
+        # through the data-dependent dt); faithful init would be log(1..N).
+        "A_log": Spec((ed, N), ("inner", None), init="zeros",
+                      dtype="float32"),
+        "D": Spec((ed,), ("inner",), init="ones", dtype="float32"),
+        "out_proj": Spec((ed, d), ("inner", "embed"), init="fan_in"),
+    }
+
+
+def _conv_causal(xs, conv_w, conv_b, prev=None):
+    """Depthwise causal conv. xs: [B, S, ed]; prev: [B, conv-1, ed] history."""
+    conv = conv_w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((xs.shape[0], conv - 1, xs.shape[2]), xs.dtype)
+    xp = jnp.concatenate([prev, xs], axis=1)          # [B, S+conv-1, ed]
+    S = xs.shape[1]
+    out = sum(xp[:, w:w + S] * conv_w[w] for w in range(conv))
+    return out + conv_b
+
+
+def _ssm_inputs(p, cfg, xs):
+    """xs: [..., ed] post-conv activations -> (dA, dBx, C) fp32."""
+    N = cfg.mamba_d_state
+    R = dt_rank(cfg)
+    proj = jnp.einsum("...e,er->...r", xs, p["x_proj"]).astype(jnp.float32)
+    dt_r, Bm, Cm = jnp.split(proj, [R, R + N], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("...r,re->...e", dt_r, p["dt_w"].astype(jnp.float32))
+        + p["dt_b"].astype(jnp.float32))              # [..., ed]
+    A = -jnp.exp(p["A_log"])                          # [ed, N]
+    dA = jnp.exp(dt[..., None] * A)                   # [..., ed, N]
+    dBx = (dt * xs.astype(jnp.float32))[..., None] * Bm[..., None, :]
+    return dA, dBx, Cm
+
+
+def mamba_full(p, cfg, x, cache=None, chunk: int = 64
+               ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: [B, S, d] -> (y [B, S, d], cache). S must divide by chunk or be
+    < chunk (single partial chunk)."""
+    B, S, d = x.shape
+    ed = cfg.mamba_expand * d
+    conv = cfg.mamba_d_conv
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xs_raw, z = jnp.split(xz, 2, axis=-1)
+    prev = cache["conv"] if cache is not None else None
+    xs = jax.nn.silu(_conv_causal(xs_raw, p["conv_w"], p["conv_b"], prev)
+                     .astype(jnp.float32)).astype(x.dtype)
+
+    dA, dBx, Cm = _ssm_inputs(p, cfg, xs)             # [B,S,ed,N] fp32
+
+    C = pick_chunk(S, chunk)
+    n = S // C
+    dA_c = dA.reshape(B, n, C, ed, -1).transpose(1, 0, 2, 3, 4)
+    dBx_c = dBx.reshape(B, n, C, ed, -1).transpose(1, 0, 2, 3, 4)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a2 * a1, a2 * b1 + b2
+
+    def body(h, xs_c):
+        da, dbx = xs_c                                # [B, C, ed, N]
+        cum_a, cum_b = jax.lax.associative_scan(combine, (da, dbx), axis=1)
+        h_all = cum_a * h[:, None] + cum_b            # [B, C, ed, N]
+        return h_all[:, -1], h_all
+
+    h0 = (cache["ssm"] if cache is not None
+          else jnp.zeros((B, ed, cfg.mamba_d_state), jnp.float32))
+    h_fin, h_chunks = jax.lax.scan(body, h0, (dA_c, dBx_c))
+    h_seq = h_chunks.transpose(1, 0, 2, 3, 4).reshape(B, S, ed, -1)
+    y = jnp.einsum("bsen,bsn->bse", h_seq, Cm)        # fp32
+    y = y + p["D"] * xs.astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = jnp.einsum("bse,ed->bsd", y.astype(x.dtype), p["out_proj"])
+
+    new_conv = (jnp.concatenate([prev, xs_raw], axis=1)[:, -(conv - 1):]
+                if prev is not None else
+                jnp.pad(xs_raw, ((0, 0), (conv - 1 - min(S, conv - 1), 0),
+                                 (0, 0)))[:, -(conv - 1):])
+    return out, {"conv": new_conv.astype(x.dtype), "ssm": h_fin}
+
+
+def mamba_step(p, cfg, x, cache) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: [B, d] one token; cache {"conv","ssm"} -> (y [B, d], new cache)."""
+    B, d = x.shape
+    conv = cfg.mamba_d_conv
+    xz = jnp.einsum("bd,de->be", x, p["in_proj"])
+    xs_raw, z = jnp.split(xz, 2, axis=-1)             # [B, ed]
+    win = jnp.concatenate([cache["conv"], xs_raw[:, None]], axis=1)
+    conv_out = jnp.einsum("bwe,we->be", win, p["conv_w"]) + p["conv_b"]
+    xs = jax.nn.silu(conv_out.astype(jnp.float32)).astype(x.dtype)
+
+    dA, dBx, Cm = _ssm_inputs(p, cfg, xs)             # [B, ed, N]
+    h = dA * cache["ssm"] + dBx
+    y = jnp.einsum("ben,bn->be", h, Cm)
+    y = y + p["D"] * xs.astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = jnp.einsum("be,ed->bd", y.astype(x.dtype), p["out_proj"])
+    return out, {"conv": win[:, 1:], "ssm": h}
+
+
+def mamba_cache_spec(cfg, batch: int) -> Dict[str, jax.ShapeDtypeStruct]:
+    ed = cfg.mamba_expand * cfg.d_model
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, cfg.mamba_d_conv - 1, ed),
+                                     jnp.dtype(cfg.dtype)),
+        "ssm": jax.ShapeDtypeStruct((batch, ed, cfg.mamba_d_state),
+                                    jnp.float32),
+    }

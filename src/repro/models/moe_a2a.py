@@ -1,0 +1,141 @@
+"""Hand-written expert parallelism via shard_map — the "a2a EP" path
+GSPMD cannot discover from sharding annotations (EXPERIMENTS §Perf it6
+showed annotation-driven expert axes REGRESS 3.7x).
+
+Layout: each of the tp model-axis columns owns ONE half-expert — expert
+e = h // s split column-wise into s = tp / n_experts shards of
+f_half = d_ff / s columns (s=2 for 8-expert models on a 16-way axis;
+s=1 for jamba's 16). Weights are stored pre-reshaped
+[tp, d, f_half] and sharded (model, None, data): resident bytes match
+the FSDP baseline; inside the per-layer shard_map each chip
+all-gathers only its own half-expert's columns over "data".
+
+Per (data-row, model-column) chip, everything is LOCAL except two
+collectives per layer:
+  1. all-gather of the chip's half-expert weights over "data"
+     (FSDP semantics, same bytes as the baseline weight gathers);
+  2. one bf16 psum of the combined output [B_local, S, d] over "model"
+     (each column contributes the tokens routed to its half-expert;
+     the two halves of an expert sum their column-partial outputs
+     through the same psum).
+
+The dispatch select/scatter runs entirely on-chip (tokens are
+replicated across the model axis in the train sharding), eliminating
+the fp32 dispatch-buffer transposes that dominate the GSPMD path
+(measured 33+ GiB/layer-pass on grok).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .spec import Spec
+
+
+def applicable(cfg, tp: int) -> bool:
+    return (cfg.n_experts > 0 and tp % cfg.n_experts == 0
+            and cfg.d_ff % (tp // cfg.n_experts) == 0)
+
+
+def moe_halfexpert_specs(cfg, tp: int) -> Dict[str, Spec]:
+    """Pre-reshaped weights: [tp, d, f_half] / [tp, f_half, d]."""
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    s = tp // E
+    fh = f // s
+    return {
+        "router": Spec((d, E), ("embed", None), init="fan_in",
+                       dtype="float32"),
+        "wg": Spec((tp, d, fh), ("halfexpert", None, "expert_ff_fsdp"),
+                   init="fan_in"),
+        "wu": Spec((tp, d, fh), ("halfexpert", None, "expert_ff_fsdp"),
+                   init="fan_in"),
+        "wd": Spec((tp, fh, d), ("halfexpert", "expert_ff_fsdp", None),
+                   init="fan_in"),
+    }
+
+
+def _local_moe(p, cfg, x, *, tp: int, data_axis: str, model_axis: str):
+    """shard_map body. Shapes per chip:
+    x [B_local, S, d]; p["wg"/"wu"] [1, d, fh_local]; p["wd"]
+    [1, fh_local, d]; router [d, E] replicated."""
+    B, S, d = x.shape
+    E, K = cfg.n_experts, cfg.experts_per_token
+    s = tp // E
+    my_half = jax.lax.axis_index(model_axis)          # 0..tp-1
+    my_expert = my_half // s
+
+    # FSDP gather of this chip's half-expert columns (f axis over data)
+    wg = jax.lax.all_gather(p["wg"][0], data_axis, axis=1, tiled=True)
+    wu = jax.lax.all_gather(p["wu"][0], data_axis, axis=1, tiled=True)
+    wd = jax.lax.all_gather(p["wd"][0], data_axis, axis=0, tiled=True)
+
+    # routing (replicated compute across the model axis; cheap)
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    gates = jax.nn.softmax(logits, axis=-1)
+    topw, tope = jax.lax.top_k(gates, K)              # [B, S, K]
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+
+    # local selection of tokens routed to MY expert
+    T = B * S
+    hit = (tope == my_expert)                         # [B, S, K]
+    w_tok = jnp.where(hit, topw, 0.0).sum(-1).reshape(T)   # combine gate
+    mine = hit.any(-1).reshape(T)
+    cap = max(int(cfg.capacity_factor * T * K / E), K)
+    pos = jnp.cumsum(mine) - mine.astype(jnp.int32)
+    keep = mine & (pos < cap)
+    slot = jnp.where(keep, pos, cap)                  # cap = spill row
+    xt = x.reshape(T, d)
+    disp = jnp.zeros((cap + 1, d), x.dtype).at[slot].add(
+        jnp.where(keep[:, None], xt, 0))
+
+    g = jax.nn.silu(jnp.einsum("cd,df->cf", disp, wg).astype(jnp.float32))
+    u = jnp.einsum("cd,df->cf", disp, wu).astype(jnp.float32)
+    eo = jnp.einsum("cf,fd->cd", (g * u).astype(x.dtype), wd)
+
+    # local combine: token t reads back its slot (zeros if dropped)
+    out = eo[slot] * (w_tok * keep).astype(x.dtype)[:, None]
+    out = out.reshape(B, S, d)
+    # the ONLY cross-chip data movement: sum half-expert contributions
+    return jax.lax.psum(out, model_axis)
+
+
+def moe_halfexpert(p, cfg, x, mesh, *, data_axis: str = "data",
+                   model_axis: str = "model"):
+    """x [B, S, d] sharded (dp, None, None); returns same sharding.
+    Batch shards over pod+data on multi-pod meshes; the weight-FSDP
+    gather stays within "data" and the output psum within "model"."""
+    from jax.sharding import PartitionSpec as P
+    tp = mesh.shape[model_axis]
+    bp = tuple(a for a in ("pod", data_axis) if a in mesh.shape)
+    batch_spec = bp[0] if len(bp) == 1 else bp
+    body = functools.partial(_local_moe, cfg=cfg, tp=tp,
+                             data_axis=data_axis, model_axis=model_axis)
+    spec_w = {"router": P(None, None),
+              "wg": P(model_axis, None, data_axis),
+              "wu": P(model_axis, None, data_axis),
+              "wd": P(model_axis, data_axis, None)}
+    fn = jax.shard_map(
+        lambda pp, xx: body(pp, x=xx),
+        mesh=mesh,
+        in_specs=(spec_w, P(batch_spec, None, None)),
+        out_specs=P(batch_spec, None, None))
+    return fn(p, x)
+
+
+def reshape_standard_to_halfexpert(wg, wu, wd, tp: int):
+    """[E, d, f] -> [tp, d, f/s] (column split per expert) — used by the
+    equivalence tests and by checkpoint migration."""
+    E, d, f = wg.shape
+    s = tp // E
+    fh = f // s
+    def split_g(w):   # [E, d, f] -> [E, d, s, fh] -> [tp, d, fh]
+        return (w.reshape(E, d, s, fh).transpose(0, 2, 1, 3)
+                .reshape(tp, d, fh))
+    def split_d(w):   # [E, f, d] -> [tp, fh, d]
+        return (w.reshape(E, s, fh, d).reshape(tp, fh, d))
+    return split_g(wg), split_g(wu), split_d(wd)

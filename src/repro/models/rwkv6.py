@@ -1,0 +1,230 @@
+"""RWKV-6 (Finch) layer — data-dependent per-channel decay linear attention.
+
+Recurrence per head (k-dim x v-dim state S, decay w_t and bonus u act on
+the k channel):
+
+    y_t = r_t @ (S_{t-1} + (u * k_t) ^T v_t)
+    S_t = diag(w_t) @ S_{t-1} + k_t ^T v_t,      w_t = exp(-exp(ww + lora(x)))
+
+Forms:
+  * ``rwkv_time_full``   — chunked parallel form (train / prefill):
+      intra-chunk decay-weighted attention with the exponent masked BEFORE
+      exp (no inf*0 NaNs), inter-chunk via the carried state. O(S*C) memory.
+  * ``rwkv_time_step``   — O(1) recurrent decode step.
+Channel-mix is the standard squared-ReLU gated MLP with token shift.
+
+Simplification vs the full Finch block (documented in DESIGN.md §7): the
+5-way data-dependent token-shift lora (ddlerp) is reduced to static
+per-channel mix coefficients; the *decay* lora — the Finch signature —
+is kept.
+
+Cache entry: {"state": [B, H, Dh, Dh] fp32, "shift": [B, d],
+              "shift_c": [B, d]}.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .spec import Spec
+
+LOGW_MIN = -8.0     # clip decay log for numerical stability
+LOGW_MAX = -1e-4
+
+
+def rwkv_time_specs(cfg) -> Dict[str, Spec]:
+    d = cfg.d_model
+    return {
+        "mu": Spec((5, d), (None, None), init="zeros"),     # r,k,v,w,g mixes
+        "ww": Spec((d,), (None,), init="zeros"),            # base decay
+        "w_lora_a": Spec((d, 64), ("embed", None), init="fan_in"),
+        "w_lora_b": Spec((64, d), (None, "heads"), init="fan_in"),
+        "wr": Spec((d, d), ("embed", "heads"), init="fan_in"),
+        "wk": Spec((d, d), ("embed", "heads"), init="fan_in"),
+        "wv": Spec((d, d), ("embed", "heads"), init="fan_in"),
+        "wg": Spec((d, d), ("embed", "heads"), init="fan_in"),
+        "wo": Spec((d, d), ("heads", "embed"), init="fan_in"),
+        "u": Spec((d,), ("heads",), init="normal", scale=0.5),
+        "ln_x": Spec((d,), (None,), init="ones"),
+    }
+
+
+def rwkv_channel_specs(cfg) -> Dict[str, Spec]:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "mu_c": Spec((2, d), (None, None), init="zeros"),   # r, k mixes
+        "wr_c": Spec((d, d), ("embed", "heads"), init="fan_in"),
+        "wk_c": Spec((d, f), ("embed", "ff"), init="fan_in"),
+        "wv_c": Spec((f, d), ("ff", "embed"), init="fan_in"),
+    }
+
+
+def _shift_full(x, prev):
+    """Token shift: x_{t-1}, with ``prev`` [B, d] seeding position 0."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, 0])
+    return jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+
+
+def _mix(x, x_prev, mu_row):
+    m = jax.nn.sigmoid(mu_row.astype(jnp.float32)).astype(x.dtype)
+    return x + (x_prev - x) * m
+
+
+def _heads(x, H, Dh):
+    return x.reshape(*x.shape[:-1], H, Dh)
+
+
+def _group_norm(y, weight, H, Dh, eps=1e-5):
+    """Per-head LayerNorm (RWKV's GroupNorm with H groups)."""
+    yf = y.astype(jnp.float32)
+    mu = yf.mean(-1, keepdims=True)
+    var = yf.var(-1, keepdims=True)
+    out = (yf - mu) * jax.lax.rsqrt(var + eps)
+    w = weight.reshape(H, Dh).astype(jnp.float32)
+    return out * w
+
+
+def rwkv_time_full(p, cfg, x, cache=None, chunk: int = 16
+                   ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: [B, S, d] -> (y, {"state", "shift"})."""
+    B, S, d = x.shape
+    H = d // cfg.rwkv_head_dim
+    Dh = cfg.rwkv_head_dim
+    prev = cache["shift"] if cache is not None else None
+    xp = _shift_full(x, prev)
+
+    r = _heads(jnp.einsum("bsd,de->bse", _mix(x, xp, p["mu"][0]), p["wr"]), H, Dh)
+    k = _heads(jnp.einsum("bsd,de->bse", _mix(x, xp, p["mu"][1]), p["wk"]), H, Dh)
+    v = _heads(jnp.einsum("bsd,de->bse", _mix(x, xp, p["mu"][2]), p["wv"]), H, Dh)
+    g = jnp.einsum("bsd,de->bse", _mix(x, xp, p["mu"][4]), p["wg"])
+    xw = _mix(x, xp, p["mu"][3])
+    w_raw = (p["ww"].astype(jnp.float32)
+             + jnp.einsum("bsk,kd->bsd",
+                          jnp.tanh(jnp.einsum("bsd,dk->bsk", xw,
+                                              p["w_lora_a"])).astype(jnp.float32),
+                          p["w_lora_b"].astype(jnp.float32)))
+    logw = jnp.clip(-jnp.exp(w_raw), LOGW_MIN, LOGW_MAX)    # [B, S, d] fp32
+    logw = _heads(logw, H, Dh)
+    u = _heads(p["u"].astype(jnp.float32), H, Dh)           # [H, Dh]
+
+    from .mamba import pick_chunk
+    C = pick_chunk(S, chunk)
+    n = S // C
+
+    def per_chunk(args):
+        rc, kc, vc, lwc = args          # [B, C, H, Dh] (lw fp32)
+        a = jnp.cumsum(lwc, axis=1)                       # inclusive cumsum
+        b = a - lwc                                       # exclusive (a_{t-1})
+        rf = rc.astype(jnp.float32)
+        kf = kc.astype(jnp.float32)
+        vf = vc.astype(jnp.float32)
+        # intra-chunk: s_ij = sum_dk r_i k_j exp(b_i - a_j), j < i
+        expo = b[:, :, None] - a[:, None, :]              # [B, C, C, H, Dh]
+        ii = jnp.arange(C)
+        mask = (ii[:, None] > ii[None, :])                # strict lower tri
+        expo = jnp.where(mask[None, :, :, None, None], expo, -jnp.inf)
+        Dm = jnp.exp(expo)
+        s = jnp.einsum("bihd,bjhd,bijhd->bhij", rf, kf, Dm)
+        y = jnp.einsum("bhij,bjhd->bihd", s, vf)
+        # diagonal bonus term
+        y = y + jnp.einsum("bihd,bihd->bih", rf, u * kf)[..., None] * vf
+        # inter-chunk: r_t exp(b_t) @ S_in  (added by caller with carry)
+        re = rf * jnp.exp(b)
+        # state update pieces
+        a_last = a[:, -1]                                 # [B, H, Dh]
+        kd = kf * jnp.exp(a_last[:, None] - a)            # [B, C, H, Dh]
+        dS = jnp.einsum("bjhk,bjhv->bhkv", kd, vf)
+        return y, re, jnp.exp(a_last), dS
+
+    rs = r.reshape(B, n, C, H, Dh).transpose(1, 0, 2, 3, 4)
+    ks = k.reshape(B, n, C, H, Dh).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, n, C, H, Dh).transpose(1, 0, 2, 3, 4)
+    ls = logw.reshape(B, n, C, H, Dh).transpose(1, 0, 2, 3, 4)
+
+    def body(S_in, xs):
+        y, re, decay, dS = per_chunk(xs)
+        y = y + jnp.einsum("bihk,bhkv->bihv", re, S_in)
+        S_out = decay[..., None] * S_in + dS
+        return S_out, y
+
+    S0 = (cache["state"] if cache is not None
+          else jnp.zeros((B, H, Dh, Dh), jnp.float32))
+    S_fin, y_chunks = jax.lax.scan(body, S0, (rs, ks, vs, ls))
+    y = y_chunks.transpose(1, 0, 2, 3, 4).reshape(B, S, H, Dh)
+
+    y = _group_norm(y, p["ln_x"], H, Dh).reshape(B, S, d)
+    y = y * jax.nn.silu(g.astype(jnp.float32))
+    out = jnp.einsum("bsd,de->bse", y.astype(x.dtype), p["wo"])
+    return out, {"state": S_fin, "shift": x[:, -1]}
+
+
+def rwkv_time_step(p, cfg, x, cache) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: [B, d] -> (y [B, d], new cache)."""
+    B, d = x.shape
+    H = d // cfg.rwkv_head_dim
+    Dh = cfg.rwkv_head_dim
+    xp = cache["shift"]
+    r = _heads(jnp.einsum("bd,de->be", _mix(x, xp, p["mu"][0]), p["wr"]), H, Dh)
+    k = _heads(jnp.einsum("bd,de->be", _mix(x, xp, p["mu"][1]), p["wk"]), H, Dh)
+    v = _heads(jnp.einsum("bd,de->be", _mix(x, xp, p["mu"][2]), p["wv"]), H, Dh)
+    g = jnp.einsum("bd,de->be", _mix(x, xp, p["mu"][4]), p["wg"])
+    xw = _mix(x, xp, p["mu"][3])
+    w_raw = (p["ww"].astype(jnp.float32)
+             + jnp.einsum("bk,kd->bd",
+                          jnp.tanh(jnp.einsum("bd,dk->bk", xw,
+                                              p["w_lora_a"])).astype(jnp.float32),
+                          p["w_lora_b"].astype(jnp.float32)))
+    w = jnp.exp(jnp.clip(-jnp.exp(w_raw), LOGW_MIN, LOGW_MAX))
+    w = _heads(w, H, Dh)
+    u = _heads(p["u"].astype(jnp.float32), H, Dh)
+
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    S = cache["state"]                                    # [B, H, Dh, Dh]
+    kv = jnp.einsum("bhk,bhv->bhkv", kf, vf)
+    y = jnp.einsum("bhk,bhkv->bhv", rf, S + u[None, :, :, None] * kv)
+    S_new = w[..., None] * S + kv
+    y = _group_norm(y, p["ln_x"], H, Dh).reshape(B, d)
+    y = y * jax.nn.silu(g.astype(jnp.float32))
+    out = jnp.einsum("bd,de->be", y.astype(x.dtype), p["wo"])
+    return out, {"state": S_new, "shift": x}
+
+
+def rwkv_channel_full(p, cfg, x, cache=None
+                      ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    prev = cache["shift_c"] if cache is not None else None
+    xp = _shift_full(x, prev)
+    r = jax.nn.sigmoid(jnp.einsum(
+        "bsd,de->bse", _mix(x, xp, p["mu_c"][0]), p["wr_c"])
+        .astype(jnp.float32))
+    k = jnp.einsum("bsd,df->bsf", _mix(x, xp, p["mu_c"][1]), p["wk_c"])
+    k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(x.dtype)
+    out = r.astype(x.dtype) * jnp.einsum("bsf,fd->bsd", k, p["wv_c"])
+    return out, {"shift_c": x[:, -1]}
+
+
+def rwkv_channel_step(p, cfg, x, cache
+                      ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    xp = cache["shift_c"]
+    r = jax.nn.sigmoid(jnp.einsum(
+        "bd,de->be", _mix(x, xp, p["mu_c"][0]), p["wr_c"])
+        .astype(jnp.float32))
+    k = jnp.einsum("bd,df->bf", _mix(x, xp, p["mu_c"][1]), p["wk_c"])
+    k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(x.dtype)
+    out = r.astype(x.dtype) * jnp.einsum("bf,fd->bd", k, p["wv_c"])
+    return out, {"shift_c": x}
+
+
+def rwkv_cache_spec(cfg, batch: int) -> Dict[str, jax.ShapeDtypeStruct]:
+    d = cfg.d_model
+    H = d // cfg.rwkv_head_dim
+    Dh = cfg.rwkv_head_dim
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "state": jax.ShapeDtypeStruct((batch, H, Dh, Dh), jnp.float32),
+        "shift": jax.ShapeDtypeStruct((batch, d), dt),
+        "shift_c": jax.ShapeDtypeStruct((batch, d), dt),
+    }

@@ -1,0 +1,135 @@
+"""Parameter-spec system: single source of truth for parameter shapes,
+initialization, and logical sharding axes.
+
+Every model in the zoo describes its parameters as a nested dict of
+``Spec`` leaves.  From that one description we derive:
+
+  * ``init_params``     — materialized jnp arrays (random init),
+  * ``abstract_params`` — jax.ShapeDtypeStruct tree (dry-run / checkpoint
+                          metadata; never allocates),
+  * ``logical_axes``    — tree of logical-axis-name tuples consumed by
+                          ``launch.sharding`` to produce PartitionSpecs.
+
+Logical axis vocabulary (mapped to mesh axes by launch/sharding.py):
+  "layers"   — stacked scan-over-layers dim (never sharded)
+  "vocab"    — vocabulary dim
+  "embed"    — d_model dim
+  "heads"    — attention-heads×head_dim fused projection dim
+  "kv_heads" — kv-heads×head_dim fused projection dim
+  "ff"       — feed-forward hidden dim
+  "experts"  — MoE expert dim
+  "conv"/"state"/"dt" — mamba small dims (never sharded)
+  None       — explicitly replicated dim
+"""
+
+from __future__ import annotations
+
+import math
+import zlib
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def stable_hash(name: str) -> int:
+    """Process-stable string hash (Python's hash() is randomized per run,
+    which would break checkpoint-restart determinism)."""
+    return zlib.crc32(name.encode("utf-8"))
+
+Pytree = Any
+
+
+@dataclass(frozen=True)
+class Spec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"          # normal | zeros | ones | small_normal
+    scale: float = 0.02
+    dtype: str = "bfloat16"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _init_leaf(spec: Spec, key) -> jax.Array:
+    dt = jnp.dtype(spec.dtype)
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype=dt)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype=dt)
+    scale = spec.scale
+    if spec.init == "fan_in" and len(spec.shape) >= 2:
+        scale = 1.0 / math.sqrt(spec.shape[-2])
+    x = scale * jax.random.normal(key, spec.shape, dtype=jnp.float32)
+    return x.astype(dt)
+
+
+def _walk(tree: Pytree, fn: Callable[[Tuple[str, ...], Spec], Any],
+          path: Tuple[str, ...] = ()) -> Pytree:
+    if isinstance(tree, dict):
+        return {k: _walk(v, fn, path + (k,)) for k, v in tree.items()}
+    return fn(path, tree)
+
+
+def init_params(specs: Pytree, key) -> Pytree:
+    """Materialize parameters. Keys are derived from the param path, so the
+    init of one parameter is stable under tree edits elsewhere."""
+
+    def leaf(path, spec):
+        k = key
+        for name in path:
+            k = jax.random.fold_in(k, stable_hash(name) % (2 ** 31))
+        return _init_leaf(spec, k)
+
+    return _walk(specs, leaf)
+
+
+def retype_specs(specs: Pytree, dtype: str) -> Pytree:
+    """Re-dtype every Spec leaf that uses the default ("bfloat16") to the
+    model dtype; leaves pinned to float32 (e.g. SSM A_log, routers) keep it."""
+    def leaf(_, s: Spec) -> Spec:
+        if s.dtype == "bfloat16" and dtype != "bfloat16":
+            return Spec(s.shape, s.axes, s.init, s.scale, dtype)
+        return s
+    return _walk(specs, leaf)
+
+
+def abstract_params(specs: Pytree) -> Pytree:
+    return _walk(specs, lambda _, s: jax.ShapeDtypeStruct(
+        s.shape, jnp.dtype(s.dtype)))
+
+
+def logical_axes(specs: Pytree) -> Pytree:
+    return _walk(specs, lambda _, s: s.axes)
+
+
+def param_count(specs: Pytree) -> int:
+    total = 0
+
+    def leaf(_, s):
+        nonlocal total
+        n = 1
+        for d in s.shape:
+            n *= d
+        total += n
+        return None
+
+    _walk(specs, leaf)
+    return total
+
+
+def param_bytes(specs: Pytree) -> int:
+    total = 0
+
+    def leaf(_, s):
+        nonlocal total
+        n = jnp.dtype(s.dtype).itemsize
+        for d in s.shape:
+            n *= d
+        total += n
+        return None
+
+    _walk(specs, leaf)
+    return total

@@ -1,0 +1,220 @@
+"""Model zoo API: ``build(cfg)`` -> a ``ModelAPI`` with uniform
+loss / prefill / decode entry points for every architecture family.
+
+The engine, the train loop and the dry-run all consume only this API,
+so adding an architecture = adding a config + (maybe) a layer module.
+
+Batch dicts (ShapeDtypeStruct-compatible — see input_specs in launch):
+  train:   {"tokens": [B,S] i32, "labels": [B,S] i32, (+extras)}
+  prefill: {"tokens": [B,S] i32, (+extras)}
+  decode:  {"tokens": [B] i32, "pos": scalar i32}      + cache pytree
+Extras: "vision" [B, n_vis, d] (vlm), "frames" [B, S, d] (audio).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import cached_property, partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import layers as L
+from . import transformer as T
+from .common import chunked_ce_loss, constrain_batch, rms_norm, top1_logits
+from .spec import (Spec, abstract_params, init_params, logical_axes,
+                   param_bytes, param_count, retype_specs)
+
+Pytree = Any
+
+
+@dataclass
+class ModelAPI:
+    cfg: ModelConfig
+    specs: Pytree
+    loss: Callable[[Pytree, Dict], jax.Array]
+    prefill: Callable[[Pytree, Dict], Tuple[jax.Array, Pytree]]
+    decode: Callable[[Pytree, Pytree, Dict], Tuple[jax.Array, Pytree]]
+    cache_specs: Callable[[int, int], Pytree]
+    # chunked-prefill extension against a linear cache (engine batching);
+    # batch = {"tokens": [B, C], "start": scalar | [B]}
+    extend: Optional[Callable[[Pytree, Pytree, Dict],
+                              Tuple[jax.Array, Pytree]]] = None
+
+    def init(self, key) -> Pytree:
+        return init_params(self.specs, key)
+
+    def abstract(self) -> Pytree:
+        return abstract_params(self.specs)
+
+    def axes(self) -> Pytree:
+        return logical_axes(self.specs)
+
+    @cached_property
+    def n_params(self) -> int:
+        return param_count(self.specs)
+
+    @cached_property
+    def n_bytes(self) -> int:
+        return param_bytes(self.specs)
+
+    @cached_property
+    def n_active_params(self) -> int:
+        """Params touched per token (MoE experts scaled by K/E)."""
+        cfg = self.cfg
+        if not cfg.n_experts:
+            return self.n_params
+        total = 0.0
+
+        def walk(tree):
+            nonlocal total
+            if isinstance(tree, dict):
+                for v in tree.values():
+                    walk(v)
+                return
+            s: Spec = tree
+            n = 1
+            for d in s.shape:
+                n *= d
+            if "experts" in s.axes:
+                n = n * cfg.experts_per_token / cfg.n_experts
+            total += n
+
+        walk(self.specs)
+        return int(total)
+
+
+# ---------------------------------------------------------------------
+# decoder-only families (dense / moe / ssm / hybrid / vlm)
+# ---------------------------------------------------------------------
+
+def _build_decoder(cfg: ModelConfig) -> ModelAPI:
+    specs = {"embed": L.embed_specs(cfg), "stack": T.stack_specs(cfg)}
+
+    def _hidden_full(params, tokens, kv_src, want_cache, remat, attn_impl):
+        x = constrain_batch(L.embed_tokens(params["embed"], cfg, tokens))
+        h, cache = T.forward_full(params["stack"], cfg, x, kv_src=kv_src,
+                                  want_cache=want_cache, remat=remat,
+                                  attn_impl=attn_impl)
+        h = rms_norm(h, params["embed"]["final_norm"], cfg.norm_eps)
+        return h, cache
+
+    def loss(params, batch, *, remat: bool = True, attn_impl: str = "auto"):
+        h, _ = _hidden_full(params, batch["tokens"], batch.get("vision"),
+                            False, remat, attn_impl)
+        return chunked_ce_loss(h, L.head_matrix(params["embed"], cfg),
+                               batch["labels"], batch.get("loss_mask"))
+
+    def prefill(params, batch, *, attn_impl: str = "auto"):
+        h, cache = _hidden_full(params, batch["tokens"],
+                                batch.get("vision"), True, False, attn_impl)
+        nxt = top1_logits(h[:, -1], L.head_matrix(params["embed"], cfg))
+        return nxt, cache
+
+    def decode(params, cache, batch):
+        x = L.embed_tokens(params["embed"], cfg, batch["tokens"])
+        h, cache = T.forward_step(params["stack"], cfg, x, cache,
+                                  batch["pos"])
+        h = rms_norm(h, params["embed"]["final_norm"], cfg.norm_eps)
+        nxt = top1_logits(h, L.head_matrix(params["embed"], cfg))
+        return nxt, cache
+
+    def extend(params, cache, batch):
+        if "vision" in batch:     # VLM admission: seed cross-KV once
+            cache = T.seed_cross_cache(params["stack"], cfg,
+                                       batch["vision"], cache)
+        x = L.embed_tokens(params["embed"], cfg, batch["tokens"])
+        h, cache = T.forward_extend(params["stack"], cfg, x, cache,
+                                    batch["start"])
+        h = rms_norm(h, params["embed"]["final_norm"], cfg.norm_eps)
+        nxt = top1_logits(h[:, -1], L.head_matrix(params["embed"], cfg))
+        return nxt, cache
+
+    return ModelAPI(cfg, specs, loss, prefill, decode,
+                    lambda b, s: T.cache_specs(cfg, b, s), extend)
+
+
+# ---------------------------------------------------------------------
+# encoder-decoder (whisper)
+# ---------------------------------------------------------------------
+
+def _build_encdec(cfg: ModelConfig) -> ModelAPI:
+    # encoder: plain non-causal dense stack (frames arrive pre-embedded).
+    enc_cfg = dataclasses.replace(
+        cfg, encoder_decoder=False, n_layers=cfg.n_encoder_layers,
+        cross_attn_period=0, rope_theta=cfg.rope_theta)
+    # decoder: cross-attention on every layer.
+    dec_cfg = dataclasses.replace(
+        cfg, encoder_decoder=False, cross_attn_period=1, cross_attn_offset=0)
+    specs = {
+        "embed": L.embed_specs(cfg),
+        "enc_norm": L.norm_spec(cfg),
+        "encoder": T.stack_specs(enc_cfg),
+        "decoder": T.stack_specs(dec_cfg),
+    }
+
+    def encode(params, frames, *, attn_impl="auto"):
+        h, _ = T.forward_full(params["encoder"], enc_cfg, frames,
+                              causal=False, attn_impl=attn_impl)
+        return rms_norm(h, params["enc_norm"], cfg.norm_eps)
+
+    def loss(params, batch, *, remat: bool = True, attn_impl: str = "auto"):
+        enc = encode(params, batch["frames"], attn_impl=attn_impl)
+        x = L.embed_tokens(params["embed"], cfg, batch["tokens"])
+        h, _ = T.forward_full(params["decoder"], dec_cfg, x, kv_src=enc,
+                              remat=remat, attn_impl=attn_impl)
+        h = rms_norm(h, params["embed"]["final_norm"], cfg.norm_eps)
+        return chunked_ce_loss(h, L.head_matrix(params["embed"], cfg),
+                               batch["labels"], batch.get("loss_mask"))
+
+    def prefill(params, batch, *, attn_impl: str = "auto"):
+        """Encode frames + prefill the decoder prompt. The self-KV cache
+        is padded to max_target_len so decode steps can extend it."""
+        enc = encode(params, batch["frames"], attn_impl=attn_impl)
+        x = L.embed_tokens(params["embed"], cfg, batch["tokens"])
+        h, cache = T.forward_full(params["decoder"], dec_cfg, x, kv_src=enc,
+                                  want_cache=True, attn_impl=attn_impl)
+        T0 = batch["tokens"].shape[1]
+        pad = cfg.max_target_len - T0
+        if pad > 0:
+            cache = {g: {n: (jnp.pad(a, ((0, 0), (0, 0), (0, pad),
+                                         (0, 0), (0, 0)))
+                             if n in ("k", "v") else a)
+                         for n, a in c.items()}
+                     for g, c in cache.items()}
+        h = rms_norm(h, params["embed"]["final_norm"], cfg.norm_eps)
+        nxt = top1_logits(h[:, -1], L.head_matrix(params["embed"], cfg))
+        return nxt, cache
+
+    def decode(params, cache, batch):
+        x = L.embed_tokens(params["embed"], cfg, batch["tokens"])
+        h, cache = T.forward_step(params["decoder"], dec_cfg, x, cache,
+                                  batch["pos"])
+        h = rms_norm(h, params["embed"]["final_norm"], cfg.norm_eps)
+        nxt = top1_logits(h, L.head_matrix(params["embed"], cfg))
+        return nxt, cache
+
+    def cache_specs(batch: int, seq: int) -> Pytree:
+        """seq = ENCODER length (the assigned shape's seq_len); decoder
+        self-KV is bounded by max_target_len by construction."""
+        base = T.cache_specs(dec_cfg, batch, cfg.max_target_len)
+        out = {}
+        for k, c in base.items():
+            c = dict(c)
+            for n in ("ck", "cv"):
+                c[n] = jax.ShapeDtypeStruct(
+                    (c[n].shape[0], batch, seq, cfg.n_kv_heads,
+                     cfg.head_dim), c[n].dtype)
+            out[k] = c
+        return out
+
+    return ModelAPI(cfg, specs, loss, prefill, decode, cache_specs)
+
+
+def build(cfg: ModelConfig) -> ModelAPI:
+    api = _build_encdec(cfg) if cfg.encoder_decoder else _build_decoder(cfg)
+    api.specs = retype_specs(api.specs, cfg.dtype)
+    return api

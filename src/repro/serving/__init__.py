@@ -1,0 +1,10 @@
+"""Serving substrate: paged KV pool, per-instance engine, cluster runtime,
+and the discrete-event cluster simulator."""
+
+from .kv_cache import PagedKVPool, PageTable
+from .engine import Engine, EngineConfig
+from .cluster import ClusterRuntime
+from .simulator import SimConfig, Simulator, simulate
+
+__all__ = ["PagedKVPool", "PageTable", "Engine", "EngineConfig",
+           "ClusterRuntime", "SimConfig", "Simulator", "simulate"]

@@ -1,0 +1,115 @@
+"""ClusterRuntime: the real-engine distributed serving loop.
+
+GlobalScheduler (E2) in front of N Engines. Used by the examples and
+integration tests to validate the full control plane — scheduling,
+prefix reuse, eviction notifications, failover — against actual model
+forwards. Virtual time advances per engine iteration (the CPU demo has
+no meaningful wall clock for a TPU cost model).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from ..core.cost_model import CostModel, cost_model_for
+from ..core.global_scheduler import GlobalScheduler, GlobalSchedulerConfig
+from ..core.request import Request, RequestState
+from .engine import Engine, EngineConfig
+
+
+class ClusterRuntime:
+    def __init__(self, model_cfg, params, num_instances: int,
+                 engine_cfg: Optional[EngineConfig] = None,
+                 scheduler_cfg: Optional[GlobalSchedulerConfig] = None,
+                 cost_model: Optional[CostModel] = None,
+                 policy: str = "e2"):
+        self.policy = policy
+        self.gs = GlobalScheduler(
+            num_instances=num_instances,
+            cost_model=cost_model or cost_model_for("smollm-360m"),
+            config=scheduler_cfg or GlobalSchedulerConfig(
+                capacity_tokens=(engine_cfg or EngineConfig()).capacity_tokens))
+        self.engines: Dict[int, Engine] = {}
+        base = engine_cfg or EngineConfig()
+        for i in range(num_instances):
+            ec = dataclasses.replace(base, instance_id=i)
+            self.engines[i] = Engine(
+                model_cfg, params, ec,
+                on_evict=lambda inst, ids: self.gs.on_evictions(inst, ids))
+        self._rr_next = 0
+        self.finished: List[Request] = []
+
+    # ---- request intake -------------------------------------------------
+
+    def submit(self, request: Request, now: float) -> int:
+        if self.policy == "rr":
+            alive = self.gs.alive_instances()
+            inst = alive[self._rr_next % len(alive)]
+            self._rr_next += 1
+            request.instance = inst
+            request.scheduled_time = now
+        else:
+            decision = self.gs.schedule(request, now)
+            inst = decision.instance
+        self.engines[inst].scheduler.enqueue(request, now)
+        return inst
+
+    # ---- the loop ----------------------------------------------------------
+
+    def step(self, now: float) -> List[Request]:
+        done: List[Request] = []
+        for inst, eng in self.engines.items():
+            if eng.failed or not self.gs.instances[inst].alive:
+                continue
+            for r in eng.step(now):
+                self.gs.on_request_complete(r, now)
+                done.append(r)
+        self.finished.extend(done)
+        return done
+
+    def run(self, requests: Sequence[Request], *, dt: float = 0.05,
+            max_iters: int = 100_000) -> List[Request]:
+        """Drive arrivals (by request.arrival_time) + engine iterations
+        in virtual time until everything finishes."""
+        pending = sorted(requests, key=lambda r: r.arrival_time)
+        now, i, n_total = 0.0, 0, len(pending)
+        it = 0
+        while len(self.finished) < n_total:
+            it += 1
+            if it > max_iters:
+                raise RuntimeError("cluster run did not converge")
+            while i < len(pending) and pending[i].arrival_time <= now:
+                self.submit(pending[i], now)
+                i += 1
+            self.step(now)
+            now += dt
+            # idle fast-forward to the next arrival
+            if i < len(pending) and all(e.depth == 0
+                                        for e in self.engines.values()
+                                        if not e.failed):
+                now = max(now, pending[i].arrival_time)
+        return self.finished
+
+    # ---- fault handling --------------------------------------------------------
+
+    def fail_instance(self, inst: int, now: float) -> int:
+        """Hard-kill an instance; re-route its in-flight requests."""
+        reqs = self.engines[inst].fail()
+        self.gs.on_instance_failure(inst)
+        for r in reqs:
+            self.submit(r, now)
+        return len(reqs)
+
+    def add_instance(self, model_cfg, params, now: float,
+                     engine_cfg: Optional[EngineConfig] = None) -> int:
+        """Elastic scale-up: register and start a fresh instance."""
+        inst = max(self.engines) + 1
+        ec = dataclasses.replace(engine_cfg or EngineConfig(),
+                                 instance_id=inst)
+        self.engines[inst] = Engine(
+            model_cfg, params, ec,
+            on_evict=lambda i, ids: self.gs.on_evictions(i, ids))
+        self.gs.add_instance(inst)
+        return inst

@@ -1,0 +1,326 @@
+"""Per-instance continuous-batching engine with REAL JAX forwards.
+
+This is the control-plane-correctness engine: a tiny model runs actual
+prefill/decode math on CPU while the LocalScheduler drives iteration-
+level scheduling (priority groups, chunked prefill, LRU eviction). The
+radix-tree prefix reuse is real: cached attention-KV slabs are copied
+into a new request's cache so its prefill skips the shared prefix
+entirely — the compute saving Preble schedules for.
+
+Reuse granularity (DESIGN.md §5):
+  * attention KV      — token granularity (exact: KV depends only on the
+                        token prefix; RoPE positions are absolute);
+  * recurrent state   — snapshot granularity: the state after a full
+    (mamba/rwkv)        prompt is stored at the radix leaf; a new request
+                        reuses the longest snapshot boundary <= its
+                        matched length and recomputes the remainder.
+
+The production path (TPU pods) replaces this engine's forwards with the
+pjit'd ones from launch/serve.py; the scheduling logic is shared.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.local_scheduler import Batch, LocalScheduler, LocalSchedulerConfig
+from ..core.request import Request, RequestState
+from ..models import zoo, transformer as T
+from .kv_cache import PagedKVPool
+
+Pytree = Any
+
+
+@dataclass
+class EngineConfig:
+    instance_id: int = 0
+    max_context: int = 256          # per-request cache length (linear)
+    max_batch_requests: int = 8
+    chunk_size: int = 32            # Sarathi chunk
+    max_batch_tokens: int = 128
+    capacity_tokens: int = 16384    # KV pool budget (host accounting)
+    page_size: int = 16
+    priority_groups: int = 10
+    fcfs: bool = False
+
+
+def _cache_zeros(specs: Pytree) -> Pytree:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), specs)
+
+
+def _cache_concat(caches: List[Pytree]) -> Pytree:
+    return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=1), *caches)
+
+
+def _cache_index(cache: Pytree, i: int) -> Pytree:
+    return jax.tree.map(lambda x: x[:, i:i + 1], cache)
+
+
+class Engine:
+    def __init__(self, cfg, params, econf: EngineConfig,
+                 on_evict: Optional[Callable] = None):
+        # the demo engine serves full attention; SWA only changes
+        # semantics beyond max_context, which the demo never reaches
+        self.model_cfg = dataclasses.replace(cfg, sliding_window=0)
+        self.api = zoo.build(self.model_cfg)
+        self.params = params
+        self.econf = econf
+        self.has_recurrent = any(
+            p.mixer in ("mamba", "rwkv") for p in T.layer_plan(self.model_cfg))
+        self.scheduler = LocalScheduler(
+            LocalSchedulerConfig(
+                instance_id=econf.instance_id,
+                capacity_tokens=econf.capacity_tokens,
+                chunk_size=econf.chunk_size,
+                max_batch_tokens=econf.max_batch_tokens,
+                max_batch_requests=econf.max_batch_requests,
+                priority_groups=econf.priority_groups,
+                fcfs=econf.fcfs),
+            on_evict=self._on_evict)
+        self._ext_evict = on_evict
+        self.pool = PagedKVPool(econf.capacity_tokens // econf.page_size,
+                                econf.page_size)
+        # per-request live state: cache pytree + next input token
+        self.live: Dict[int, Dict[str, Any]] = {}
+        # radix node_id -> attention-KV slab {p_j: {"k": [G,1,span,KH,D],...}}
+        self.kv_store: Dict[int, Pytree] = {}
+        # exact-prefix -> recurrent state snapshot (leaf granularity)
+        self.state_store: Dict[Tuple[int, ...], Pytree] = {}
+        self._cache_spec = self.api.cache_specs(1, econf.max_context)
+        self._decode_fn = jax.jit(self._decode_impl, donate_argnums=(0,))
+        self.stats = {"reused_tokens": 0, "prefilled_tokens": 0,
+                      "decode_steps": 0, "iterations": 0}
+        self.failed = False
+
+    def _decode_impl(self, caches, tokens, pos):
+        nxt, caches = self.api.decode(self.params, caches,
+                                      {"tokens": tokens, "pos": pos})
+        return nxt, caches
+
+    # ---- eviction hook ------------------------------------------------------
+
+    def _on_evict(self, instance_id: int, node_ids: List[int]) -> None:
+        for nid in node_ids:
+            self.kv_store.pop(nid, None)
+        if self._ext_evict is not None:
+            self._ext_evict(instance_id, node_ids)
+
+    # ---- admission: seed a request's cache from the radix KV store ----------
+
+    def _admit(self, r: Request, now: float) -> None:
+        cache = _cache_zeros(self._cache_spec)
+        m = self.scheduler.tree.match(r.tokens, now=now)
+        reuse = 0
+        if m.matched_len and not self.has_recurrent:
+            reuse = self._seed_attn_kv(cache, m)
+        elif m.matched_len and self.has_recurrent:
+            reuse = self._seed_snapshot(cache, r.tokens, m.matched_len)
+        # a fully-cached prompt must still run its LAST token through
+        # the model — that forward produces the first output token
+        # (same rule as vLLM/SGLang: reuse cap = prompt_len - 1)
+        reuse = min(reuse, r.prompt_len - 1)
+        if self.pool.free_tokens() >= (r.prompt_len - reuse
+                                       + r.max_new_tokens):
+            self.pool.create(r.request_id)
+            self.pool.append(r.request_id,
+                             r.prompt_len - reuse + r.max_new_tokens)
+        self.live[r.request_id] = {"cache": cache, "next": None}
+        r.prefill_done = reuse
+        self.stats["reused_tokens"] += reuse
+
+    def _seed_attn_kv(self, cache: Pytree, m) -> int:
+        """Copy cached KV slabs of the matched path into cache[:reuse]."""
+        off = 0
+        for node in m.path:
+            slab = self.kv_store.get(node.node_id)
+            if slab is None:
+                break
+            span = len(node.tokens)
+            for pj, c in slab.items():
+                for name in ("k", "v"):
+                    cache[pj][name] = jax.lax.dynamic_update_slice(
+                        cache[pj][name], c[name],
+                        (0, 0, off, 0, 0))
+            off += span
+        # partial tail inside the next node
+        if off < m.matched_len and m.last_node is not None \
+                and m.last_node_matched < len(m.last_node.tokens):
+            slab = self.kv_store.get(m.last_node.node_id)
+            if slab is not None:
+                take = m.last_node_matched
+                for pj, c in slab.items():
+                    for name in ("k", "v"):
+                        part = jax.lax.dynamic_slice(
+                            c[name], (0, 0, 0, 0, 0),
+                            (c[name].shape[0], 1, take,
+                             c[name].shape[3], c[name].shape[4]))
+                        cache[pj][name] = jax.lax.dynamic_update_slice(
+                            cache[pj][name], part, (0, 0, off, 0, 0))
+                off += take
+        return off
+
+    def _seed_snapshot(self, cache: Pytree, tokens, matched_len: int) -> int:
+        """Recurrent/hybrid archs: reuse the longest stored snapshot
+        whose key is a prefix of this prompt. A snapshot is a FULL cache
+        image at its boundary L: recurrent states after L tokens plus
+        the first L positions of every attention-KV buffer."""
+        best_len, best = 0, None
+        for key, snap in self.state_store.items():
+            L = len(key)
+            if best_len < L <= matched_len and tuple(tokens[:L]) == key:
+                best_len, best = L, snap
+        if best is None:
+            return 0
+        for pj in cache:
+            for name, arr in best[pj].items():
+                if arr.shape == cache[pj][name].shape:
+                    cache[pj][name] = arr
+                else:   # k/v slab [G, 1, L, KH, D] -> write at [0:L]
+                    cache[pj][name] = jax.lax.dynamic_update_slice(
+                        cache[pj][name], arr, (0,) * arr.ndim)
+        return best_len
+
+    def _snapshot_full_cache(self, r: Request, boundary: int) -> None:
+        """Copy the request's cache at ``boundary`` consumed tokens
+        (called mid-prefill at prompt_len - 1, so a future identical
+        prompt can reuse everything but its final token). Copies are
+        mandatory: live buffers are later donated to the decode jit."""
+        key = tuple(r.tokens[:boundary])
+        if key in self.state_store:
+            return
+        cache = self.live[r.request_id]["cache"]
+        snap = {}
+        for pj, c in cache.items():
+            snap[pj] = {}
+            for name, arr in c.items():
+                if name in ("k", "v") and arr.ndim == 5:
+                    arr = arr[:, :, :boundary]
+                snap[pj][name] = jnp.array(arr, copy=True)
+        self.state_store[key] = snap
+
+    # ---- post-prefill: donate KV slabs / snapshots to the store -------------
+
+    def _store_prefix(self, r: Request, now: float) -> None:
+        cache = self.live[r.request_id]["cache"]
+        path = self.scheduler.tree.insert(
+            r.tokens, instance=self.econf.instance_id, now=now)
+        if not self.has_recurrent:
+            off = 0
+            for node in path:
+                span = len(node.tokens)
+                if node.node_id not in self.kv_store:
+                    slab = {}
+                    for pj, c in cache.items():
+                        slab[pj] = {
+                            name: jax.lax.dynamic_slice(
+                                c[name], (0, 0, off, 0, 0),
+                                (c[name].shape[0], 1, span,
+                                 c[name].shape[3], c[name].shape[4]))
+                            for name in ("k", "v") if name in c}
+                    self.kv_store[node.node_id] = slab
+                off += span
+        # (recurrent archs snapshot mid-prefill at prompt_len - 1 —
+        # see _snapshot_full_cache; nothing to store here)
+
+    # ---- the iteration -------------------------------------------------------
+
+    def step(self, now: float) -> List[Request]:
+        """Run one continuous-batching iteration; returns finished reqs."""
+        batch = self.scheduler.form_batch(now)
+        if not batch.items:
+            return []
+        self.stats["iterations"] += 1
+
+        # -- prefill items (each runs alone: variable chunk/position) --
+        newly_prefilled: List[Request] = []
+        for item in batch.items:
+            if item.phase != "prefill":
+                continue
+            r = item.request
+            if r.request_id not in self.live:
+                self._admit(r, now)
+                # engine may reuse less than the scheduler assumed
+                # (recurrent snapshot granularity) — take the true value
+                item.chunk_tokens = min(item.chunk_tokens,
+                                        r.prompt_len - r.prefill_done)
+            start = r.prefill_done
+            chunk = min(item.chunk_tokens, r.prompt_len - start)
+            if self.has_recurrent and start < r.prompt_len - 1:
+                # stop at the penultimate token so the state snapshot
+                # lands at a reusable boundary (reuse cap = len - 1)
+                chunk = min(chunk, r.prompt_len - 1 - start)
+            item.chunk_tokens = chunk
+            if chunk <= 0:
+                continue
+            toks = jnp.asarray(r.tokens[start:start + chunk], jnp.int32)
+            cache = self.live[r.request_id]["cache"]
+            nxt, cache = self.api.extend(
+                self.params, cache, {"tokens": toks[None],
+                                     "start": jnp.int32(start)})
+            self.live[r.request_id]["cache"] = cache
+            self.stats["prefilled_tokens"] += chunk
+            if self.has_recurrent and start + chunk == r.prompt_len - 1:
+                self._snapshot_full_cache(r, r.prompt_len - 1)
+            if start + chunk >= r.prompt_len:
+                # prefill emits the FIRST generated token
+                tok = int(nxt[0])
+                self.live[r.request_id]["next"] = tok
+                r.output_tokens.append(tok)
+                newly_prefilled.append(r)
+
+        # -- decode items (stacked into one batched step) --
+        dec = [it.request for it in batch.items if it.phase == "decode"]
+        if dec:
+            caches = _cache_concat(
+                [self.live[r.request_id]["cache"] for r in dec])
+            tokens = jnp.asarray(
+                [self.live[r.request_id]["next"] for r in dec], jnp.int32)
+            # the token being fed sits at context position
+            # prompt_len + (#output tokens already in the cache); the
+            # first output token (from prefill) is not yet cached.
+            pos = jnp.asarray(
+                [r.prompt_len + len(r.output_tokens) - 1 for r in dec],
+                jnp.int32)
+            nxt, caches = self._decode_fn(caches, tokens, pos)
+            nxt = np.asarray(nxt)
+            for i, r in enumerate(dec):
+                self.live[r.request_id]["cache"] = _cache_index(caches, i)
+                self.live[r.request_id]["next"] = int(nxt[i])
+            self.stats["decode_steps"] += len(dec)
+
+        # -- advance scheduler state --
+        finished = self.scheduler.complete_iteration(batch, now)
+        for r in newly_prefilled:
+            self._store_prefix(r, now)
+        for item in batch.items:
+            r = item.request
+            if item.phase == "decode" and r.output_tokens:
+                r.output_tokens[-1] = self.live[r.request_id]["next"]
+        for r in finished:
+            self.live.pop(r.request_id, None)
+            self.pool.release(r.request_id)
+        return finished
+
+    # ---- failure ---------------------------------------------------------------
+
+    def fail(self) -> List[Request]:
+        """Simulate instance death: drop all device state, return the
+        in-flight requests for global re-scheduling."""
+        self.failed = True
+        self.live.clear()
+        self.kv_store.clear()
+        self.state_store.clear()
+        self.pool = PagedKVPool(self.econf.capacity_tokens
+                                // self.econf.page_size,
+                                self.econf.page_size)
+        return self.scheduler.drain()
+
+    @property
+    def depth(self) -> int:
+        return self.scheduler.depth

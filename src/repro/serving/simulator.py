@@ -1,0 +1,190 @@
+"""Discrete-event cluster simulator — reproduces the paper's experiments
+at 2–400-GPU scale on one CPU.
+
+The schedulers under test are the REAL ones (GlobalScheduler + one
+LocalScheduler per instance, the exact code the engine runs); only the
+model forward is replaced by its service-time estimate from the same
+CostModel that E2's Algorithm 2 uses (paper App. B shows prefill/decode
+time is linear in tokens — the regression the paper itself fits).
+
+Baselines:
+  policy="e2"  — Preble (this paper)
+  policy="rr"  — round-robin data parallelism + per-instance prefix
+                 caching (the paper's SGLang/vLLM baseline setup)
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+import statistics
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from ..core.cost_model import CostModel, cost_model_for
+from ..core.global_scheduler import GlobalScheduler, GlobalSchedulerConfig
+from ..core.local_scheduler import LocalScheduler, LocalSchedulerConfig
+from ..core.request import Request, RequestState
+
+
+@dataclass
+class SimConfig:
+    num_instances: int = 4
+    policy: str = "e2"                  # e2 | rr
+    model: str = "mistral-7b"
+    chips_per_instance: int = 1
+    capacity_tokens: int = 400_000      # KV capacity per instance
+    chunk_size: int = 512
+    max_batch_tokens: int = 4096
+    max_batch_requests: int = 256
+    priority_groups: int = 10
+    fcfs_local: bool = False            # ablation: disable priority queue
+    window: float = 180.0
+    th_bal: float = 2.0
+    imbal_ratio: float = 0.85
+    enable_rebalance: bool = True       # ablation switches
+    enable_autoscale: bool = True
+    enable_pd_balance: bool = True
+    speed_factors: Optional[Dict[int, float]] = None  # stragglers
+
+
+@dataclass
+class SimResult:
+    finished: List[Request]
+    makespan: float
+    stats: Dict[str, float] = field(default_factory=dict)
+
+    def latencies(self) -> List[float]:
+        return [r.latency() for r in self.finished]
+
+    def summary(self) -> Dict[str, float]:
+        lats = sorted(self.latencies())
+        if not lats:
+            return {}
+        n = len(lats)
+        ttfts = sorted(r.ttft() for r in self.finished)
+        return {
+            "n": n,
+            "avg_latency": sum(lats) / n,
+            "p50_latency": lats[n // 2],
+            "p99_latency": lats[min(int(n * 0.99), n - 1)],
+            "avg_ttft": sum(ttfts) / n,
+            "p99_ttft": ttfts[min(int(n * 0.99), n - 1)],
+            "makespan": self.makespan,
+            "throughput_rps": n / self.makespan if self.makespan else 0.0,
+            **self.stats,
+        }
+
+
+class Simulator:
+    def __init__(self, cfg: SimConfig):
+        self.cfg = cfg
+        self.cm = cost_model_for(cfg.model, cfg.chips_per_instance)
+        gs_cfg = GlobalSchedulerConfig(
+            window=cfg.window, th_bal=cfg.th_bal,
+            imbal_ratio=cfg.imbal_ratio,
+            capacity_tokens=cfg.capacity_tokens)
+        if not cfg.enable_rebalance:
+            gs_cfg.th_bal = 1e18
+        if not cfg.enable_autoscale:
+            gs_cfg.autoscale_frac = 1e18
+        if not cfg.enable_pd_balance:
+            gs_cfg.imbal_ratio = 1.1        # ratio can never exceed 1
+        self.gs = GlobalScheduler(num_instances=cfg.num_instances,
+                                  cost_model=self.cm, config=gs_cfg)
+        if cfg.speed_factors:
+            for i, f in cfg.speed_factors.items():
+                self.gs.set_speed_factor(i, f)
+        self.locals: Dict[int, LocalScheduler] = {}
+        for i in range(cfg.num_instances):
+            self.locals[i] = LocalScheduler(
+                LocalSchedulerConfig(
+                    instance_id=i, capacity_tokens=cfg.capacity_tokens,
+                    chunk_size=cfg.chunk_size,
+                    max_batch_tokens=cfg.max_batch_tokens,
+                    max_batch_requests=cfg.max_batch_requests,
+                    priority_groups=cfg.priority_groups,
+                    fcfs=cfg.fcfs_local,
+                    window=cfg.window),
+                on_evict=lambda inst, ids: self.gs.on_evictions(inst, ids))
+        self._busy: Dict[int, bool] = {i: False for i in self.locals}
+        self._rr = itertools.cycle(range(cfg.num_instances))
+        self._ctx_sum: Dict[int, float] = {i: 0.0 for i in self.locals}
+        self._ctx_n: Dict[int, int] = {i: 0 for i in self.locals}
+
+    # ---- service-time model ------------------------------------------------
+
+    def _iter_time(self, inst: int, batch) -> float:
+        # cache-aware prefill: only missed tokens burn compute — the first
+        # chunk of a request skips its cached prefix (already accounted by
+        # LocalScheduler chunking from cached_len)
+        n_dec = sum(1 for it in batch.items if it.phase == "decode")
+        avg_ctx = None
+        if self._ctx_n[inst]:
+            avg_ctx = self._ctx_sum[inst] / self._ctx_n[inst]
+        t = self.cm.batch_time(batch.prefill_tokens, n_dec, avg_ctx)
+        sf = self.cfg.speed_factors or {}
+        return t * sf.get(inst, 1.0)
+
+    # ---- main loop ------------------------------------------------------------
+
+    def run(self, requests: Sequence[Request]) -> SimResult:
+        cfg = self.cfg
+        events: List[Tuple[float, int, str, object]] = []
+        seq = itertools.count()
+        for r in requests:
+            heapq.heappush(events,
+                           (r.arrival_time, next(seq), "arrival", r))
+        finished: List[Request] = []
+        now = 0.0
+
+        def kick(inst: int, t: float) -> None:
+            if self._busy[inst]:
+                return
+            ls = self.locals[inst]
+            if ls.depth == 0:
+                return
+            batch = ls.form_batch(t)
+            if not batch.items:
+                return
+            self._busy[inst] = True
+            dt = self._iter_time(inst, batch)
+            heapq.heappush(events,
+                           (t + dt, next(seq), "iter_done", (inst, batch)))
+
+        while events:
+            now, _, kind, payload = heapq.heappop(events)
+            if kind == "arrival":
+                r: Request = payload
+                if cfg.policy == "rr":
+                    inst = next(self._rr)
+                    r.instance = inst
+                    r.scheduled_time = now
+                else:
+                    inst = self.gs.schedule(r, now).instance
+                self.locals[inst].enqueue(r, now)
+                kick(inst, now)
+            else:
+                inst, batch = payload
+                self._busy[inst] = False
+                for it in batch.items:
+                    if it.phase == "decode":
+                        self._ctx_sum[inst] += (it.request.prompt_len
+                                                + len(it.request.output_tokens))
+                        self._ctx_n[inst] += 1
+                done = self.locals[inst].complete_iteration(batch, now)
+                for r in done:
+                    self.gs.on_request_complete(r, now)
+                    finished.append(r)
+                kick(inst, now)
+
+        stats = {f"gs_{k}": float(v) for k, v in self.gs.stats.items()}
+        reused = sum(r.cached_len for r in finished)
+        total_prompt = sum(r.prompt_len for r in finished)
+        stats["cache_hit_frac"] = (reused / total_prompt
+                                   if total_prompt else 0.0)
+        return SimResult(finished, makespan=now, stats=stats)
+
+
+def simulate(requests: Sequence[Request], **kw) -> SimResult:
+    return Simulator(SimConfig(**kw)).run(requests)

@@ -1,0 +1,110 @@
+"""train_step factory: remat'd loss, grad accumulation, clipping,
+optional int8 error-feedback compression, AdamW — one jit-able function
+the launcher pjits over the production mesh.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .optimizer import (AdamWConfig, adamw_init, adamw_update,
+                        clip_by_global_norm, ef8_compress, ef8_init,
+                        warmup_cosine)
+
+Pytree = Any
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    adamw: AdamWConfig = field(default_factory=AdamWConfig)
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    grad_accum: int = 1             # microbatches per step
+    compress_grads: bool = False    # int8 error-feedback
+    quant_moments: bool = False     # int8 AdamW moments (8-bit-Adam)
+    remat: bool = True
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class TrainState:
+    params: Pytree
+    opt: Dict[str, Pytree]
+    ef_error: Optional[Pytree]
+    step: jax.Array
+
+    def as_dict(self) -> Dict:
+        d = {"params": self.params, "opt": self.opt, "step": self.step}
+        if self.ef_error is not None:
+            d["ef_error"] = self.ef_error
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "TrainState":
+        return cls(params=d["params"], opt=d["opt"],
+                   ef_error=d.get("ef_error"), step=d["step"])
+
+
+def init_state(params: Pytree, cfg: TrainConfig) -> TrainState:
+    return TrainState(
+        params=params,
+        opt=adamw_init(params, quant_moments=cfg.quant_moments),
+        ef_error=ef8_init(params) if cfg.compress_grads else None,
+        step=jnp.zeros((), jnp.int32))
+
+
+def make_train_step(api, cfg: TrainConfig
+                    ) -> Callable[[TrainState, Dict], Tuple[TrainState, Dict]]:
+    """api: models.zoo.ModelAPI. Returns train_step(state, batch).
+
+    batch leaves are [global_batch, ...]; with grad_accum > 1 the batch
+    dim is split into microbatches scanned sequentially (activation
+    memory / accum trade)."""
+    sched = warmup_cosine(cfg.adamw.lr, cfg.warmup_steps, cfg.total_steps)
+
+    def loss_fn(params, mb):
+        return api.loss(params, mb, remat=cfg.remat)
+
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def train_step(state: TrainState, batch: Dict) -> Tuple[TrainState, Dict]:
+        if cfg.grad_accum > 1:
+            def split(x):
+                B = x.shape[0]
+                mb = B // cfg.grad_accum
+                return x.reshape(cfg.grad_accum, mb, *x.shape[1:])
+            mbs = jax.tree.map(split, batch)
+
+            def body(carry, mb):
+                loss_sum, g_sum = carry
+                loss, g = grad_fn(state.params, mb)
+                g_sum = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_sum, g)
+                return (loss_sum + loss, g_sum), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              state.params)
+            (loss, grads), _ = jax.lax.scan(body, (jnp.zeros(()), g0), mbs)
+            loss = loss / cfg.grad_accum
+            grads = jax.tree.map(lambda g: g / cfg.grad_accum, grads)
+        else:
+            loss, grads = grad_fn(state.params, batch)
+
+        ef_error = state.ef_error
+        if cfg.compress_grads:
+            grads, ef_error = ef8_compress(grads, ef_error)
+        grads, gnorm = clip_by_global_norm(grads, cfg.adamw.clip_norm)
+        lr = sched(state.step)
+        params, opt = adamw_update(grads, state.opt, state.params,
+                                   cfg.adamw, lr,
+                                   quant=cfg.quant_moments)
+        new_state = TrainState(params=params, opt=opt, ef_error=ef_error,
+                               step=state.step + 1)
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        return new_state, metrics
+
+    return train_step

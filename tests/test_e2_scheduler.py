@@ -1,0 +1,162 @@
+"""Behavioural tests for E2 + the global scheduler (Algorithms 1 & 2)."""
+
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (GlobalScheduler, GlobalSchedulerConfig, Request,
+                        cost_model_for)
+
+
+def make_sched(n=4, **cfg_kw):
+    cfg = GlobalSchedulerConfig(**cfg_kw)
+    return GlobalScheduler(num_instances=n, config=cfg)
+
+
+def req(tokens, out=8, t=0.0):
+    return Request(tokens=tuple(tokens), max_new_tokens=out, arrival_time=t)
+
+
+def test_first_request_explores():
+    gs = make_sched()
+    d = gs.schedule(req(range(100)), now=0.0)
+    assert d.mode == "explore"
+    assert d.cached_len == 0
+
+
+def test_shared_prefix_exploits_same_instance():
+    gs = make_sched(th_bal=100.0)  # disable rebalance for determinism
+    prefix = list(range(1000))
+    d0 = gs.schedule(req(prefix + [1, 2, 3]), now=0.0)
+    d1 = gs.schedule(req(prefix + [7, 8, 9]), now=0.1)
+    assert d1.mode == "exploit"
+    assert d1.instance == d0.instance
+    assert d1.cached_len == 1000
+
+
+def test_short_shared_prefix_explores():
+    """missed_len >= cached_len  =>  explore (Algorithm 1 condition)."""
+    gs = make_sched(th_bal=100.0)
+    prefix = [1, 2, 3]
+    gs.schedule(req(prefix + list(range(100, 200))), now=0.0)
+    d = gs.schedule(req(prefix + list(range(300, 400))), now=0.1)
+    assert d.mode in ("explore", "pd_balance")
+
+
+def test_explore_balances_across_instances():
+    """Unrelated requests should spread across instances, not pile up."""
+    gs = make_sched(th_bal=100.0)
+    chosen = set()
+    for k in range(8):
+        d = gs.schedule(req([k * 1000 + j for j in range(200)]), now=k * 0.01)
+        chosen.add(d.instance)
+    assert len(chosen) == 4, f"explore ignored load balancing: {chosen}"
+
+
+def test_exploit_prefers_longest_cached_instance():
+    gs = make_sched(th_bal=100.0)
+    long_pref = list(range(2000))
+    d0 = gs.schedule(req(long_pref + [1]), now=0.0)           # caches full path
+    # second instance caches only a shorter head via an explore request
+    d1 = gs.schedule(req(long_pref[:600] + list(range(9000, 9800))), now=0.1)
+    d2 = gs.schedule(req(long_pref + [2]), now=0.2)
+    assert d2.mode == "exploit"
+    assert d2.instance == d0.instance
+
+
+def test_rebalance_redirects_exploits():
+    gs = make_sched(th_bal=1.5, rebalance_every=0.0)
+    prefix = list(range(3000))
+    first = gs.schedule(req(prefix + [0]), now=0.0).instance
+    targets = set()
+    for k in range(30):
+        d = gs.schedule(req(prefix + [k + 1]), now=0.01 * (k + 1))
+        targets.add(d.instance)
+    assert len(targets) >= 2, "hot prefix never rebalanced to another instance"
+
+
+def test_autoscale_replicates_hot_prefix():
+    gs = make_sched(th_bal=1e9, autoscale_frac=0.001, autoscale_every=0.0,
+                    rebalance_every=1e9)
+    prefix = list(range(4000))
+    modes = set()
+    for k in range(40):
+        d = gs.schedule(req(prefix + [k]), now=0.05 * k)
+        modes.add(d.mode)
+    assert "autoscale" in modes
+    # after replication both copies serve exploits
+    insts = {gs.schedule(req(prefix + [100 + k]), now=3.0 + 0.01 * k).instance
+             for k in range(10)}
+    assert len(insts) >= 2
+
+
+def test_failure_reroutes_and_repairs_tree():
+    gs = make_sched(th_bal=100.0)
+    prefix = list(range(1500))
+    d0 = gs.schedule(req(prefix + [1]), now=0.0)
+    gs.on_instance_failure(d0.instance)
+    d1 = gs.schedule(req(prefix + [2]), now=0.1)
+    assert d1.instance != d0.instance
+    assert d1.instance in gs.alive_instances()
+    # prefix was only on the dead instance -> nothing cached -> explore
+    assert d1.mode in ("explore", "pd_balance")
+
+
+def test_elastic_add_instance_receives_load():
+    gs = make_sched(n=2, th_bal=100.0)
+    for k in range(6):
+        gs.schedule(req([k * 500 + j for j in range(300)]), now=0.01 * k)
+    gs.add_instance(7)
+    d = gs.schedule(req(list(range(77000, 77300))), now=1.0)
+    assert d.instance == 7, "fresh (idle) instance should win explore"
+
+
+def test_straggler_sheds_load():
+    gs = make_sched(n=2, th_bal=1e9)
+    gs.set_speed_factor(0, 25.0)
+    # seed both instances with one request of identical work
+    gs.schedule(req(list(range(0, 300))), now=0.0)
+    gs.schedule(req(list(range(1000, 1300))), now=0.01)
+    picks = [gs.schedule(req([50000 + 700 * k + j for j in range(300)]),
+                         now=0.02 + 0.01 * k).instance for k in range(8)]
+    assert picks.count(1) > picks.count(0)
+
+
+def test_eviction_notification_updates_tree():
+    gs = make_sched(th_bal=100.0)
+    d = gs.schedule(req(list(range(800))), now=0.0)
+    nodes = gs.tree.nodes_cached_on(d.instance)
+    assert nodes
+    gs.on_evictions(d.instance, [n.node_id for n in nodes], now=0.1)
+    assert gs.tree.nodes_cached_on(d.instance) == []
+
+
+def test_pd_balancing_routes_prefill_to_decode_heavy():
+    gs = make_sched(n=2, th_bal=1e9, imbal_ratio=0.6)
+    inst = gs.instances[0]
+    inst.add_work(0.0, prefill_sec=0.01, decode_sec=5.0)   # decode heavy
+    gs.instances[1].add_work(0.0, prefill_sec=5.0, decode_sec=0.01)
+    d = gs.schedule(req(list(range(500))), now=0.1)
+    assert d.mode == "pd_balance"
+    assert d.instance == 0
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 4), st.integers(1, 60)),
+                min_size=1, max_size=60))
+def test_scheduler_never_picks_dead_instance(plan):
+    """Property: under arbitrary request streams + failures, every decision
+    targets an alive instance and stats stay consistent."""
+    gs = make_sched(n=3, th_bal=2.0, rebalance_every=0.0, autoscale_every=0.0)
+    killed = set()
+    now = 0.0
+    for fam, extra in plan:
+        now += 0.01
+        tokens = [fam] * 64 + list(range(extra))
+        d = gs.schedule(req(tokens), now=now)
+        assert d.instance in gs.alive_instances()
+        if extra == 13 and len(killed) < 2:   # occasional failure injection
+            gs.on_instance_failure(d.instance)
+            killed.add(d.instance)
+    assert gs.stats["scheduled"] == len(plan)

@@ -1,0 +1,208 @@
+"""Integration: real-forward engine + cluster runtime — generation
+correctness under KV reuse, eviction pressure, failover, elasticity."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.core.request import Request
+from repro.models import zoo
+from repro.serving.cluster import ClusterRuntime
+from repro.serving.engine import Engine, EngineConfig
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = dataclasses.replace(reduced(ARCHS["smollm-360m"]), n_layers=2,
+                              dtype="float32")
+    api = zoo.build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    return cfg, api, params
+
+
+def _mk_requests(cfg, n, shared_len=24, tail=8, out=4, seed=0):
+    rng = np.random.default_rng(seed)
+    shared = tuple(rng.integers(1, cfg.vocab_size, shared_len).tolist())
+    return [Request(tokens=shared
+                    + tuple(rng.integers(1, cfg.vocab_size, tail).tolist()),
+                    max_new_tokens=out) for _ in range(n)]
+
+
+def _oracle(api, cfg, r):
+    toks = jnp.asarray(r.tokens)[None]
+    nxt, cache = api.prefill(api_params[0], {"tokens": toks}) \
+        if False else api.prefill(_oracle.params, {"tokens": toks})
+    outs = [int(nxt[0])]
+    pad = r.max_new_tokens
+    cache = {g: {n: (jnp.pad(a, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+                     if n in ("k", "v") else a)
+                 for n, a in c.items()} for g, c in cache.items()}
+    for t in range(r.max_new_tokens - 1):
+        nxt, cache = api.decode(_oracle.params, cache,
+                                {"tokens": nxt,
+                                 "pos": jnp.int32(len(r.tokens) + t)})
+        outs.append(int(nxt[0]))
+    return outs
+
+
+def test_engine_generation_matches_oracle(small_model):
+    cfg, api, params = small_model
+    _oracle.params = params
+    eng = Engine(cfg, params, EngineConfig(
+        max_context=64, chunk_size=16, max_batch_tokens=64,
+        capacity_tokens=4096, page_size=16))
+    reqs = _mk_requests(cfg, 6)
+    now, done = 0.0, []
+    for r in reqs:
+        eng.scheduler.enqueue(r, now)
+    while len(done) < len(reqs):
+        done += eng.step(now)
+        now += 0.01
+    for r in done:
+        assert list(r.output_tokens) == _oracle(api, cfg, r), \
+            f"req {r.request_id} diverged"
+
+
+def test_engine_reuse_is_exact(small_model):
+    """Second wave hits the radix KV cache; outputs must still match
+    the no-cache oracle (reused KV is bit-identical)."""
+    cfg, api, params = small_model
+    _oracle.params = params
+    eng = Engine(cfg, params, EngineConfig(
+        max_context=64, chunk_size=16, max_batch_tokens=64,
+        capacity_tokens=4096, page_size=16))
+    wave1 = _mk_requests(cfg, 2, seed=1)
+    wave2 = _mk_requests(cfg, 4, seed=1)      # same shared prefix
+    now, done = 0.0, []
+    for r in wave1:
+        eng.scheduler.enqueue(r, now)
+    while len(done) < 2:
+        done += eng.step(now)
+        now += 0.01
+    for r in wave2:
+        eng.scheduler.enqueue(r, now)
+    while len(done) < 6:
+        done += eng.step(now)
+        now += 0.01
+    assert eng.stats["reused_tokens"] > 0, "cache never hit"
+    for r in done[2:]:
+        assert list(r.output_tokens) == _oracle(api, cfg, r)
+
+
+def test_engine_eviction_under_pressure(small_model):
+    cfg, api, params = small_model
+    eng = Engine(cfg, params, EngineConfig(
+        max_context=64, chunk_size=16, max_batch_tokens=64,
+        capacity_tokens=200, page_size=8))   # tiny pool -> evictions
+    rng = np.random.default_rng(3)
+    now, done = 0.0, []
+    reqs = [Request(tokens=tuple(rng.integers(1, cfg.vocab_size, 40)
+                                 .tolist()), max_new_tokens=3)
+            for _ in range(6)]
+    for r in reqs:
+        eng.scheduler.enqueue(r, now)
+    for _ in range(600):
+        done += eng.step(now)
+        now += 0.01
+        if len(done) == len(reqs):
+            break
+    assert len(done) == len(reqs), "requests starved under eviction"
+    assert eng.scheduler.stats["evicted_tokens"] > 0, "no eviction happened"
+
+
+def test_cluster_failover_and_elastic(small_model):
+    cfg, api, params = small_model
+    cl = ClusterRuntime(cfg, params, num_instances=2,
+                        engine_cfg=EngineConfig(
+                            max_context=64, chunk_size=16,
+                            max_batch_tokens=64, capacity_tokens=4096,
+                            page_size=16))
+    reqs = _mk_requests(cfg, 8, seed=5)
+    for r in reqs:
+        r.arrival_time = 0.0
+        cl.submit(r, 0.0)
+    cl.step(0.0)
+    cl.fail_instance(0, 0.1)
+    # elastic scale-up mid-run
+    new_id = cl.add_instance(cfg, params, 0.2)
+    assert new_id == 2
+    t = 0.2
+    for _ in range(800):
+        cl.step(t)
+        t += 0.01
+        if all(r.state.value == "finished" for r in reqs):
+            break
+    assert all(r.state.value == "finished" for r in reqs)
+    assert not cl.gs.instances[0].alive
+    assert cl.gs.instances[2].alive
+
+
+def test_straggler_sheds_load(small_model):
+    cfg, api, params = small_model
+    cl = ClusterRuntime(cfg, params, num_instances=2,
+                        engine_cfg=EngineConfig(
+                            max_context=64, chunk_size=16,
+                            max_batch_tokens=64, capacity_tokens=4096,
+                            page_size=16))
+    cl.gs.set_speed_factor(0, 8.0)   # instance 0 is 8x slower
+    rng = np.random.default_rng(7)
+    # unique prompts -> every decision is an explore (cost-based)
+    reqs = [Request(tokens=tuple(rng.integers(1, cfg.vocab_size, 24)
+                                 .tolist()), max_new_tokens=2)
+            for _ in range(10)]
+    counts = {0: 0, 1: 0}
+    for i, r in enumerate(reqs):
+        counts[cl.submit(r, float(i))] += 1
+    assert counts[1] > counts[0], counts
+
+
+@pytest.mark.parametrize("arch", ["jamba-v0.1-52b", "rwkv6-7b"])
+def test_recurrent_state_snapshot_reuse(arch):
+    """SSM/hybrid archs reuse recurrent-state snapshots (+ attention KV
+    for hybrids) at the prompt_len-1 boundary — outputs must stay
+    token-exact vs the no-cache oracle (DESIGN.md §5)."""
+    import dataclasses
+    from repro.configs import get_config, reduced
+    cfg = dataclasses.replace(reduced(get_config(arch)), dtype="float32")
+    api = zoo.build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, EngineConfig(
+        max_context=64, chunk_size=16, max_batch_tokens=64,
+        capacity_tokens=4096, page_size=16))
+    rng = np.random.default_rng(0)
+    shared = tuple(rng.integers(1, cfg.vocab_size, 24).tolist())
+    reqs = [Request(tokens=shared, max_new_tokens=3),
+            Request(tokens=shared, max_new_tokens=3),
+            Request(tokens=shared
+                    + tuple(rng.integers(1, cfg.vocab_size, 8).tolist()),
+                    max_new_tokens=3)]
+    now, done = 0.0, []
+    eng.scheduler.enqueue(reqs[0], now)
+    while len(done) < 1:
+        done += eng.step(now)
+        now += 0.01
+    for r in reqs[1:]:
+        eng.scheduler.enqueue(r, now)
+    while len(done) < 3:
+        done += eng.step(now)
+        now += 0.01
+    assert eng.stats["reused_tokens"] >= 2 * (len(shared) - 1)
+    assert reqs[0].output_tokens == reqs[1].output_tokens
+    # extended prompt vs oracle
+    r3 = reqs[2]
+    toks = jnp.asarray(r3.tokens)[None]
+    nxt, cache = api.prefill(params, {"tokens": toks})
+    outs = [int(nxt[0])]
+    cache = {g: {n: (jnp.pad(a, ((0, 0), (0, 0), (0, 8), (0, 0), (0, 0)))
+                     if n in ("k", "v") else a)
+                 for n, a in c.items()} for g, c in cache.items()}
+    for t in range(2):
+        nxt, cache = api.decode(params, cache,
+                                {"tokens": nxt,
+                                 "pos": jnp.int32(len(r3.tokens) + t)})
+        outs.append(int(nxt[0]))
+    assert list(r3.output_tokens) == outs

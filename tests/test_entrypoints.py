@@ -1,0 +1,54 @@
+"""The CLI entry points run end-to-end (reduced sizes): launch.train
+(with checkpoint/resume), launch.serve, and the dryrun cell lister."""
+
+import os
+import subprocess
+import sys
+import tempfile
+
+import pytest
+
+ENV = {**os.environ, "PYTHONPATH": "src"}
+CWD = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(args, timeout=420):
+    return subprocess.run([sys.executable, "-m", *args],
+                          capture_output=True, text=True, env=ENV,
+                          cwd=CWD, timeout=timeout)
+
+
+@pytest.mark.slow
+def test_train_entrypoint_and_resume():
+    with tempfile.TemporaryDirectory() as d:
+        r = _run(["repro.launch.train", "--arch", "smollm-360m",
+                  "--reduced", "--steps", "8", "--batch", "2",
+                  "--seq", "32", "--ckpt-dir", d, "--ckpt-every", "4",
+                  "--log-every", "4"])
+        assert r.returncode == 0, r.stderr[-2000:]
+        assert "loss=" in r.stdout
+        # resume from checkpoint
+        r2 = _run(["repro.launch.train", "--arch", "smollm-360m",
+                   "--reduced", "--steps", "12", "--batch", "2",
+                   "--seq", "32", "--ckpt-dir", d, "--log-every", "4"])
+        assert r2.returncode == 0, r2.stderr[-2000:]
+        assert "resumed from step 8" in r2.stdout
+
+
+@pytest.mark.slow
+def test_serve_entrypoint():
+    r = _run(["repro.launch.serve", "--arch", "smollm-360m",
+              "--instances", "2", "--requests", "8",
+              "--max-context", "64"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "finished=8/8" in r.stdout
+    assert "prefix reuse" in r.stdout
+
+
+def test_dryrun_list():
+    r = _run(["repro.launch.dryrun", "--list"], timeout=120)
+    assert r.returncode == 0, r.stderr[-2000:]
+    out = r.stdout
+    assert out.count("RUN") == 33
+    assert out.count("SKIP") == 7          # long_500k on full-attention
+    assert "rwkv6-7b                 long_500k    RUN" in out

@@ -1,0 +1,145 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret
+mode (deliverable c's per-kernel allclose)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention, lse_merge
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.prefix_attention import prefix_attention
+from repro.kernels import ops
+
+K0 = jax.random.PRNGKey(0)
+
+
+def rnd(key, *s, dt=jnp.float32):
+    return jax.random.normal(key, s, dt)
+
+
+FLASH_CASES = [
+    # B, H, KH, Sq, Skv, D, causal, window
+    (2, 4, 2, 128, 128, 64, True, 0),
+    (1, 8, 8, 96, 96, 128, True, 0),      # MHA
+    (2, 4, 1, 64, 192, 64, False, 0),     # cross-shape, MQA
+    (1, 6, 2, 256, 256, 64, True, 64),    # sliding window
+    (2, 2, 2, 40, 72, 32, True, 0),       # non-block-multiple
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+def test_flash_attention(case):
+    B, H, KH, Sq, Skv, D, causal, win = case
+    k1, k2, k3 = jax.random.split(K0, 3)
+    q = rnd(k1, B, H, Sq, D)
+    k = rnd(k2, B, KH, Skv, D)
+    v = rnd(k3, B, KH, Skv, D)
+    out = flash_attention(q, k, v, causal=causal, window=win,
+                          block_q=64, block_k=64, interpret=True)
+    exp = ref.flash_attention_ref(q, k, v, causal=causal, window=win)
+    np.testing.assert_allclose(out, exp, atol=3e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dt):
+    k1, k2, k3 = jax.random.split(K0, 3)
+    q = rnd(k1, 1, 4, 64, 64).astype(dt)
+    k = rnd(k2, 1, 2, 64, 64).astype(dt)
+    v = rnd(k3, 1, 2, 64, 64).astype(dt)
+    out = flash_attention(q, k, v, interpret=True, block_q=32, block_k=32)
+    exp = ref.flash_attention_ref(q, k, v)
+    atol = 3e-5 if dt == jnp.float32 else 3e-2
+    np.testing.assert_allclose(out.astype(np.float32),
+                               exp.astype(np.float32), atol=atol, rtol=0.05)
+
+
+DEC_CASES = [(4, 8, 2, 256, 64, 4), (2, 4, 4, 100, 128, 3),
+             (1, 16, 8, 512, 64, 8), (3, 6, 6, 64, 32, 1)]
+
+
+@pytest.mark.parametrize("case", DEC_CASES)
+def test_decode_attention(case):
+    B, H, KH, S, D, ns = case
+    k1, k2, k3 = jax.random.split(K0, 3)
+    q = rnd(k1, B, H, D)
+    k = rnd(k2, B, KH, S, D)
+    v = rnd(k3, B, KH, S, D)
+    lens = jnp.asarray(np.random.default_rng(0).integers(1, S + 1, B),
+                       jnp.int32)
+    out = decode_attention(q, k, v, lens, n_splits=ns, interpret=True)
+    exp = ref.decode_attention_ref(q, k, v, lens)
+    np.testing.assert_allclose(out, exp, atol=3e-5, rtol=1e-4)
+
+
+PRE_CASES = [(4, 8, 2, 256, 32, 64), (2, 4, 4, 128, 16, 128),
+             (1, 8, 1, 512, 8, 64)]
+
+
+@pytest.mark.parametrize("case", PRE_CASES)
+def test_prefix_attention(case):
+    B, H, KH, Sp, Ss, D = case
+    ks_ = jax.random.split(K0, 5)
+    q = rnd(ks_[0], B, H, D)
+    kp, vp = rnd(ks_[1], KH, Sp, D), rnd(ks_[2], KH, Sp, D)
+    ks, vs = rnd(ks_[3], B, KH, Ss, D), rnd(ks_[4], B, KH, Ss, D)
+    lens = jnp.asarray(np.random.default_rng(1).integers(1, Ss + 1, B),
+                       jnp.int32)
+    out = prefix_attention(q, kp, vp, ks, vs, lens, interpret=True)
+    exp = ref.prefix_attention_ref(q, kp, vp, ks, vs, lens)
+    np.testing.assert_allclose(out, exp, atol=3e-5, rtol=1e-4)
+
+
+def test_lse_merge_degenerate():
+    """Merge with one side fully masked (-inf m) stays finite."""
+    acc = jnp.stack([jnp.zeros((1, 1, 2, 4)), jnp.ones((1, 1, 2, 4))], 2)
+    m = jnp.stack([jnp.full((1, 1, 2, 1), -jnp.inf),
+                   jnp.zeros((1, 1, 2, 1))], 2)
+    l = jnp.stack([jnp.zeros((1, 1, 2, 1)), jnp.ones((1, 1, 2, 1))], 2)
+    out = lse_merge(acc, m, l)
+    assert bool(jnp.isfinite(out).all())
+    np.testing.assert_allclose(out, jnp.ones((1, 1, 2, 4)), atol=1e-6)
+
+
+def test_ops_layout_wrappers():
+    """ops.py adapts model layout [B,S,H,D] <-> kernel layout."""
+    k1, k2, k3 = jax.random.split(K0, 3)
+    q = rnd(k1, 2, 32, 4, 16)
+    k = rnd(k2, 2, 32, 2, 16)
+    v = rnd(k3, 2, 32, 2, 16)
+    out = ops.flash_attention(q, k, v, block_q=16, block_k=16,
+                              interpret=True)
+    exp = ref.flash_attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3)).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(out, exp, atol=3e-5, rtol=1e-4)
+
+
+PAGED_CASES = [(3, 8, 2, 16, 4, 32, 64), (2, 4, 4, 8, 6, 24, 32),
+               (1, 16, 8, 32, 3, 16, 128)]
+
+
+@pytest.mark.parametrize("case", PAGED_CASES)
+def test_paged_decode_attention(case):
+    """Page-table-driven decode attention == dense-gathered oracle."""
+    from repro.kernels.paged_attention import paged_decode_attention
+    B, H, KH, page, P, n_pages, D = case
+    ks = jax.random.split(K0, 3)
+    k_pages = rnd(ks[0], n_pages, page, KH, D)
+    v_pages = rnd(ks[1], n_pages, page, KH, D)
+    q = rnd(ks[2], B, H, D)
+    rng = np.random.default_rng(case[0])
+    pt = np.stack([rng.choice(n_pages, P, replace=False)
+                   for _ in range(B)])
+    lens = rng.integers(1, page * P + 1, B)
+    out = paged_decode_attention(q, k_pages, v_pages, jnp.asarray(pt),
+                                 jnp.asarray(lens), interpret=True)
+    dense_k = jnp.stack([k_pages[pt[b]].reshape(page * P, KH, D)
+                         for b in range(B)])
+    dense_v = jnp.stack([v_pages[pt[b]].reshape(page * P, KH, D)
+                         for b in range(B)])
+    exp = ref.decode_attention_ref(q, dense_k.transpose(0, 2, 1, 3),
+                                   dense_v.transpose(0, 2, 1, 3),
+                                   jnp.asarray(lens))
+    np.testing.assert_allclose(out, exp, atol=3e-5, rtol=1e-4)

@@ -1,0 +1,85 @@
+"""Paged KV pool: unit + hypothesis property tests on the refcount /
+free-list invariants under arbitrary operation sequences."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.serving.kv_cache import PagedKVPool
+
+
+def test_basic_alloc_release():
+    p = PagedKVPool(num_pages=8, page_size=16)
+    p.create(1)
+    newp = p.append(1, 40)           # 3 pages
+    assert len(newp) == 3 and p.used_pages == 3
+    assert p.release(1) == 3
+    assert p.free_pages == 8
+    p.check_invariants()
+
+
+def test_fork_refcounts_and_cow():
+    p = PagedKVPool(num_pages=8, page_size=16)
+    p.create(1)
+    p.append(1, 40)                   # pages 0..2, last partial (8 used)
+    child = p.fork(1, 2, shared_tokens=40)
+    assert child.pages == p.tables[1].pages
+    assert all(p.refcount[x] == 2 for x in child.pages)
+    # child appends -> CoW of the shared partial tail page
+    new = p.append(2, 4)
+    assert len(new) == 1              # the copied tail
+    assert p.tables[2].pages[-1] != p.tables[1].pages[-1]
+    p.check_invariants()
+    # releasing the parent keeps shared whole pages alive for the child
+    p.release(1)
+    p.check_invariants()
+    assert p.tables[2].num_tokens == 44
+
+
+def test_exhaustion():
+    p = PagedKVPool(num_pages=2, page_size=16)
+    p.create(1)
+    p.append(1, 32)
+    p.create(2)
+    assert not p.can_append(2, 1)
+    with pytest.raises(MemoryError):
+        p.append(2, 1)
+
+
+def test_trim_partial_eviction():
+    p = PagedKVPool(num_pages=8, page_size=16)
+    p.create(1)
+    p.append(1, 64)
+    freed = p.trim(1, keep_tokens=20)     # keep 2 pages
+    assert freed == 2
+    assert p.tables[1].num_tokens == 20
+    p.check_invariants()
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["create", "append", "fork",
+                                           "release", "trim"]),
+                          st.integers(0, 5), st.integers(1, 40)),
+                min_size=1, max_size=40))
+def test_pool_invariants_random_ops(ops):
+    """Whatever the op sequence, refcounts == live references, free +
+    live == total, and no page is both free and live."""
+    p = PagedKVPool(num_pages=16, page_size=8)
+    for kind, sid, n in ops:
+        try:
+            if kind == "create" and sid not in p.tables:
+                p.create(sid)
+            elif kind == "append" and sid in p.tables:
+                if p.can_append(sid, n):
+                    p.append(sid, n)
+            elif kind == "fork" and sid in p.tables:
+                child = sid + 100
+                while child in p.tables:
+                    child += 100
+                p.fork(sid, child, shared_tokens=n)
+            elif kind == "release":
+                p.release(sid)
+            elif kind == "trim" and sid in p.tables:
+                p.trim(sid, keep_tokens=min(n, p.tables[sid].num_tokens))
+        except MemoryError:
+            pass
+        p.check_invariants()

@@ -1,0 +1,171 @@
+"""Tests for the local (iteration-level) scheduler — paper §3.3."""
+
+import pytest
+
+from repro.core import LocalScheduler, LocalSchedulerConfig, Request
+
+
+def cfg(**kw):
+    base = dict(instance_id=0, capacity_tokens=10_000, chunk_size=64,
+                max_batch_tokens=256, max_batch_requests=16,
+                priority_groups=10)
+    base.update(kw)
+    return LocalSchedulerConfig(**base)
+
+
+def req(tokens, out=4, t=0.0):
+    return Request(tokens=tuple(tokens), max_new_tokens=out, arrival_time=t)
+
+
+def run_to_completion(ls, reqs, max_iters=500):
+    now = 0.0
+    for r in reqs:
+        ls.enqueue(r, now)
+    finished = []
+    for _ in range(max_iters):
+        now += 0.01
+        b = ls.form_batch(now)
+        if not b.items and ls.depth == 0:
+            break
+        finished += ls.complete_iteration(b, now)
+    return finished
+
+
+def test_single_request_lifecycle():
+    ls = LocalScheduler(cfg())
+    r = req(range(100), out=3)
+    done = run_to_completion(ls, [r])
+    assert done == [r]
+    assert r.state.value == "finished"
+    assert len(r.output_tokens) == 3
+    assert r.first_token_time > 0
+
+
+def test_chunked_prefill_splits_long_prompt():
+    ls = LocalScheduler(cfg(chunk_size=32, max_batch_tokens=64))
+    r = req(range(200), out=1)
+    ls.enqueue(r, 0.0)
+    b1 = ls.form_batch(0.01)
+    assert b1.items[0].phase == "prefill"
+    assert b1.items[0].chunk_tokens <= 32
+    ls.complete_iteration(b1, 0.01)
+    assert r.prefill_done < r.prompt_len  # still mid-prefill
+    # finishes eventually
+    done = []
+    now = 0.02
+    while not done:
+        b = ls.form_batch(now)
+        done = ls.complete_iteration(b, now)
+        now += 0.01
+    assert done == [r]
+
+
+def test_prefix_cache_hit_reduces_prefill():
+    ls = LocalScheduler(cfg())
+    shared = list(range(150))
+    r1 = req(shared + [500], out=1)
+    run_to_completion(ls, [r1])
+    r2 = req(shared + [600], out=1, t=1.0)
+    ls.enqueue(r2, 1.0)
+    b = ls.form_batch(1.01)
+    item = [i for i in b.items if i.request is r2][0]
+    assert item.cached_len >= 150
+    assert item.chunk_tokens <= ls.config.chunk_size
+
+
+def test_decode_tokens_budgeted_with_prefill():
+    """Sarathi-style piggyback: decodes ride along with prefill chunks."""
+    ls = LocalScheduler(cfg(chunk_size=64, max_batch_tokens=96))
+    r1 = req(range(40), out=50)
+    ls.enqueue(r1, 0.0)
+    b = ls.form_batch(0.01)
+    ls.complete_iteration(b, 0.01)        # r1 finishes prefill
+    r2 = req(range(1000, 1200), out=1, t=0.02)
+    ls.enqueue(r2, 0.02)
+    b2 = ls.form_batch(0.03)
+    phases = {i.phase for i in b2.items}
+    assert phases == {"decode", "prefill"}
+    assert b2.decode_tokens + b2.prefill_tokens <= 96
+
+
+def test_priority_groups_order_by_hit_ratio():
+    ls = LocalScheduler(cfg(max_batch_requests=1, max_batch_tokens=64))
+    shared = list(range(60))
+    warm = req(shared + [1], out=1)
+    run_to_completion(ls, [warm])
+    cold = req(list(range(5000, 5060)), out=1, t=1.0)   # 0% cached
+    hot = req(shared + [2], out=1, t=1.1)               # ~98% cached, arrives later
+    ls.enqueue(cold, 1.0)
+    ls.enqueue(hot, 1.1)
+    b = ls.form_batch(1.2)
+    assert b.items[0].request is hot, "higher hit-ratio group must be served first"
+
+
+def test_fcfs_flag_restores_arrival_order():
+    ls = LocalScheduler(cfg(fcfs=True, max_batch_requests=1,
+                            max_batch_tokens=64))
+    shared = list(range(60))
+    run_to_completion(ls, [req(shared + [1], out=1)])
+    cold = req(list(range(5000, 5060)), out=1, t=1.0)
+    hot = req(shared + [2], out=1, t=1.1)
+    ls.enqueue(cold, 1.0)
+    ls.enqueue(hot, 1.1)
+    b = ls.form_batch(1.2)
+    assert b.items[0].request is cold
+
+
+def test_eviction_under_memory_pressure_notifies_global():
+    evictions = []
+    ls = LocalScheduler(cfg(capacity_tokens=600, chunk_size=512,
+                            max_batch_tokens=2048),
+                        on_evict=lambda i, ids: evictions.append((i, ids)))
+    r1 = req(range(0, 400), out=1)
+    run_to_completion(ls, [r1])
+    r2 = req(range(1000, 1400), out=1, t=1.0)   # doesn't fit next to r1
+    done = run_to_completion(ls, [r2])
+    assert done and done[0] is r2
+    assert evictions, "LRU eviction must notify the global scheduler"
+    assert evictions[0][0] == 0
+
+
+def test_request_not_admitted_when_memory_unfreeable():
+    ls = LocalScheduler(cfg(capacity_tokens=100))
+    big = req(range(500), out=1)
+    ls.enqueue(big, 0.0)
+    b = ls.form_batch(0.01)
+    assert not b.items, "oversized request must stay queued, not crash"
+    assert ls.depth == 1
+
+
+def test_pinned_prefix_survives_pressure():
+    """A running request's prefix cannot be evicted out from under it."""
+    ls = LocalScheduler(cfg(capacity_tokens=900, chunk_size=64,
+                            max_batch_tokens=64))
+    r1 = req(range(0, 400), out=200)     # long-running decode, pins its path
+    ls.enqueue(r1, 0.0)
+    now = 0.01
+    for _ in range(10):                   # get r1 into decode
+        ls.complete_iteration(ls.form_batch(now), now)
+        now += 0.01
+    r2 = req(range(1000, 1500), out=1, t=now)
+    ls.enqueue(r2, now)
+    for _ in range(5):
+        ls.complete_iteration(ls.form_batch(now), now)
+        now += 0.01
+    assert r1.state.value in ("decoding", "finished")
+    assert ls.tree.match(tuple(range(0, 400))).matched_len == 400
+
+
+def test_drain_returns_all_inflight():
+    ls = LocalScheduler(cfg())
+    rs = [req(range(k * 100, k * 100 + 80), out=10, t=0.0) for k in range(3)]
+    for r in rs:
+        ls.enqueue(r, 0.0)
+    ls.complete_iteration(ls.form_batch(0.01), 0.01)
+    drained = ls.drain()
+    assert sorted(r.request_id for r in drained) == \
+           sorted(r.request_id for r in rs)
+    assert ls.depth == 0
+    assert ls.used_tokens == 0
+    for r in drained:
+        assert r.instance is None and r.prefill_done == 0

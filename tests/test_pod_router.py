@@ -1,0 +1,57 @@
+"""PodRouter: the datacenter front tier (one GlobalScheduler per pod)."""
+
+from repro.core import GlobalScheduler, PodRouter, Request
+
+
+def _router(n_pods=2, n_inst=2):
+    pods = {p: GlobalScheduler(num_instances=n_inst) for p in range(n_pods)}
+    return PodRouter(pods), pods
+
+
+def test_prefix_affinity_keeps_family_on_one_pod():
+    router, pods = _router()
+    head = tuple(range(100, 180))
+    picks = set()
+    for i in range(8):
+        r = Request(tokens=head + (1000 + i,) * 40, max_new_tokens=8)
+        pid, dec = router.route(r, now=float(i))
+        picks.add(pid)
+    assert len(picks) == 1, "shared-prefix family split across pods"
+
+
+def test_distinct_prefixes_spread_by_load():
+    router, pods = _router()
+    counts = {0: 0, 1: 0}
+    for i in range(40):
+        r = Request(tokens=tuple(range(i * 500, i * 500 + 120)),
+                    max_new_tokens=8)
+        pid, _ = router.route(r, now=float(i))
+        counts[pid] += 1
+    assert min(counts.values()) > 5, counts
+
+
+def test_failover_to_healthy_pod():
+    router, pods = _router()
+    head = tuple(range(300, 380))
+    r = Request(tokens=head + (7,) * 30, max_new_tokens=8)
+    pid, _ = router.route(r, now=0.0)
+    # kill every instance in the affinity pod
+    for inst in list(pods[pid].instances):
+        pods[pid].on_instance_failure(inst)
+    r2 = Request(tokens=head + (8,) * 30, max_new_tokens=8)
+    pid2, dec = router.route(r2, now=1.0)
+    assert pid2 != pid
+    assert dec.instance in pods[pid2].instances
+
+
+def test_affinity_spills_when_pod_overloaded():
+    router, pods = _router()
+    head = tuple(range(600, 700))
+    pid, _ = router.route(Request(tokens=head + (1,) * 30,
+                                  max_new_tokens=8), now=0.0)
+    # pile synthetic load onto the affinity pod
+    for inst in pods[pid].instances.values():
+        inst.add_work(now=1.0, prefill_sec=50.0, decode_sec=50.0)
+    pid2, _ = router.route(Request(tokens=head + (2,) * 30,
+                                   max_new_tokens=8), now=1.0)
+    assert pid2 != pid, "router should spill off an overloaded pod"

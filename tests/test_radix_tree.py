@@ -1,0 +1,170 @@
+"""Unit + property tests for the radix tree (Preble's primary data structure)."""
+
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import RadixTree
+
+
+def test_insert_then_match_exact():
+    t = RadixTree()
+    t.insert([1, 2, 3, 4], instance=0)
+    m = t.match([1, 2, 3, 4])
+    assert m.matched_len == 4
+    assert m.per_instance_len == {0: 4}
+
+
+def test_partial_match_and_split():
+    t = RadixTree()
+    t.insert([1, 2, 3, 4, 5], instance=0)
+    t.insert([1, 2, 3, 9, 9], instance=1)   # forces a split at depth 3
+    m = t.match([1, 2, 3])
+    assert m.matched_len == 3
+    # instance 0 and 1 both cache the shared [1,2,3] node after the split
+    assert m.per_instance_len == {0: 3, 1: 3}
+    m2 = t.match([1, 2, 3, 4, 5])
+    assert m2.matched_len == 5
+    assert m2.per_instance_len[0] == 5
+    assert m2.per_instance_len[1] == 3
+
+
+def test_match_partial_inside_node():
+    t = RadixTree()
+    t.insert([5, 6, 7, 8], instance=2)
+    m = t.match([5, 6, 9])
+    assert m.matched_len == 2
+    assert m.per_instance_len == {2: 2}
+
+
+def test_no_match():
+    t = RadixTree()
+    t.insert([1, 2, 3])
+    m = t.match([9, 9])
+    assert m.matched_len == 0
+    assert m.path == []
+
+
+def test_window_hits_trim():
+    t = RadixTree(window=10.0)
+    path = t.insert([1, 2, 3], instance=0, now=0.0)
+    node = path[0]
+    t.record_hit(node, 0, 1.0)
+    t.record_hit(node, 0, 5.0)
+    assert t.hits_in_window(node, now=6.0, instance=0) == 3  # insert + 2
+    assert t.hits_in_window(node, now=14.0, instance=0) == 1  # only t=5 left
+    assert t.hits_in_window(node, now=30.0, instance=0) == 0
+
+
+def test_eviction_leaf_first_lru():
+    t = RadixTree()
+    t.insert([1, 2], instance=0, now=1.0)
+    t.insert([1, 2, 3, 4], instance=0, now=2.0)
+    t.insert([1, 2, 9, 9, 9], instance=0, now=3.0)
+    # parent [1,2] is oldest but has cached descendants -> leaves go first
+    plan = t.plan_eviction(0, tokens_needed=2)
+    assert plan, "must evict something"
+    assert all(len(n.children) == 0 or
+               all(0 not in d.instances for d in t.subtree_nodes(n)[1:])
+               for n in plan)
+    freed = t.evict(plan, 0)
+    assert freed >= 2
+
+
+def test_eviction_respects_pins_and_protection():
+    t = RadixTree()
+    path = t.insert([1, 2, 3], instance=0, now=1.0)
+    path[-1].ref_count = 1
+    assert t.plan_eviction(0, 1) == []
+    path[-1].ref_count = 0
+    assert t.plan_eviction(0, 1, protected={path[-1].node_id}) == []
+
+
+def test_drop_instance_everywhere():
+    t = RadixTree()
+    t.insert([1, 2, 3], instance=0)
+    t.insert([1, 2, 3], instance=1)
+    touched = t.drop_instance_everywhere(0)
+    assert touched >= 1
+    m = t.match([1, 2, 3])
+    assert 0 not in m.per_instance_len
+    assert m.per_instance_len.get(1) == 3
+
+
+def test_prune_dead():
+    t = RadixTree(window=5.0)
+    t.insert([1, 2, 3], instance=0, now=0.0)
+    t.drop_instance_everywhere(0)
+    removed = t.prune_dead(now=100.0)
+    assert removed >= 1
+    assert t.total_nodes() == 0
+
+
+# ---------------- property tests -------------------------------------------
+
+token_seqs = st.lists(st.integers(min_value=0, max_value=7), min_size=1,
+                      max_size=24)
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(token_seqs, min_size=1, max_size=12), token_seqs)
+def test_match_equals_longest_common_prefix(seqs, probe):
+    """Tree match length == max common prefix with any inserted sequence."""
+    t = RadixTree()
+    for i, s in enumerate(seqs):
+        t.insert(s, instance=i % 3)
+    expect = 0
+    for s in seqs:
+        k = 0
+        while k < min(len(s), len(probe)) and s[k] == probe[k]:
+            k += 1
+        expect = max(expect, k)
+    assert t.match(probe).matched_len == expect
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(token_seqs, min_size=1, max_size=12))
+def test_inserted_sequences_fully_match(seqs):
+    t = RadixTree()
+    for s in seqs:
+        t.insert(s, instance=0)
+    for s in seqs:
+        m = t.match(s)
+        assert m.matched_len == len(s)
+        assert m.per_instance_len.get(0) == len(s)
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(token_seqs, min_size=1, max_size=12))
+def test_tree_tokens_bounded_by_total_and_path_consistent(seqs):
+    """Structural invariants: no sibling shares a first token; total stored
+    tokens <= total inserted tokens; every root-to-node path is a prefix of
+    some inserted sequence."""
+    t = RadixTree()
+    for s in seqs:
+        t.insert(s)
+    assert t.total_tokens() <= sum(len(s) for s in seqs)
+    for n in t.iter_nodes():
+        firsts = [c.tokens[0] for c in n.children.values()]
+        assert len(firsts) == len(set(firsts))
+        full = []
+        for p in n.path():
+            full.extend(p.tokens)
+        assert any(tuple(full) == tuple(s[:len(full)]) for s in seqs)
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(token_seqs, min_size=2, max_size=10),
+       st.integers(min_value=1, max_value=40))
+def test_eviction_frees_claimed_tokens(seqs, need):
+    t = RadixTree()
+    for s in seqs:
+        t.insert(s, instance=0)
+    before = t.cached_tokens(0)
+    plan = t.plan_eviction(0, need)
+    freed = t.evict(plan, 0)
+    assert t.cached_tokens(0) == before - freed
+    assert freed == sum(len(n.tokens) for n in plan)
+    # either we freed enough, or the whole cache was evictable and gone
+    assert freed >= min(need, before)

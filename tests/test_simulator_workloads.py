@@ -1,0 +1,96 @@
+"""Simulator + workload generators: E2-vs-RR dominance, conservation,
+Table-1 statistics bands, arrival processes."""
+
+import numpy as np
+import pytest
+
+from repro.data import (assign_arrivals, azure_burst_arrivals, gen_workload,
+                        poisson_arrivals, workload_stats, zipf_choice)
+from repro.serving.simulator import SimConfig, Simulator, simulate
+
+
+def test_all_requests_finish():
+    reqs = assign_arrivals(gen_workload("toolbench", 120, seed=1),
+                           poisson_arrivals(120, 8.0, 1))
+    res = simulate(reqs, num_instances=2)
+    assert len(res.finished) == 120
+    assert all(r.finish_time >= r.arrival_time for r in res.finished)
+    assert all(r.first_token_time >= r.arrival_time for r in res.finished)
+
+
+@pytest.mark.parametrize("wl,rps", [("toolbench", 10.0), ("videoqa", 2.0)])
+def test_e2_beats_rr(wl, rps):
+    n = 250
+    times = poisson_arrivals(n, rps, seed=3)
+    out = {}
+    for pol in ("e2", "rr"):
+        reqs = assign_arrivals(gen_workload(wl, n, seed=2), times)
+        out[pol] = simulate(reqs, num_instances=4, policy=pol).summary()
+    assert out["e2"]["avg_latency"] < out["rr"]["avg_latency"], out
+    assert out["e2"]["cache_hit_frac"] > out["rr"]["cache_hit_frac"], out
+
+
+def test_higher_rps_higher_latency():
+    lat = []
+    for rps in (4.0, 30.0):
+        reqs = assign_arrivals(gen_workload("toolbench", 200, seed=2),
+                               poisson_arrivals(200, rps, seed=4))
+        lat.append(simulate(reqs, num_instances=2)
+                   .summary()["avg_latency"])
+    assert lat[1] > lat[0]
+
+
+def test_straggler_mitigation_in_sim():
+    n = 200
+    times = poisson_arrivals(n, 8.0, seed=5)
+    base = {}
+    for aware in (True, False):
+        reqs = assign_arrivals(gen_workload("toolbench", n, seed=2), times)
+        cfg = SimConfig(num_instances=4,
+                        speed_factors={0: 6.0} if aware else None)
+        base[aware] = Simulator(cfg).run(reqs).summary()["avg_latency"]
+    # with the straggler present AND reported, E2 sheds load onto the
+    # healthy instances; it must not collapse
+    assert base[True] < 10.0
+
+
+WL_BANDS = {   # generous bands around Table 1
+    "toolbench": (1000, 2800, 20, 70, 0.7),
+    "agent": (1400, 3200, 8, 30, 0.9),
+    "programming": (2500, 5500, 100, 380, 0.9),
+    "videoqa": (6000, 14000, 2, 7, 0.8),
+    "loogle": (16000, 30000, 8, 26, 0.85),
+}
+
+
+@pytest.mark.parametrize("wl", list(WL_BANDS))
+def test_workload_statistics(wl):
+    lo_p, hi_p, lo_o, hi_o, min_share = WL_BANDS[wl]
+    s = workload_stats(gen_workload(wl, 250, seed=1))
+    assert lo_p < s.prompt_mean < hi_p, s
+    assert lo_o < s.output_mean < hi_o, s
+    assert s.shared_frac > min_share, s
+    assert s.share_count > 2, s
+
+
+def test_arrival_processes():
+    t = poisson_arrivals(1000, 10.0, seed=0)
+    assert abs(np.diff(t).mean() - 0.1) < 0.02
+    tb = azure_burst_arrivals(2000, 5.0, seed=0)
+    gaps = np.diff(tb)
+    assert gaps.std() > 3 * gaps.mean()     # heavy tail vs poisson
+    z = zipf_choice(64, 5000, alpha=1.1, seed=0)
+    counts = np.bincount(z, minlength=64)
+    assert counts[0] > 5 * counts[20]       # skew
+
+
+def test_agent_chains_preserve_order():
+    reqs = gen_workload("agent", 60, seed=2)
+    reqs = assign_arrivals(reqs, poisson_arrivals(60, 5.0, 1))
+    # chained steps must not be shuffled: each step extends an earlier one
+    seen = []
+    for r in sorted(reqs, key=lambda r: r.arrival_time):
+        for s in seen:
+            if len(s) < len(r.tokens) and r.tokens[:len(s)] == s:
+                break
+        seen.append(tuple(r.tokens))

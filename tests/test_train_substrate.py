@@ -1,0 +1,131 @@
+"""Training substrate: optimizer math, compression, checkpointing."""
+
+import dataclasses
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ARCHS, reduced
+from repro.models import zoo
+from repro.train import (TrainConfig, init_state, make_train_step,
+                         restore_checkpoint, save_checkpoint)
+from repro.train.optimizer import (AdamWConfig, adamw_init, adamw_update,
+                                   clip_by_global_norm, ef8_compress,
+                                   ef8_init, global_norm, warmup_cosine)
+from repro.train.train_loop import TrainState
+
+
+def _small_api():
+    cfg = dataclasses.replace(reduced(ARCHS["smollm-360m"]), n_layers=2)
+    return cfg, zoo.build(cfg)
+
+
+def _fixed_batch(cfg, B=4, S=32):
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S + 1), 0,
+                              cfg.vocab_size)
+    return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+def test_overfit_single_batch():
+    cfg, api = _small_api()
+    tc = TrainConfig(adamw=AdamWConfig(lr=3e-3), total_steps=200,
+                     warmup_steps=5)
+    state = init_state(api.init(jax.random.PRNGKey(0)), tc)
+    step = jax.jit(make_train_step(api, tc))
+    batch = _fixed_batch(cfg)
+    losses = []
+    for _ in range(80):
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < 0.5 * losses[0], losses[::10]
+
+
+@pytest.mark.parametrize("opts", [
+    dict(grad_accum=2), dict(compress_grads=True),
+    dict(quant_moments=True), dict(grad_accum=2, compress_grads=True,
+                                   quant_moments=True)])
+def test_variants_still_learn(opts):
+    cfg, api = _small_api()
+    tc = TrainConfig(adamw=AdamWConfig(lr=3e-3), total_steps=200,
+                     warmup_steps=5, **opts)
+    state = init_state(api.init(jax.random.PRNGKey(0)), tc)
+    step = jax.jit(make_train_step(api, tc))
+    batch = _fixed_batch(cfg)
+    first = last = None
+    for _ in range(60):
+        state, m = step(state, batch)
+        first = first if first is not None else float(m["loss"])
+        last = float(m["loss"])
+    assert last < 0.8 * first, (opts, first, last)
+
+
+def test_checkpoint_restart_bitexact():
+    cfg, api = _small_api()
+    tc = TrainConfig(total_steps=20, warmup_steps=2, compress_grads=True)
+    state = init_state(api.init(jax.random.PRNGKey(0)), tc)
+    step = jax.jit(make_train_step(api, tc))
+    batch = _fixed_batch(cfg)
+    for _ in range(3):
+        state, _ = step(state, batch)
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, state.as_dict(), int(state.step))
+        restored = TrainState.from_dict(restore_checkpoint(d))
+        s1, m1 = step(state, batch)
+        s2, m2 = step(restored, batch)
+        assert float(m1["loss"]) == float(m2["loss"])
+        for a, b in zip(jax.tree.leaves(s1.params),
+                        jax.tree.leaves(s2.params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_keeps_latest_k():
+    with tempfile.TemporaryDirectory() as d:
+        for s in range(6):
+            save_checkpoint(d, {"x": jnp.ones(3) * s}, s, keep=3)
+        from repro.train.checkpoint import all_steps
+        assert all_steps(d) == [3, 4, 5]
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.ones((4,)) * 3.0, "b": jnp.ones((4,)) * 4.0}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert abs(float(norm) - 10.0) < 1e-5
+    assert abs(float(global_norm(clipped)) - 1.0) < 1e-5
+
+
+def test_ef8_error_feedback_accumulates():
+    """Quantization error is carried, so the SUM of compressed grads
+    tracks the sum of true grads (unbiased in the long run)."""
+    g = {"w": jnp.linspace(-1, 1, 64)}
+    err = ef8_init(g)
+    total_c = jnp.zeros(64)
+    for _ in range(50):
+        c, err = ef8_compress(g, err)
+        total_c = total_c + c["w"]
+    np.testing.assert_allclose(total_c / 50, g["w"], atol=1e-3)
+
+
+def test_warmup_cosine_shape():
+    sched = warmup_cosine(1.0, warmup=10, total=100)
+    assert float(sched(jnp.int32(0))) == 0.0
+    assert abs(float(sched(jnp.int32(10))) - 1.0) < 0.11
+    assert float(sched(jnp.int32(100))) <= 0.2
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.floats(-10, 10), min_size=4, max_size=4))
+def test_adamw_quant_close_to_fp32(vals):
+    """int8-moment AdamW steps stay close to fp32-moment steps."""
+    p = {"w": jnp.asarray(vals, jnp.float32)}
+    g = {"w": jnp.asarray(vals[::-1], jnp.float32) * 0.1}
+    cfg = AdamWConfig(lr=1e-2, weight_decay=0.0)
+    s32 = adamw_init(p, quant_moments=False)
+    s8 = adamw_init(p, quant_moments=True)
+    p32, s32 = adamw_update(g, s32, p, cfg, jnp.float32(1e-2))
+    p8, s8 = adamw_update(g, s8, p, cfg, jnp.float32(1e-2), quant=True)
+    np.testing.assert_allclose(np.asarray(p32["w"]), np.asarray(p8["w"]),
+                               atol=2e-3)
