@@ -1,0 +1,16 @@
+PY ?= python
+
+.PHONY: ci test bench-engine install
+
+install:
+	$(PY) -m pip install -e .[test]
+
+# tier-1 verify (ROADMAP.md): full suite, fail fast
+ci:
+	PYTHONPATH=src $(PY) -m pytest -x -q
+
+test:
+	PYTHONPATH=src $(PY) -m pytest -q
+
+bench-engine:
+	PYTHONPATH=src $(PY) -m benchmarks.bench_engine

@@ -1,0 +1,167 @@
+"""Engine data-plane benchmark: dense reference vs paged pool.
+
+Measures, for the same shared-prefix workload on both planes:
+  * steady-state batched decode throughput (tokens/s) at batch >= 8 —
+    the paged plane runs one donated jit over bucketed slots; the dense
+    plane pays O(B * max_context) cache concat/index copies plus a
+    retrace per batch size every iteration;
+  * reuse-seeding latency per admitted request — paged admission is
+    page aliasing (host refcounts, zero device KV copies, verified via
+    pool refcounts); dense admission copies the matched KV slabs into
+    the request's cache.
+
+Emits CSV (results/bench/bench_engine.csv, repo idiom) AND JSON
+(results/bench/bench_engine.json) so the perf trajectory tracks engine
+throughput, not just simulator latency.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import ARCHS, reduced
+from repro.core.request import Request
+from repro.models import zoo
+from repro.serving.engine import Engine, EngineConfig
+
+from .common import RESULTS_DIR, emit
+
+BATCH = 16            # decode batch under measurement (>= 8)
+SHARED = 64           # shared prefix tokens (page-aligned: 4 pages)
+TAIL = 16             # per-request unique suffix
+OUT = 96              # decode budget: long steady-state phase
+MEASURE_ITERS = 24    # timed decode iterations
+PAGE = 16
+
+
+def _build(n_layers=2):
+    cfg = dataclasses.replace(reduced(ARCHS["smollm-360m"]),
+                              n_layers=n_layers, dtype="float32")
+    api = zoo.build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    return cfg, api, params
+
+
+def _requests(cfg, n, shared, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(tokens=shared
+                    + tuple(rng.integers(1, cfg.vocab_size, TAIL).tolist()),
+                    max_new_tokens=OUT) for _ in range(n)]
+
+
+def _engine(cfg, params, paged: bool) -> Engine:
+    return Engine(cfg, params, EngineConfig(
+        max_context=SHARED + TAIL + OUT, chunk_size=32,
+        max_batch_tokens=512, max_batch_requests=BATCH,
+        capacity_tokens=32768, page_size=PAGE, paged=paged))
+
+
+def run():
+    cfg, api, params = _build()
+    shared = tuple(np.random.default_rng(42)
+                   .integers(1, cfg.vocab_size, SHARED).tolist())
+    rows, out = [], {"config": {
+        "arch": cfg.name, "n_layers": cfg.n_layers, "batch": BATCH,
+        "shared_prefix": SHARED, "tail": TAIL, "max_new": OUT,
+        "page_size": PAGE}}
+
+    for paged in (False, True):
+        plane = "paged" if paged else "dense"
+        eng = _engine(cfg, params, paged)
+
+        # -- wave 1: populate the prefix cache --------------------------
+        w1 = _requests(cfg, 2, shared, seed=0)
+        now, done = 0.0, []
+        for r in w1:
+            eng.scheduler.enqueue(r, now)
+        while len(done) < len(w1):
+            done += eng.step(now)
+            now += 0.01
+
+        # -- instrument admission: reuse-seeding latency ----------------
+        orig_admit = eng._admit
+        seed_s = [0.0, 0]
+
+        def timed_admit(r, t, _orig=orig_admit, _eng=eng, _acc=seed_s):
+            t0 = time.perf_counter()
+            _orig(r, t)
+            # seeding work is device-lazy: block on the state it touched
+            jax.block_until_ready(
+                _eng.pages if _eng.paged
+                else _eng.live[r.request_id]["cache"])
+            _acc[0] += time.perf_counter() - t0
+            _acc[1] += 1
+
+        eng._admit = timed_admit
+
+        # -- wave 2: BATCH requests reusing the shared prefix -----------
+        w2 = _requests(cfg, BATCH, shared, seed=1)
+        for r in w2:
+            eng.scheduler.enqueue(r, now)
+        while not (len(eng.scheduler.running) == BATCH
+                   and not eng.scheduler.prefilling
+                   and not eng.scheduler.waiting):
+            done += eng.step(now)
+            now += 0.01
+
+        # -- steady-state batched decode --------------------------------
+        eng.step(now)                       # warm the decode trace
+        jax.block_until_ready(eng.pages if paged else [
+            s["cache"] for s in eng.live.values()])
+        d0 = eng.stats["decode_steps"]
+        t0 = time.perf_counter()
+        for _ in range(MEASURE_ITERS):
+            now += 0.01
+            eng.step(now)
+        jax.block_until_ready(eng.pages if paged else [
+            s["cache"] for s in eng.live.values()])
+        dt_s = time.perf_counter() - t0
+        dtoks = eng.stats["decode_steps"] - d0
+        assert dtoks >= MEASURE_ITERS * BATCH, "batch shrank mid-measure"
+
+        shared_pages = sum(1 for c in eng.pool.refcount.values() if c > 1)
+        res = {
+            "decode_tokens_per_s": dtoks / dt_s,
+            "decode_batch": BATCH,
+            "seed_latency_ms": 1e3 * seed_s[0] / max(seed_s[1], 1),
+            "seeded_requests": seed_s[1],
+            "reused_tokens": eng.stats["reused_tokens"],
+            "cache_concat_calls": eng.stats["cache_concat_calls"],
+            "seed_aliased_pages": eng.stats["seed_aliased_pages"],
+            "seed_copied_pages": eng.stats["seed_copied_pages"],
+            "pages_refcount_gt1": shared_pages,
+        }
+        if paged:
+            eng.pool.check_invariants()
+        out[plane] = res
+        rows.append({"plane": plane, **res})
+
+    out["speedup_decode"] = (out["paged"]["decode_tokens_per_s"]
+                             / out["dense"]["decode_tokens_per_s"])
+    out["seed_speedup"] = (out["dense"]["seed_latency_ms"]
+                           / max(out["paged"]["seed_latency_ms"], 1e-9))
+    rows.append({"plane": "speedup",
+                 "decode_tokens_per_s": out["speedup_decode"],
+                 "seed_latency_ms": out["seed_speedup"]})
+    emit("bench_engine", rows,
+         keys=["plane", "decode_tokens_per_s", "seed_latency_ms",
+               "reused_tokens", "cache_concat_calls",
+               "seed_aliased_pages", "seed_copied_pages",
+               "pages_refcount_gt1"])
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, "bench_engine.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"[bench_engine] decode speedup {out['speedup_decode']:.2f}x, "
+          f"seed speedup {out['seed_speedup']:.2f}x -> {path}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -64,23 +64,26 @@ class GlobalScheduler:
             speed_factor=speed_factor,
         )
 
-    def remove_instance(self, instance_id: int) -> None:
-        """Graceful drain: stop routing to it; its cache entries are dropped."""
+    def remove_instance(self, instance_id: int, now: float = 0.0) -> None:
+        """Graceful drain: stop routing to it; its cache entries are
+        dropped, and nodes left dead by the drop are pruned here (the
+        scoped per-chain pruning in on_evictions never revisits them)."""
         inst = self.instances.get(instance_id)
         if inst is None:
             return
         inst.alive = False
         self.tree.drop_instance_everywhere(instance_id)
+        self.tree.prune_dead(now)
         self._redirects.pop(instance_id, None)
         self._redirects = {h: l for h, l in self._redirects.items()
                            if l != instance_id}
 
-    def on_instance_failure(self, instance_id: int) -> None:
+    def on_instance_failure(self, instance_id: int, now: float = 0.0) -> None:
         """Hard failure: identical tree repair, counted for observability.
         The cluster runtime re-enqueues that instance's in-flight requests
         through ``schedule`` again (their prefixes now resolve elsewhere)."""
         self.stats["failures"] += 1
-        self.remove_instance(instance_id)
+        self.remove_instance(instance_id, now)
 
     def set_speed_factor(self, instance_id: int, factor: float) -> None:
         """Straggler mitigation hook: runtime reports observed slowdown
@@ -169,18 +172,23 @@ class GlobalScheduler:
 
     def on_evictions(self, instance_id: int, node_ids: Sequence[int],
                      now: float = 0.0) -> None:
-        """Async eviction notification from a local scheduler (§3.3)."""
+        """Async eviction notification from a local scheduler (§3.3).
+        Node lookups go through the tree's node-id index and dead-node
+        cleanup is scoped to the touched parent chains — this path runs
+        once per local eviction batch and must not walk the whole forest."""
         inst = self.instances.get(instance_id)
-        by_id = {n.node_id: n for n in self.tree.iter_nodes()}
         freed = 0
         for nid in node_ids:
-            node = by_id.get(nid)
+            node = self.tree.get_node(nid)
             if node is not None and instance_id in node.instances:
                 self.tree.remove_instance(node, instance_id)
                 freed += len(node.tokens)
         if inst is not None:
             inst.cached_tokens = max(inst.cached_tokens - freed, 0)
-        self.tree.prune_dead(now)
+        for nid in node_ids:
+            node = self.tree.get_node(nid)   # None if already pruned
+            if node is not None:
+                self.tree.prune_upward(node, now)
 
     # ---- post-assignment load management ----------------------------------------
 

@@ -65,6 +65,7 @@ class LocalScheduler:
                  on_evict: Optional[Callable[[int, List[int]], None]] = None):
         self.config = config
         self.tree = RadixTree(window=config.window)
+        self.tree.split_hooks.append(self._on_split)
         self.waiting: List[Request] = []
         self.running: List[Request] = []    # requests in decode phase
         self.prefilling: List[Request] = [] # requests mid-chunked-prefill
@@ -190,13 +191,7 @@ class LocalScheduler:
             freed = sum(len(n.tokens) for n in plan)
             if freed < need:
                 return False
-            self.tree.evict(plan, self.config.instance_id)
-            self.used_tokens -= freed
-            self.stats["evicted_tokens"] += freed
-            ids = [n.node_id for n in plan]
-            self.evicted_log.extend(ids)
-            if self.on_evict is not None:
-                self.on_evict(self.config.instance_id, ids)  # async in prod
+            self.apply_eviction(plan)
         # pin matched path so concurrent eviction can't pull our prefix
         path = self.tree.insert(request.tokens,
                                 instance=self.config.instance_id, now=now)
@@ -205,6 +200,21 @@ class LocalScheduler:
         self._pinned[request.request_id] = path
         self.used_tokens += new_tokens
         return True
+
+    def apply_eviction(self, plan: Sequence[RadixNode]) -> int:
+        """Evict ``plan`` from the tree and run ALL the bookkeeping
+        (pool accounting, stats, eviction log, async notification) —
+        the single place eviction side effects happen, shared by
+        _reserve and the engine's page-fragmentation reclaim."""
+        self.tree.evict(plan, self.config.instance_id)
+        freed = sum(len(n.tokens) for n in plan)
+        self.used_tokens = max(self.used_tokens - freed, 0)
+        self.stats["evicted_tokens"] += freed
+        ids = [n.node_id for n in plan]
+        self.evicted_log.extend(ids)
+        if self.on_evict is not None:
+            self.on_evict(self.config.instance_id, ids)  # async in prod
+        return freed
 
     # ---- iteration completion -----------------------------------------------------------
 
@@ -243,6 +253,37 @@ class LocalScheduler:
         # output tokens + non-shared prompt stay cached until LRU-evicted;
         # pool usage stays (they are cached KV) — only eviction frees it.
 
+    def _on_split(self, head: RadixNode, tail: RadixNode) -> None:
+        """Keep pin lists aligned with node splits: _split copies the
+        pin count to the tail (every pre-split pinner's prompt spans the
+        whole original node, hence the tail too), so each such pinner
+        must also hold the tail in its list or _release would leave
+        tail.ref_count > 0 forever — permanently unevictable."""
+        for path in self._pinned.values():
+            if head in path and tail not in path:
+                path.append(tail)
+
+    def abort(self, request: Request) -> None:
+        """Drop an admitted request the engine cannot serve (oversized
+        prompt, pool exhausted): remove it from every queue, unpin its
+        path, mark it FAILED. The engine skips its batch item; the
+        caller decides whether to resubmit.
+
+        Only the max_new_tokens part of the reservation is refunded
+        here: _reserve already inserted the prompt path and marked it
+        cached on this instance, and those (KV-less) suffix nodes stay
+        in the tree until LRU eviction — which refunds their token span
+        through apply_eviction. Refunding the prompt part here too
+        would double-count when that eviction lands."""
+        for q in (self.prefilling, self.running, self.waiting):
+            if request in q:
+                q.remove(request)
+        if request.request_id in self._pinned:
+            self.used_tokens = max(
+                self.used_tokens - request.max_new_tokens, 0)
+        self._release(request)
+        request.state = RequestState.FAILED
+
     # ---- failure handling -----------------------------------------------------------------
 
     def drain(self) -> List[Request]:
@@ -257,6 +298,7 @@ class LocalScheduler:
         self._pinned.clear()
         self.used_tokens = 0
         self.tree = RadixTree(window=self.config.window)
+        self.tree.split_hooks.append(self._on_split)
         return out
 
     @property

@@ -96,6 +96,17 @@ class RadixTree:
         self.root = RadixNode((), None)
         self.window = window  # history window H in seconds (default 3 min)
         self._token_count = 0  # cached tokens (nodes with >=1 instance count full)
+        # node-id -> node index: O(1) lookup for eviction notifications
+        # (GlobalScheduler.on_evictions) instead of an O(all-nodes) walk
+        self._by_id: Dict[int, RadixNode] = {}
+        # structural hooks: each called as hook(head, tail) after a node
+        # split, with head keeping the id/prefix and tail the new suffix
+        # node. The local scheduler keeps pin lists aligned; engines
+        # keep page-table aliases aligned with node boundaries.
+        self.split_hooks: List[Callable[[RadixNode, RadixNode], None]] = []
+
+    def get_node(self, node_id: int) -> Optional[RadixNode]:
+        return self._by_id.get(node_id)
 
     # ---- matching ----------------------------------------------------------
 
@@ -171,6 +182,7 @@ class RadixTree:
             if child is None:
                 leaf = RadixNode(tokens[i:], node)
                 node.children[tokens[i]] = leaf
+                self._by_id[leaf.node_id] = leaf
                 path.append(leaf)
                 i = len(tokens)
                 break
@@ -210,6 +222,9 @@ class RadixTree:
         tail.ref_count = node.ref_count
         node.tokens = node.tokens[:at]
         node.children = {tail.tokens[0]: tail}
+        self._by_id[tail.node_id] = tail
+        for hook in self.split_hooks:
+            hook(node, tail)
         return tail
 
     # ---- window-H statistics ------------------------------------------------
@@ -253,6 +268,24 @@ class RadixTree:
                 touched += 1
         return touched
 
+    def prune_upward(self, node: RadixNode, now: float) -> int:
+        """Scoped prune: remove ``node`` if it is a dead leaf (no
+        caching instance, no pins, no window-H hits), then retry up the
+        parent chain — O(depth), for hot paths where only these nodes'
+        status changed (eviction notifications). ``prune_dead`` remains
+        the full-forest fixpoint."""
+        removed = 0
+        while (node is not None and node.parent is not None
+               and node.is_leaf() and not node.instances
+               and node.ref_count == 0
+               and self.hits_in_window(node, now) == 0):
+            parent = node.parent
+            del parent.children[node.tokens[0]]
+            self._by_id.pop(node.node_id, None)
+            removed += 1
+            node = parent
+        return removed
+
     def prune_dead(self, now: float) -> int:
         """Remove leaf nodes with no caching instance and no window-H hits
         (paper §3.2 'we remove it from the tree'). Iterates to a fixpoint."""
@@ -264,6 +297,7 @@ class RadixTree:
                 if (n.is_leaf() and not n.instances and n.ref_count == 0
                         and self.hits_in_window(n, now) == 0 and n.parent is not None):
                     del n.parent.children[n.tokens[0]]
+                    self._by_id.pop(n.node_id, None)
                     removed += 1
                     changed = True
         return removed

@@ -1,0 +1,18 @@
+"""jax version shims for Pallas TPU APIs.
+
+``pltpu.TPUCompilerParams`` was renamed ``CompilerParams`` across jax
+releases; resolve whichever this jax ships so the kernels import on
+both sides of the rename.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+try:
+    CompilerParams = pltpu.CompilerParams
+except AttributeError:
+    # raises AttributeError naming the missing symbol if jax renames
+    # it again — better an import-time failure than a NoneType call
+    # deep inside pallas_call setup
+    CompilerParams = pltpu.TPUCompilerParams

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._compat import CompilerParams
+
 NEG_INF = float("-inf")
 
 
@@ -88,7 +90,7 @@ def decode_attention(q, k, v, lens, *, n_splits: int = 8,
             jax.ShapeDtypeStruct((B, KH, ns, G, 1), jnp.float32),
             jax.ShapeDtypeStruct((B, KH, ns, G, 1), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel")),
         interpret=interpret,
     )(lens, qg, k, v)

@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._compat import CompilerParams
+
 from .decode_attention import decode_attention, lse_merge
 
 NEG_INF = float("-inf")
@@ -112,7 +114,7 @@ def prefix_partial(q, kp, vp, *, block_k: int = 128,
             pltpu.VMEM((BG, 1), jnp.float32),
             pltpu.VMEM((BG, D), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(qf, kp, vp)

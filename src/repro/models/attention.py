@@ -215,6 +215,35 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, window: int = 0):
     return out.reshape(B, H, D)
 
 
+def paged_attention(q, k_pages, v_pages, page_table, lens, *,
+                    impl: str = "auto"):
+    """Decode attention over a shared KV page pool.
+
+    q: [B, H, D]; k/v_pages: [n_pages, page_size, KH, D] (the pool —
+    shared across every request on the instance); page_table: [B, P]
+    int32 page ids (entries past a request's length may point anywhere,
+    they are masked); lens: [B] valid token counts. Returns [B, H, D].
+
+    'pallas' streams pages HBM->VMEM via the page-table-prefetched
+    kernel (kernels/paged_attention.py); 'gather' is the jnp reference —
+    a per-request gather of the table rows followed by masked dense
+    decode attention. 'auto' picks pallas on TPU, gather elsewhere
+    (interpret-mode pallas unrolls the page grid and is far slower than
+    one fused gather+softmax on CPU).
+    """
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "gather"
+    if impl == "pallas":
+        from ..kernels.paged_attention import paged_decode_attention
+        return paged_decode_attention(q, k_pages, v_pages, page_table, lens)
+    B, H, D = q.shape
+    _, PS, KH, _ = k_pages.shape
+    P = page_table.shape[1]
+    k = k_pages[page_table].reshape(B, P * PS, KH, D)
+    v = v_pages[page_table].reshape(B, P * PS, KH, D)
+    return decode_attention(q, k, v, lens)
+
+
 def extend_attention(q, k_cache, v_cache, start, kv_len, *, window: int = 0):
     """Chunked-prefill attention: new queries against a partially-filled
     cache. q: [B, C, H, D] (chunk of C new tokens whose first token sits

@@ -23,7 +23,8 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from .attention import attention, decode_attention, extend_attention
+from .attention import (attention, decode_attention, extend_attention,
+                        paged_attention)
 from .common import (constrain_batch, constrain_moe_dispatch, rms_norm,
                      rope)
 from .spec import Spec
@@ -134,6 +135,66 @@ def attn_step(p, cfg, x, cache, pos, *, window: int = 0):
     o = decode_attention(q, k_cache, v_cache, cache_len)
     y = jnp.einsum("bhk,hkd->bd", o, p["wo"])
     return y, {"k": k_cache, "v": v_cache}
+
+
+def attn_step_paged(p, cfg, x, pages, page_table, pos):
+    """Decode one token against the shared page pool (no per-request
+    cache buffer). x: [B, d]; pages {"k","v"}: [n_pages, PS, KH, D] —
+    the POOL, shared by every request on the instance; page_table:
+    [B, P] page ids; pos: [B] context length so far (the fed token's
+    absolute position). The new KV is scattered into page
+    page_table[b, pos//PS] at offset pos % PS; the pool rows written
+    by different batch lanes are guaranteed distinct by the host-side
+    allocator (shared pages are CoW'd before a sequence may write).
+    Returns (y, new pages)."""
+    B, d = x.shape
+    PS = pages["k"].shape[1]
+    q = jnp.einsum("bd,dhk->bhk", x, p["wq"])
+    k = jnp.einsum("bd,dhk->bhk", x, p["wk"])
+    v = jnp.einsum("bd,dhk->bhk", x, p["wv"])
+    pos = jnp.asarray(pos)
+    if pos.ndim == 0:
+        pos = jnp.full((B,), pos)
+    if cfg.rope_theta:
+        q = rope(q[:, None], pos[:, None], cfg.rope_theta)[:, 0]
+        k = rope(k[:, None], pos[:, None], cfg.rope_theta)[:, 0]
+    bidx = jnp.arange(B)
+    pids = page_table[bidx, pos // PS]
+    offs = pos % PS
+    k_pages = pages["k"].at[pids, offs].set(k.astype(pages["k"].dtype))
+    v_pages = pages["v"].at[pids, offs].set(v.astype(pages["v"].dtype))
+    o = paged_attention(q, k_pages, v_pages, page_table, pos + 1)
+    y = jnp.einsum("bhk,hkd->bd", o, p["wo"])
+    return y, {"k": k_pages, "v": v_pages}
+
+
+def attn_extend_paged(p, cfg, x, pages, page_table, start):
+    """Chunked-prefill extension against the page pool: x [B, C, d] new
+    tokens at absolute position ``start`` (scalar or [B]); the chunk's
+    KV is scattered into the table's pages, then chunk queries attend
+    to the gathered table rows. Returns (y [B, C, d], new pages)."""
+    B, C, d = x.shape
+    PS = pages["k"].shape[1]
+    P = page_table.shape[1]
+    q, k, v = _project_qkv(p, cfg, x)
+    start = jnp.asarray(start)
+    positions = jnp.broadcast_to(
+        (start[:, None] if start.ndim else start)
+        + jnp.arange(C)[None, :], (B, C))
+    if cfg.rope_theta:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    bidx = jnp.arange(B)[:, None]
+    pids = page_table[bidx, positions // PS]                 # [B, C]
+    offs = positions % PS
+    k_pages = pages["k"].at[pids, offs].set(k.astype(pages["k"].dtype))
+    v_pages = pages["v"].at[pids, offs].set(v.astype(pages["v"].dtype))
+    KH, D = k_pages.shape[2], k_pages.shape[3]
+    kc = k_pages[page_table].reshape(B, P * PS, KH, D)
+    vc = v_pages[page_table].reshape(B, P * PS, KH, D)
+    o = extend_attention(q, kc, vc, start, start + C)
+    y = jnp.einsum("...hk,hkd->...d", o, p["wo"])
+    return y, {"k": k_pages, "v": v_pages}
 
 
 def attn_extend(p, cfg, x, cache, start, *, window: int = 0):

@@ -35,6 +35,13 @@ import jax.numpy as jnp
 
 from .spec import Spec
 
+# shard_map graduated from jax.experimental to jax.shard_map across
+# releases; resolve whichever this jax ships
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+else:  # pragma: no cover - older jax
+    from jax.experimental.shard_map import shard_map as _shard_map
+
 
 def applicable(cfg, tp: int) -> bool:
     return (cfg.n_experts > 0 and tp % cfg.n_experts == 0
@@ -119,7 +126,7 @@ def moe_halfexpert(p, cfg, x, mesh, *, data_axis: str = "data",
               "wg": P(model_axis, None, data_axis),
               "wu": P(model_axis, None, data_axis),
               "wd": P(model_axis, data_axis, None)}
-    fn = jax.shard_map(
+    fn = _shard_map(
         lambda pp, xx: body(pp, x=xx),
         mesh=mesh,
         in_specs=(spec_w, P(batch_spec, None, None)),

@@ -206,6 +206,36 @@ def forward_full(params, cfg, x, *, kv_src=None, want_cache: bool = False,
 # single-token decode step
 # ---------------------------------------------------------------------
 
+def _mlp_step(pf, x_dtype, h):
+    """Inline SwiGLU for the [B, d] step paths."""
+    g = jax.nn.silu(jnp.einsum("bd,df->bf", h, pf["wg"])
+                    .astype(jnp.float32))
+    u = jnp.einsum("bd,df->bf", h, pf["wu"]).astype(jnp.float32)
+    return jnp.einsum("bf,fd->bd", (g * u).astype(x_dtype), pf["wd"])
+
+
+def _ffn_step_tail(p, cfg, pos: PosPlan, x):
+    """norm2 + FFN after the mixer residual — shared by the dense and
+    paged single-token step paths."""
+    h2 = rms_norm(x, p["norm2"], cfg.norm_eps)
+    if pos.ffn == "moe":
+        from .common import ep_decode
+        if ep_decode():
+            # capacity dispatch with S=1 (cap = K: exact, dropless).
+            # When the expert dim is SHARDED (jamba: 16e on 16-way
+            # model), gather-based moe_step would all-gather whole
+            # expert tensors per step (measured 56GiB on jamba); the
+            # dispatch form keeps experts parallel and moves only
+            # token activations.
+            return x + L.moe_full(p["ffn"], cfg, h2[:, None])[:, 0]
+        # experts replicated / ff-sharded (mixtral, grok: 8e on a
+        # 16-way axis): per-token weight slicing is shard-local,
+        # and dispatch's E/K x overcompute would cost more
+        # (measured 2.3x step regression on mixtral decode).
+        return x + L.moe_step(p["ffn"], cfg, h2)
+    return x + _mlp_step(p["ffn"], x.dtype, h2)
+
+
 def _pos_step(p, cfg, pos: PosPlan, x, cache, position):
     new: Dict[str, Any] = {}
     h = rms_norm(x, p["norm1"], cfg.norm_eps)
@@ -231,12 +261,7 @@ def _pos_step(p, cfg, pos: PosPlan, x, cache, position):
                             {"conv": cache["conv"], "ssm": cache["ssm"]})
         new.update(c)
     if cfg.parallel_block:
-        g = jax.nn.silu(jnp.einsum("bd,df->bf", h, p["ffn"]["wg"])
-                        .astype(jnp.float32))
-        u = jnp.einsum("bd,df->bf", h, p["ffn"]["wu"]).astype(jnp.float32)
-        y2 = jnp.einsum("bf,fd->bd", (g * u).astype(x.dtype),
-                        p["ffn"]["wd"])
-        return x + y + y2, new
+        return x + y + _mlp_step(p["ffn"], x.dtype, h), new
     x = x + y
     if pos.cross:
         hc = rms_norm(x, p["cross_norm"], cfg.norm_eps)
@@ -244,30 +269,18 @@ def _pos_step(p, cfg, pos: PosPlan, x, cache, position):
                                   {"k": cache["ck"], "v": cache["cv"]})
         x = x + yc
         new["ck"], new["cv"] = cache["ck"], cache["cv"]
-    h2 = rms_norm(x, p["norm2"], cfg.norm_eps)
-    if pos.ffn == "moe":
-        from .common import ep_decode
-        if ep_decode():
-            # capacity dispatch with S=1 (cap = K: exact, dropless).
-            # When the expert dim is SHARDED (jamba: 16e on 16-way
-            # model), gather-based moe_step would all-gather whole
-            # expert tensors per step (measured 56GiB on jamba); the
-            # dispatch form keeps experts parallel and moves only
-            # token activations.
-            x = x + L.moe_full(p["ffn"], cfg, h2[:, None])[:, 0]
-        else:
-            # experts replicated / ff-sharded (mixtral, grok: 8e on a
-            # 16-way axis): per-token weight slicing is shard-local,
-            # and dispatch's E/K x overcompute would cost more
-            # (measured 2.3x step regression on mixtral decode).
-            x = x + L.moe_step(p["ffn"], cfg, h2)
-    else:
-        g = jax.nn.silu(jnp.einsum("bd,df->bf", h2, p["ffn"]["wg"])
-                        .astype(jnp.float32))
-        u = jnp.einsum("bd,df->bf", h2, p["ffn"]["wu"]).astype(jnp.float32)
-        x = x + jnp.einsum("bf,fd->bd", (g * u).astype(x.dtype),
-                           p["ffn"]["wd"])
-    return x, new
+    return _ffn_step_tail(p, cfg, pos, x), new
+
+
+def _pos_step_paged(p, cfg, pos: PosPlan, x, pages, page_table, position):
+    """One attention layer position, single-token decode against the
+    shared page pool. The FFN tail is the dense step's."""
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    y, pages = L.attn_step_paged(p["attn"], cfg, h, pages, page_table,
+                                 position)
+    if cfg.parallel_block:
+        return x + y + _mlp_step(p["ffn"], x.dtype, h), pages
+    return _ffn_step_tail(p, cfg, pos, x + y), pages
 
 
 def forward_step(params, cfg, x, cache, position
@@ -288,6 +301,33 @@ def forward_step(params, cfg, x, cache, position
 
     hidden, new_cache = jax.lax.scan(group_body, x, (params, cache))
     return hidden, new_cache
+
+
+def forward_step_paged(params, cfg, x, pages, page_table, position
+                       ) -> Tuple[jax.Array, Pytree]:
+    """x: [B, d] one embedded token per batch lane; ``pages`` is the
+    instance-wide KV page pool {"p{j}": {"g{g}": {"k","v": [n_pages,
+    PS, KH, D]}}} (caller donates the buffers); ``page_table``: [B, P]
+    page ids; ``position``: [B] int32 context lengths. Returns (hidden,
+    updated pool). Attention-only stacks — see paged_cache_specs.
+
+    Unlike the dense step, the layer loop is UNROLLED rather than
+    scanned: scanning over the pool would slice each group's pages in
+    (and stack them back out) every iteration — a full pool copy per
+    step, exactly the traffic paging exists to avoid. Unrolled, every
+    pool leaf flows through one scatter + one gather, so XLA aliases
+    the donated buffers in place; HLO grows O(n_layers), acceptable for
+    a serving step."""
+    plan = layer_plan(cfg)
+    new = {pj: dict(groups) for pj, groups in pages.items()}
+    for g in range(cfg.n_groups):
+        x = constrain_batch(x)
+        for j, pos in enumerate(plan):
+            gp = jax.tree.map(lambda a: a[g], params[f"p{j}"])
+            x, c = _pos_step_paged(gp, cfg, pos, x, new[f"p{j}"][f"g{g}"],
+                                   page_table, position)
+            new[f"p{j}"][f"g{g}"] = c
+    return constrain_batch(x), new
 
 
 # ---------------------------------------------------------------------
@@ -331,12 +371,24 @@ def _pos_extend(p, cfg, pos: PosPlan, x, cache, start):
                                     {"k": cache["ck"], "v": cache["cv"]})
         x = x + yc
         new["ck"], new["cv"] = cache["ck"], cache["cv"]
+    return _ffn_extend_tail(p, cfg, pos, x), new
+
+
+def _ffn_extend_tail(p, cfg, pos: PosPlan, x):
+    """norm2 + FFN over a chunk — shared by dense and paged extend."""
     h2 = rms_norm(x, p["norm2"], cfg.norm_eps)
     if pos.ffn == "moe":
-        x = x + L.moe_extend(p["ffn"], cfg, h2)   # dropless: chunk == full
-    else:
-        x = x + L.mlp_full(p["ffn"], cfg, h2)
-    return x, new
+        return x + L.moe_extend(p["ffn"], cfg, h2)  # dropless: chunk == full
+    return x + L.mlp_full(p["ffn"], cfg, h2)
+
+
+def _pos_extend_paged(p, cfg, pos: PosPlan, x, pages, page_table, start):
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    y, pages = L.attn_extend_paged(p["attn"], cfg, h, pages, page_table,
+                                   start)
+    if cfg.parallel_block:
+        return x + y + L.mlp_full(p["ffn"], cfg, h), pages
+    return _ffn_extend_tail(p, cfg, pos, x + y), pages
 
 
 def seed_cross_cache(params, cfg, kv_src, cache) -> Pytree:
@@ -381,6 +433,23 @@ def forward_extend(params, cfg, x, cache, start) -> Tuple[jax.Array, Pytree]:
     return hidden, new_cache
 
 
+def forward_extend_paged(params, cfg, x, pages, page_table, start
+                         ) -> Tuple[jax.Array, Pytree]:
+    """Chunked prefill against the page pool: x [B, C, d] new embedded
+    tokens at absolute start position(s) ``start``; pages/page_table as
+    in forward_step_paged (unrolled for the same aliasing reason).
+    Returns (hidden [B, C, d], updated pool)."""
+    plan = layer_plan(cfg)
+    new = {pj: dict(groups) for pj, groups in pages.items()}
+    for g in range(cfg.n_groups):
+        for j, pos in enumerate(plan):
+            gp = jax.tree.map(lambda a: a[g], params[f"p{j}"])
+            x, c = _pos_extend_paged(gp, cfg, pos, x, new[f"p{j}"][f"g{g}"],
+                                     page_table, start)
+            new[f"p{j}"][f"g{g}"] = c
+    return x, new
+
+
 # ---------------------------------------------------------------------
 # cache specs (abstract, for dry-run and engine allocation)
 # ---------------------------------------------------------------------
@@ -419,6 +488,35 @@ def cache_specs(cfg, batch: int, seq: int) -> Pytree:
                 c["cv"] = c["ck"]
             out[f"p{j}"] = stackG(c)
     return out
+
+
+def paged_servable(cfg) -> bool:
+    """True when every layer position can be served from the KV page
+    pool: self-attention mixers only, no cross-attention, no sliding
+    window, decoder-only. Recurrent/hybrid/VLM stacks use the dense
+    reference path (snapshot-granularity reuse, DESIGN.md §5)."""
+    if cfg.encoder_decoder:
+        return False
+    return all(p.mixer == "attn" and not p.cross and not p.window
+               for p in layer_plan(cfg))
+
+
+def paged_cache_specs(cfg, n_pages: int, page_size: int) -> Pytree:
+    """ShapeDtypeStructs of the per-layer KV page pools: one
+    [n_pages, page_size, KH, D] k/v pair per (attention position,
+    scan group) — i.e. per physical layer. The pool is instance-wide:
+    requests address it through page tables, so there is no batch or
+    seq dim, and leaves are kept per-layer (not stacked over groups)
+    so the unrolled paged forwards update them in place."""
+    if not paged_servable(cfg):
+        raise ValueError(f"{cfg.name}: stack is not paged-servable")
+    plan = layer_plan(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    s = jax.ShapeDtypeStruct(
+        (n_pages, page_size, cfg.n_kv_heads, cfg.head_dim), dt)
+    return {f"p{j}": {f"g{g}": {"k": s, "v": s}
+                      for g in range(cfg.n_groups)}
+            for j, _pos in enumerate(plan)}
 
 
 def cache_bytes(cfg, batch: int, seq: int) -> int:

@@ -43,6 +43,18 @@ class ModelAPI:
     # batch = {"tokens": [B, C], "start": scalar | [B]}
     extend: Optional[Callable[[Pytree, Pytree, Dict],
                               Tuple[jax.Array, Pytree]]] = None
+    # paged-KV entry points (attention-only decoder stacks; None when
+    # the arch is not paged-servable — see transformer.paged_servable):
+    #   decode_paged(params, pages, {"tokens":[B], "pos":[B],
+    #                                "page_table":[B,P]})
+    #   extend_paged(params, pages, {"tokens":[B,C], "start": scalar|[B],
+    #                                "page_table":[B,P]})
+    #   paged_cache_specs(n_pages, page_size) -> pool spec pytree
+    decode_paged: Optional[Callable[[Pytree, Pytree, Dict],
+                                    Tuple[jax.Array, Pytree]]] = None
+    extend_paged: Optional[Callable[[Pytree, Pytree, Dict],
+                                    Tuple[jax.Array, Pytree]]] = None
+    paged_cache_specs: Optional[Callable[[int, int], Pytree]] = None
 
     def init(self, key) -> Pytree:
         return init_params(self.specs, key)
@@ -133,8 +145,31 @@ def _build_decoder(cfg: ModelConfig) -> ModelAPI:
         nxt = top1_logits(h[:, -1], L.head_matrix(params["embed"], cfg))
         return nxt, cache
 
+    def decode_paged(params, pages, batch):
+        x = L.embed_tokens(params["embed"], cfg, batch["tokens"])
+        h, pages = T.forward_step_paged(params["stack"], cfg, x, pages,
+                                        batch["page_table"], batch["pos"])
+        h = rms_norm(h, params["embed"]["final_norm"], cfg.norm_eps)
+        nxt = top1_logits(h, L.head_matrix(params["embed"], cfg))
+        return nxt, pages
+
+    def extend_paged(params, pages, batch):
+        x = L.embed_tokens(params["embed"], cfg, batch["tokens"])
+        h, pages = T.forward_extend_paged(params["stack"], cfg, x, pages,
+                                          batch["page_table"],
+                                          batch["start"])
+        h = rms_norm(h, params["embed"]["final_norm"], cfg.norm_eps)
+        nxt = top1_logits(h[:, -1], L.head_matrix(params["embed"], cfg))
+        return nxt, pages
+
+    paged = T.paged_servable(cfg)
     return ModelAPI(cfg, specs, loss, prefill, decode,
-                    lambda b, s: T.cache_specs(cfg, b, s), extend)
+                    lambda b, s: T.cache_specs(cfg, b, s), extend,
+                    decode_paged=decode_paged if paged else None,
+                    extend_paged=extend_paged if paged else None,
+                    paged_cache_specs=(
+                        (lambda n, ps: T.paged_cache_specs(cfg, n, ps))
+                        if paged else None))
 
 
 # ---------------------------------------------------------------------

@@ -2,10 +2,28 @@
 
 This is the control-plane-correctness engine: a tiny model runs actual
 prefill/decode math on CPU while the LocalScheduler drives iteration-
-level scheduling (priority groups, chunked prefill, LRU eviction). The
-radix-tree prefix reuse is real: cached attention-KV slabs are copied
-into a new request's cache so its prefill skips the shared prefix
-entirely — the compute saving Preble schedules for.
+level scheduling (priority groups, chunked prefill, LRU eviction).
+
+Two data planes share the scheduling logic (DESIGN.md §2):
+
+  * PAGED (default for attention-only stacks) — all KV lives in one
+    device-resident page pool per layer ([n_pages, page_size, KH, D]);
+    requests address it through page tables held by
+    serving/kv_cache.py::PagedKVPool. Prefix reuse is ``fork()`` page
+    aliasing with refcounts + copy-on-write — admission performs ZERO
+    device KV copies (one page-granular CoW copy only when the reuse
+    boundary is not page-aligned). Decode runs as a single jit'd step
+    over power-of-two-bucketed batch slots, so steady-state decode does
+    no per-iteration cache concat/index copies and no per-batch-size
+    retraces (DESIGN.md §3). Radix-tree nodes alias the pool through
+    per-node page tables; eviction maps to ``release``/``trim``
+    (DESIGN.md §4).
+
+  * DENSE (reference; recurrent/hybrid/VLM stacks) — per-request linear
+    cache pytrees; cached attention-KV slabs are copied into a new
+    request's cache, and batched decode rebuilds the batch cache with
+    concat/index per iteration. Kept as the equivalence oracle for the
+    paged path and as the only path for snapshot-granularity archs.
 
 Reuse granularity (DESIGN.md §5):
   * attention KV      — token granularity (exact: KV depends only on the
@@ -37,17 +55,27 @@ from .kv_cache import PagedKVPool
 Pytree = Any
 
 
+class AdmissionError(RuntimeError):
+    """A request the engine cannot serve (oversized for max_context).
+    Distinct from ValueError so genuine defects in admission code are
+    not silently converted into per-request aborts."""
+
+
 @dataclass
 class EngineConfig:
     instance_id: int = 0
-    max_context: int = 256          # per-request cache length (linear)
+    max_context: int = 256          # per-request context bound
     max_batch_requests: int = 8
     chunk_size: int = 32            # Sarathi chunk
     max_batch_tokens: int = 128
-    capacity_tokens: int = 16384    # KV pool budget (host accounting)
+    capacity_tokens: int = 16384    # KV pool budget (tokens)
     page_size: int = 16
     priority_groups: int = 10
     fcfs: bool = False
+    # None = auto: paged when the arch is paged-servable (attention-only
+    # decoder stack), dense otherwise. True forces paged (raises if the
+    # arch can't be paged-served); False forces the dense reference.
+    paged: Optional[bool] = None
 
 
 def _cache_zeros(specs: Pytree) -> Pytree:
@@ -62,6 +90,12 @@ def _cache_index(cache: Pytree, i: int) -> Pytree:
     return jax.tree.map(lambda x: x[:, i:i + 1], cache)
 
 
+def _bucket(n: int) -> int:
+    """Next power of two >= n: decode batches are padded to bucket sizes
+    so the jit'd step retraces O(log max_batch) times, not per size."""
+    return 1 << max(n - 1, 0).bit_length()
+
+
 class Engine:
     def __init__(self, cfg, params, econf: EngineConfig,
                  on_evict: Optional[Callable] = None):
@@ -73,6 +107,11 @@ class Engine:
         self.econf = econf
         self.has_recurrent = any(
             p.mixer in ("mamba", "rwkv") for p in T.layer_plan(self.model_cfg))
+        self.paged = (econf.paged if econf.paged is not None
+                      else self.api.decode_paged is not None)
+        if self.paged and self.api.decode_paged is None:
+            raise ValueError(f"{cfg.name} is not paged-servable "
+                             "(recurrent/cross/encdec positions)")
         self.scheduler = LocalScheduler(
             LocalSchedulerConfig(
                 instance_id=econf.instance_id,
@@ -84,36 +123,214 @@ class Engine:
                 fcfs=econf.fcfs),
             on_evict=self._on_evict)
         self._ext_evict = on_evict
-        self.pool = PagedKVPool(econf.capacity_tokens // econf.page_size,
-                                econf.page_size)
-        # per-request live state: cache pytree + next input token
+        # per-request live state: next input token (+ cache pytree when dense)
         self.live: Dict[int, Dict[str, Any]] = {}
-        # radix node_id -> attention-KV slab {p_j: {"k": [G,1,span,KH,D],...}}
+        self.stats = {"reused_tokens": 0, "prefilled_tokens": 0,
+                      "decode_steps": 0, "iterations": 0,
+                      "decode_batches": 0, "cache_concat_calls": 0,
+                      "seed_aliased_pages": 0, "seed_copied_pages": 0,
+                      "aborted": 0}
+        self.failed = False
+        if self.paged:
+            self._init_paged()
+        else:
+            self._init_dense()
+
+    # ================= paged data plane =====================================
+
+    def _init_paged(self) -> None:
+        ps = self.econf.page_size
+        # scheduler token accounting keeps usage under capacity_tokens;
+        # slack pages absorb page-granularity fragmentation (every live
+        # sequence wastes < page_size tokens in its tail page), +1 for
+        # the reserved scratch page that padded batch lanes write into.
+        # slack scales with concurrency: one partial tail page AND one
+        # unaccounted CoW duplicate per live request, + the scratch page
+        n_pages = (self.econf.capacity_tokens // ps
+                   + 2 * self.econf.max_batch_requests + 1)
+        self.pool = PagedKVPool(n_pages, ps)
+        self._scratch_page = self.pool.reserve_page()   # page 0, pinned
+        assert self._scratch_page == 0
+        self._pages_per_req = -(-self.econf.max_context // ps)
+        self.pages = _cache_zeros(self.api.paged_cache_specs(n_pages, ps))
+        self._decode_paged_fn = jax.jit(self._decode_paged_impl,
+                                        donate_argnums=(0,))
+        self._extend_paged_fn = jax.jit(self._extend_paged_impl,
+                                        donate_argnums=(0,))
+        self._copy_page_fn = jax.jit(self._copy_page_impl,
+                                     donate_argnums=(0,))
+        # keep node->page aliases aligned with radix node splits
+        self.scheduler.tree.split_hooks.append(self._on_split)
+
+    def _init_dense(self) -> None:
+        self.pool = PagedKVPool(
+            self.econf.capacity_tokens // self.econf.page_size,
+            self.econf.page_size)
+        # radix node_id -> attention-KV slab {p_j: {"k": [G,1,span,KH,D],..}}
         self.kv_store: Dict[int, Pytree] = {}
         # exact-prefix -> recurrent state snapshot (leaf granularity)
         self.state_store: Dict[Tuple[int, ...], Pytree] = {}
-        self._cache_spec = self.api.cache_specs(1, econf.max_context)
+        self._cache_spec = self.api.cache_specs(1, self.econf.max_context)
         self._decode_fn = jax.jit(self._decode_impl, donate_argnums=(0,))
-        self.stats = {"reused_tokens": 0, "prefilled_tokens": 0,
-                      "decode_steps": 0, "iterations": 0}
-        self.failed = False
 
     def _decode_impl(self, caches, tokens, pos):
         nxt, caches = self.api.decode(self.params, caches,
                                       {"tokens": tokens, "pos": pos})
         return nxt, caches
 
+    def _decode_paged_impl(self, pages, tokens, pos, page_table):
+        return self.api.decode_paged(self.params, pages,
+                                     {"tokens": tokens, "pos": pos,
+                                      "page_table": page_table})
+
+    def _extend_paged_impl(self, pages, tokens, start, page_table):
+        return self.api.extend_paged(self.params, pages,
+                                     {"tokens": tokens, "start": start,
+                                      "page_table": page_table})
+
+    def _copy_page_impl(self, pages, src, dst):
+        # pool leaves are [n_pages, PS, KH, D] (per layer; see
+        # transformer.paged_cache_specs)
+        return jax.tree.map(lambda a: a.at[dst].set(a[src]), pages)
+
+    # ---- host-side page bookkeeping ----------------------------------------
+
+    def _page_table_rows(self, seq_ids, n_rows: Optional[int] = None
+                         ) -> np.ndarray:
+        """[n_rows, P] int32 page ids; rows beyond a sequence's pages —
+        and whole padding rows — point at the reserved scratch page 0
+        (masked by lens on the read side; padded lanes write into it)."""
+        n_rows = n_rows if n_rows is not None else len(seq_ids)
+        pt = np.zeros((n_rows, self._pages_per_req), np.int32)
+        for i, sid in enumerate(seq_ids):
+            pages = self.pool.tables[sid].pages
+            pt[i, :len(pages)] = pages
+        return pt
+
+    def _append_with_cow(self, seq_id, tokens: int) -> None:
+        """pool.append + the device-side half of copy-on-write: when
+        append replaces a shared partial tail page with a private one
+        (observed as the page id at the old tail index changing), the
+        old page's contents are copied page-granularly on device — the
+        only copy in the reuse path; it never happens for page-aligned
+        reuse boundaries."""
+        t = self.pool.tables[seq_id]
+        old_tail = t.pages[-1] if t.pages else None
+        tail_idx = len(t.pages) - 1
+        self.pool.append(seq_id, tokens)
+        if old_tail is not None and t.pages[tail_idx] != old_tail:
+            self.pages = self._copy_page_fn(
+                self.pages, jnp.int32(old_tail),
+                jnp.int32(t.pages[tail_idx]))
+            self.stats["seed_copied_pages"] += 1
+
+    def _ensure_free(self, tokens: int) -> None:
+        """The scheduler's token accounting keeps the pool under
+        capacity, but page-granularity fragmentation can briefly exceed
+        it: reclaim LRU cached nodes (through the scheduler's own
+        accounting) until the pool fits the reservation."""
+        sch, inst = self.scheduler, self.econf.instance_id
+        while self.pool.free_tokens() < tokens:
+            # pages shared between nodes free fewer pool tokens than the
+            # plan's token count, so loop until the pool actually fits
+            plan = sch.tree.plan_eviction(
+                inst, tokens - self.pool.free_tokens())
+            if not plan:
+                raise MemoryError(
+                    f"KV pool exhausted: need {tokens} tokens, "
+                    f"free {self.pool.free_tokens()}, nothing evictable")
+            sch.apply_eviction(plan)
+
+    def _on_split(self, head, tail) -> None:
+        """RadixTree split hook: ``head`` keeps its node id but now
+        covers fewer tokens; the new ``tail`` node inherits the deeper
+        page alias before the head's is trimmed — pure refcount moves,
+        no device traffic."""
+        key_h = ("node", head.node_id)
+        t = self.pool.tables.get(key_h)
+        if t is None:
+            return
+        d_head = head.depth_tokens()
+        d_tail = d_head + len(tail.tokens)
+        key_t = ("node", tail.node_id)
+        if key_t not in self.pool.tables and t.num_tokens >= d_tail:
+            self.pool.fork(key_h, key_t, d_tail)
+        self.pool.trim(key_h, min(d_head, t.num_tokens))
+
     # ---- eviction hook ------------------------------------------------------
 
     def _on_evict(self, instance_id: int, node_ids: List[int]) -> None:
-        for nid in node_ids:
-            self.kv_store.pop(nid, None)
+        if self.paged:
+            for nid in node_ids:
+                self.pool.release(("node", nid))
+        else:
+            for nid in node_ids:
+                self.kv_store.pop(nid, None)
         if self._ext_evict is not None:
             self._ext_evict(instance_id, node_ids)
 
-    # ---- admission: seed a request's cache from the radix KV store ----------
+    # ---- admission ----------------------------------------------------------
 
     def _admit(self, r: Request, now: float) -> None:
+        total = r.prompt_len + r.max_new_tokens
+        if total > self.econf.max_context:
+            # reject before any pool/cache state exists: both planes
+            # would otherwise corrupt silently (dense clamps its cache
+            # writes; paged overflows its page-table row)
+            raise AdmissionError(
+                f"request {r.request_id}: prompt+max_new = {total} "
+                f"exceeds max_context {self.econf.max_context}")
+        if self.paged:
+            self._admit_paged(r, now)
+        else:
+            self._admit_dense(r, now)
+
+    def _admit_paged(self, r: Request, now: float) -> None:
+        """Seed a request by ALIASING the matched prefix's pages: fork
+        the deepest covering node sequence — refcount increments only,
+        zero KV device copies (DESIGN.md §4)."""
+        # the match is always node-aligned here: _reserve already ran
+        # tree.insert(r.tokens), which split any partially-matching
+        # node at this prompt's boundary (splits are the only boundary
+        # edits; nodes never merge), so no mid-node case exists
+        m = self.scheduler.tree.match(r.tokens, now=now)
+        best_key, best_len, off = None, 0, 0
+        for node in m.path:
+            off += len(node.tokens)
+            t = self.pool.tables.get(("node", node.node_id))
+            if t is not None and t.num_tokens >= off:
+                best_key, best_len = ("node", node.node_id), off
+        # a fully-cached prompt must still run its LAST token through
+        # the model — that forward produces the first output token
+        # (same rule as vLLM/SGLang: reuse cap = prompt_len - 1)
+        reuse = min(best_len, r.prompt_len - 1)
+        rid = ("req", r.request_id)
+        need = r.prompt_len - reuse + r.max_new_tokens
+        # + one page of headroom for the CoW of a shared partial tail
+        self._ensure_free(need + self.pool.page_size)
+        if best_key is not None and reuse > 0:
+            self.pool.fork(best_key, rid, reuse)
+            self.stats["seed_aliased_pages"] += len(
+                self.pool.tables[rid].pages)
+        else:
+            reuse = 0
+            self.pool.create(rid)
+        try:
+            self._append_with_cow(rid, need)
+        except MemoryError:
+            self.pool.release(rid)    # don't leak the table: a retry
+            raise                     # would trip pool.create's assert
+        # the scheduler reserved prompt - cached_len + max_new, but the
+        # engine may reuse fewer tokens (matched nodes whose pages were
+        # never stored / already evicted); surface the difference so
+        # admission gating sees the pool's true occupancy
+        if r.cached_len > reuse:
+            self.scheduler.used_tokens += r.cached_len - reuse
+        self.live[r.request_id] = {"next": None}
+        r.prefill_done = reuse
+        self.stats["reused_tokens"] += reuse
+
+    def _admit_dense(self, r: Request, now: float) -> None:
         cache = _cache_zeros(self._cache_spec)
         m = self.scheduler.tree.match(r.tokens, now=now)
         reuse = 0
@@ -121,9 +338,6 @@ class Engine:
             reuse = self._seed_attn_kv(cache, m)
         elif m.matched_len and self.has_recurrent:
             reuse = self._seed_snapshot(cache, r.tokens, m.matched_len)
-        # a fully-cached prompt must still run its LAST token through
-        # the model — that forward produces the first output token
-        # (same rule as vLLM/SGLang: reuse cap = prompt_len - 1)
         reuse = min(reuse, r.prompt_len - 1)
         if self.pool.free_tokens() >= (r.prompt_len - reuse
                                        + r.max_new_tokens):
@@ -135,7 +349,8 @@ class Engine:
         self.stats["reused_tokens"] += reuse
 
     def _seed_attn_kv(self, cache: Pytree, m) -> int:
-        """Copy cached KV slabs of the matched path into cache[:reuse]."""
+        """DENSE reference: copy cached KV slabs of the matched path
+        into cache[:reuse] (the copies the paged plane exists to avoid)."""
         off = 0
         for node in m.path:
             slab = self.kv_store.get(node.node_id)
@@ -204,13 +419,27 @@ class Engine:
                 snap[pj][name] = jnp.array(arr, copy=True)
         self.state_store[key] = snap
 
-    # ---- post-prefill: donate KV slabs / snapshots to the store -------------
+    # ---- post-prefill: publish the prompt's KV to the prefix store ----------
 
     def _store_prefix(self, r: Request, now: float) -> None:
-        cache = self.live[r.request_id]["cache"]
         path = self.scheduler.tree.insert(
             r.tokens, instance=self.econf.instance_id, now=now)
+        if self.paged:
+            # alias the request's pages per radix node: each node's
+            # sequence covers the full root->node token path, so any
+            # later match can fork from the deepest covering node.
+            rid = ("req", r.request_id)
+            if rid not in self.pool.tables:
+                return
+            off = 0
+            for node in path:
+                off += len(node.tokens)
+                key = ("node", node.node_id)
+                if key not in self.pool.tables:
+                    self.pool.fork(rid, key, off)
+            return
         if not self.has_recurrent:
+            cache = self.live[r.request_id]["cache"]
             off = 0
             for node in path:
                 span = len(node.tokens)
@@ -239,12 +468,21 @@ class Engine:
 
         # -- prefill items (each runs alone: variable chunk/position) --
         newly_prefilled: List[Request] = []
+        aborted: List[Request] = []
         for item in batch.items:
             if item.phase != "prefill":
                 continue
             r = item.request
             if r.request_id not in self.live:
-                self._admit(r, now)
+                try:
+                    self._admit(r, now)
+                except (AdmissionError, MemoryError):
+                    # unservable (oversized prompt / pool exhausted):
+                    # fail THIS request, keep the instance alive
+                    self.scheduler.abort(r)
+                    self.stats["aborted"] += 1
+                    aborted.append(r)
+                    continue
                 # engine may reuse less than the scheduler assumed
                 # (recurrent snapshot granularity) — take the true value
                 item.chunk_tokens = min(item.chunk_tokens,
@@ -259,11 +497,17 @@ class Engine:
             if chunk <= 0:
                 continue
             toks = jnp.asarray(r.tokens[start:start + chunk], jnp.int32)
-            cache = self.live[r.request_id]["cache"]
-            nxt, cache = self.api.extend(
-                self.params, cache, {"tokens": toks[None],
-                                     "start": jnp.int32(start)})
-            self.live[r.request_id]["cache"] = cache
+            if self.paged:
+                pt = jnp.asarray(
+                    self._page_table_rows([("req", r.request_id)]))
+                nxt, self.pages = self._extend_paged_fn(
+                    self.pages, toks[None], jnp.int32(start), pt)
+            else:
+                cache = self.live[r.request_id]["cache"]
+                nxt, cache = self.api.extend(
+                    self.params, cache, {"tokens": toks[None],
+                                         "start": jnp.int32(start)})
+                self.live[r.request_id]["cache"] = cache
             self.stats["prefilled_tokens"] += chunk
             if self.has_recurrent and start + chunk == r.prompt_len - 1:
                 self._snapshot_full_cache(r, r.prompt_len - 1)
@@ -274,27 +518,17 @@ class Engine:
                 r.output_tokens.append(tok)
                 newly_prefilled.append(r)
 
-        # -- decode items (stacked into one batched step) --
+        # -- decode items (one batched step) --
         dec = [it.request for it in batch.items if it.phase == "decode"]
-        if dec:
-            caches = _cache_concat(
-                [self.live[r.request_id]["cache"] for r in dec])
-            tokens = jnp.asarray(
-                [self.live[r.request_id]["next"] for r in dec], jnp.int32)
-            # the token being fed sits at context position
-            # prompt_len + (#output tokens already in the cache); the
-            # first output token (from prefill) is not yet cached.
-            pos = jnp.asarray(
-                [r.prompt_len + len(r.output_tokens) - 1 for r in dec],
-                jnp.int32)
-            nxt, caches = self._decode_fn(caches, tokens, pos)
-            nxt = np.asarray(nxt)
-            for i, r in enumerate(dec):
-                self.live[r.request_id]["cache"] = _cache_index(caches, i)
-                self.live[r.request_id]["next"] = int(nxt[i])
-            self.stats["decode_steps"] += len(dec)
+        if dec and self.paged:
+            self._decode_batch_paged(dec)
+        elif dec:
+            self._decode_batch_dense(dec)
 
         # -- advance scheduler state --
+        if aborted:
+            batch.items = [it for it in batch.items
+                           if it.request not in aborted]
         finished = self.scheduler.complete_iteration(batch, now)
         for r in newly_prefilled:
             self._store_prefix(r, now)
@@ -304,8 +538,57 @@ class Engine:
                 r.output_tokens[-1] = self.live[r.request_id]["next"]
         for r in finished:
             self.live.pop(r.request_id, None)
-            self.pool.release(r.request_id)
-        return finished
+            self.pool.release(("req", r.request_id) if self.paged
+                              else r.request_id)
+        # aborted requests are terminal too (state FAILED) — surface
+        # them so cluster runtimes can account/resubmit
+        return finished + aborted
+
+    def _decode_batch_paged(self, dec: List[Request]) -> None:
+        """Slot/bucket decode (DESIGN.md §3): live requests fill the
+        first B lanes of a power-of-two bucket; padding lanes write into
+        the scratch page. One donated jit per bucket size — no cache
+        concat, no per-request splits, no per-batch-size retraces."""
+        B = len(dec)
+        Bb = _bucket(B)
+        tokens = np.zeros(Bb, np.int32)
+        pos = np.zeros(Bb, np.int32)
+        for i, r in enumerate(dec):
+            tokens[i] = self.live[r.request_id]["next"]
+            # the token being fed sits at context position
+            # prompt_len + (#output tokens already in the cache); the
+            # first output token (from prefill) is not yet cached.
+            pos[i] = r.prompt_len + len(r.output_tokens) - 1
+        pt = self._page_table_rows(
+            [("req", r.request_id) for r in dec], n_rows=Bb)
+        nxt, self.pages = self._decode_paged_fn(
+            self.pages, jnp.asarray(tokens), jnp.asarray(pos),
+            jnp.asarray(pt))
+        nxt = np.asarray(nxt)
+        for i, r in enumerate(dec):
+            self.live[r.request_id]["next"] = int(nxt[i])
+        self.stats["decode_steps"] += B
+        self.stats["decode_batches"] += 1
+
+    def _decode_batch_dense(self, dec: List[Request]) -> None:
+        """DENSE reference: rebuild the batch cache with O(B * S)
+        concat/index copies every iteration (and retrace per batch
+        size) — the cost the paged plane removes."""
+        caches = _cache_concat(
+            [self.live[r.request_id]["cache"] for r in dec])
+        self.stats["cache_concat_calls"] += 1
+        tokens = jnp.asarray(
+            [self.live[r.request_id]["next"] for r in dec], jnp.int32)
+        pos = jnp.asarray(
+            [r.prompt_len + len(r.output_tokens) - 1 for r in dec],
+            jnp.int32)
+        nxt, caches = self._decode_fn(caches, tokens, pos)
+        nxt = np.asarray(nxt)
+        for i, r in enumerate(dec):
+            self.live[r.request_id]["cache"] = _cache_index(caches, i)
+            self.live[r.request_id]["next"] = int(nxt[i])
+        self.stats["decode_steps"] += len(dec)
+        self.stats["decode_batches"] += 1
 
     # ---- failure ---------------------------------------------------------------
 
@@ -314,12 +597,12 @@ class Engine:
         in-flight requests for global re-scheduling."""
         self.failed = True
         self.live.clear()
-        self.kv_store.clear()
-        self.state_store.clear()
-        self.pool = PagedKVPool(self.econf.capacity_tokens
-                                // self.econf.page_size,
-                                self.econf.page_size)
-        return self.scheduler.drain()
+        reqs = self.scheduler.drain()
+        if self.paged:
+            self._init_paged()      # fresh pool + re-hook the new tree
+        else:
+            self._init_dense()      # fresh pool + empty kv/state stores
+        return reqs
 
     @property
     def depth(self) -> int:

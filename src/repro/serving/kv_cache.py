@@ -44,6 +44,9 @@ class PagedKVPool:
         self.free: List[int] = list(range(num_pages - 1, -1, -1))
         self.refcount: Dict[int, int] = {}
         self.tables: Dict[int, PageTable] = {}
+        # pages permanently out of circulation (e.g. an engine's scratch
+        # page that padded decode lanes write into); owned by no table
+        self.reserved: Set[int] = set()
 
     # ---- capacity ------------------------------------------------------
 
@@ -74,6 +77,13 @@ class PagedKVPool:
             raise MemoryError("KV pool exhausted")
         p = self.free.pop()
         self.refcount[p] = 1
+        return p
+
+    def reserve_page(self) -> int:
+        """Permanently take one page out of circulation and return its
+        id. Reserved pages belong to no sequence and are never freed."""
+        p = self._alloc_page()
+        self.reserved.add(p)
         return p
 
     def can_append(self, seq_id: int, tokens: int) -> bool:
@@ -160,9 +170,12 @@ class PagedKVPool:
 
     def check_invariants(self) -> None:
         live: Dict[int, int] = {}
+        for p in self.reserved:
+            live[p] = 1
         for t in self.tables.values():
             assert t.num_tokens <= len(t.pages) * self.page_size
             for p in t.pages:
+                assert p not in self.reserved, "reserved page in a table"
                 live[p] = live.get(p, 0) + 1
         assert live == self.refcount, (live, self.refcount)
         assert len(self.free) + len(self.refcount) == self.num_pages

@@ -143,3 +143,52 @@ def test_paged_decode_attention(case):
                                    dense_v.transpose(0, 2, 1, 3),
                                    jnp.asarray(lens))
     np.testing.assert_allclose(out, exp, atol=3e-5, rtol=1e-4)
+
+
+# ragged lens: shorter than one page, mid-page (partial last page),
+# page-exact boundary, and the full table
+PAGED_EDGE_LENS = [[3, 16, 21, 64], [1, 8, 48, 63], [16, 32, 5, 17]]
+
+
+@pytest.mark.parametrize("lens", PAGED_EDGE_LENS)
+def test_paged_decode_attention_ragged_lens(lens):
+    """Per-request lengths hitting every page-boundary edge: len <
+    page_size, partial last page, exact page multiple, full table."""
+    from repro.kernels.paged_attention import paged_decode_attention
+    B, H, KH, page, P, n_pages, D = len(lens), 8, 2, 16, 4, 24, 32
+    ks = jax.random.split(K0, 3)
+    k_pages = rnd(ks[0], n_pages, page, KH, D)
+    v_pages = rnd(ks[1], n_pages, page, KH, D)
+    q = rnd(ks[2], B, H, D)
+    rng = np.random.default_rng(7)
+    pt = np.stack([rng.choice(n_pages, P, replace=False) for _ in range(B)])
+    out = paged_decode_attention(q, k_pages, v_pages, jnp.asarray(pt),
+                                 jnp.asarray(lens), interpret=True)
+    dense_k = jnp.stack([k_pages[pt[b]].reshape(page * P, KH, D)
+                         for b in range(B)])
+    dense_v = jnp.stack([v_pages[pt[b]].reshape(page * P, KH, D)
+                         for b in range(B)])
+    exp = ref.decode_attention_ref(q, dense_k.transpose(0, 2, 1, 3),
+                                   dense_v.transpose(0, 2, 1, 3),
+                                   jnp.asarray(lens))
+    np.testing.assert_allclose(out, exp, atol=3e-5, rtol=1e-4)
+
+
+def test_paged_gather_reference_matches_kernel():
+    """models/attention.paged_attention 'gather' impl (the CPU engine
+    path) == the Pallas kernel (interpret) on the same inputs."""
+    from repro.kernels.paged_attention import paged_decode_attention
+    from repro.models.attention import paged_attention
+    B, H, KH, page, P, n_pages, D = 3, 8, 2, 16, 4, 24, 32
+    ks = jax.random.split(K0, 3)
+    k_pages = rnd(ks[0], n_pages, page, KH, D)
+    v_pages = rnd(ks[1], n_pages, page, KH, D)
+    q = rnd(ks[2], B, H, D)
+    rng = np.random.default_rng(11)
+    pt = jnp.asarray(np.stack([rng.choice(n_pages, P, replace=False)
+                               for _ in range(B)]))
+    lens = jnp.asarray([5, 31, 64])
+    got = paged_attention(q, k_pages, v_pages, pt, lens, impl="gather")
+    exp = paged_decode_attention(q, k_pages, v_pages, pt, lens,
+                                 interpret=True)
+    np.testing.assert_allclose(got, exp, atol=3e-5, rtol=1e-4)

@@ -2,6 +2,7 @@
 free-list invariants under arbitrary operation sequences."""
 
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.serving.kv_cache import PagedKVPool

@@ -32,9 +32,11 @@ SCRIPT = textwrap.dedent("""
     x = jax.random.normal(jax.random.fold_in(key, 9), (4, 16, d))
     ref = L.moe_full(p_std, cfg, x)
 
-    auto = (jax.sharding.AxisType.Auto,) * 2
+    # AxisType landed after jax 0.4.x; older jax meshes are Auto already
+    mesh_kw = ({"axis_types": (jax.sharding.AxisType.Auto,) * 2}
+               if hasattr(jax.sharding, "AxisType") else {})
     for shape in [(2, 4), (4, 2)]:                # split factors s=2, s=1
-        mesh = jax.make_mesh(shape, ("data", "model"), axis_types=auto)
+        mesh = jax.make_mesh(shape, ("data", "model"), **mesh_kw)
         tp = mesh.shape["model"]
         wg2, wu2, wd2 = reshape_standard_to_halfexpert(
             p_std["wg"], p_std["wu"], p_std["wd"], tp)

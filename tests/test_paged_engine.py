@@ -1,0 +1,217 @@
+"""Paged data plane vs the dense reference engine: token-exact outputs
+under prefix reuse, zero-copy seeding (page aliasing via refcounts),
+copy-on-write at unaligned reuse boundaries, and pool invariants."""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.core.request import Request
+from repro.models import zoo
+from repro.serving.engine import Engine, EngineConfig
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = dataclasses.replace(reduced(ARCHS["smollm-360m"]), n_layers=2,
+                              dtype="float32")
+    api = zoo.build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    return cfg, api, params
+
+
+def _econf(paged, **kw):
+    base = dict(max_context=64, chunk_size=16, max_batch_tokens=64,
+                capacity_tokens=4096, page_size=16, paged=paged)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def _mk_requests(cfg, n, shared_len, tail=8, out=4, seed=1):
+    rng = np.random.default_rng(seed)
+    shared = tuple(rng.integers(1, cfg.vocab_size, shared_len).tolist())
+    return [Request(tokens=shared
+                    + tuple(rng.integers(1, cfg.vocab_size, tail).tolist()),
+                    max_new_tokens=out) for _ in range(n)]
+
+
+def _run_two_waves(eng, reqs, n_first=2):
+    """First wave populates the prefix cache; second wave reuses it."""
+    now, done = 0.0, []
+    for r in reqs[:n_first]:
+        eng.scheduler.enqueue(r, now)
+    while len(done) < n_first:
+        done += eng.step(now)
+        now += 0.01
+    for r in reqs[n_first:]:
+        eng.scheduler.enqueue(r, now)
+    while len(done) < len(reqs):
+        done += eng.step(now)
+        now += 0.01
+    return done
+
+
+@pytest.mark.parametrize("shared_len", [32, 29])  # page-aligned / CoW
+def test_paged_matches_dense_engine(small_model, shared_len):
+    """Same shared-prefix workload through both data planes: outputs
+    must be token-identical (the dense plane is the oracle; it is
+    itself oracle-checked in test_engine_cluster)."""
+    cfg, api, params = small_model
+    outs = {}
+    for paged in (False, True):
+        eng = Engine(cfg, params, _econf(paged))
+        assert eng.paged is paged
+        reqs = _mk_requests(cfg, 6, shared_len)
+        done = _run_two_waves(eng, reqs)
+        assert eng.stats["reused_tokens"] > 0
+        outs[paged] = {tuple(r.tokens): list(r.output_tokens)
+                       for r in done}
+    assert outs[True] == outs[False]
+
+
+def test_paged_seeding_is_zero_copy(small_model):
+    """Page-aligned shared prefix: admission of the reuse wave must
+    alias pages (refcount > 1), never copy KV on device."""
+    cfg, api, params = small_model
+    eng = Engine(cfg, params, _econf(True))
+    reqs = _mk_requests(cfg, 6, shared_len=32)  # 32 = 2 whole pages
+    _run_two_waves(eng, reqs)
+    assert eng.stats["reused_tokens"] > 0, "cache never hit"
+    assert eng.stats["seed_aliased_pages"] > 0, "no page aliasing"
+    assert eng.stats["seed_copied_pages"] == 0, \
+        "page-aligned seeding must not copy KV"
+    assert eng.stats["cache_concat_calls"] == 0, \
+        "paged decode must not concat caches"
+    shared = [p for p, c in eng.pool.refcount.items() if c > 1]
+    assert shared, "no page has refcount > 1 after prefix store"
+    eng.pool.check_invariants()
+
+
+def test_paged_cow_on_unaligned_boundary(small_model):
+    """Reuse boundary inside a page: the shared tail page is CoW'd
+    (one page-granular device copy), everything else is aliased."""
+    cfg, api, params = small_model
+    eng = Engine(cfg, params, _econf(True))
+    reqs = _mk_requests(cfg, 4, shared_len=29)  # 29 % 16 != 0
+    _run_two_waves(eng, reqs)
+    assert eng.stats["reused_tokens"] > 0
+    assert eng.stats["seed_copied_pages"] > 0
+    eng.pool.check_invariants()
+
+
+def test_paged_pool_reclaims_on_finish_and_eviction(small_model):
+    """Unique prompts under a tiny pool: eviction + release must return
+    pages; invariants hold throughout and usage returns to the cached
+    working set."""
+    cfg, api, params = small_model
+    eng = Engine(cfg, params, _econf(
+        True, capacity_tokens=200, page_size=8))
+    rng = np.random.default_rng(3)
+    reqs = [Request(tokens=tuple(rng.integers(1, cfg.vocab_size, 40)
+                                 .tolist()), max_new_tokens=3)
+            for _ in range(6)]
+    now, done = 0.0, []
+    for r in reqs:
+        eng.scheduler.enqueue(r, now)
+    for _ in range(600):
+        done += eng.step(now)
+        eng.pool.check_invariants()
+        now += 0.01
+        if len(done) == len(reqs):
+            break
+    assert len(done) == len(reqs), "requests starved under eviction"
+    assert eng.scheduler.stats["evicted_tokens"] > 0, "no eviction"
+    # every live (request) table is gone; only node aliases remain
+    assert not any(isinstance(k, tuple) and k[0] == "req"
+                   for k in eng.pool.tables)
+
+
+def test_paged_failover_resets_pool(small_model):
+    cfg, api, params = small_model
+    eng = Engine(cfg, params, _econf(True))
+    reqs = _mk_requests(cfg, 3, shared_len=32)
+    for r in reqs:
+        eng.scheduler.enqueue(r, 0.0)
+    eng.step(0.0)
+    drained = eng.fail()
+    assert len(drained) == 3
+    assert eng.pool.used_pages == 1  # only the reserved scratch page
+    eng.pool.check_invariants()
+
+
+def test_oversized_request_aborts_without_wedging(small_model):
+    """A request that can't fit max_context fails cleanly (FAILED
+    state, reservation refunded) and the engine keeps serving."""
+    from repro.core.request import RequestState
+    cfg, api, params = small_model
+    eng = Engine(cfg, params, _econf(True))
+    big = Request(tokens=tuple(range(1, 70)), max_new_tokens=8)  # 77 > 64
+    ok = _mk_requests(cfg, 1, shared_len=16)[0]
+    eng.scheduler.enqueue(big, 0.0)
+    eng.scheduler.enqueue(ok, 0.0)
+    now, done = 0.0, []
+    for _ in range(200):
+        done += eng.step(now)
+        now += 0.01
+        if len(done) == 2:
+            break
+    assert big.state is RequestState.FAILED
+    assert eng.stats["aborted"] == 1
+    assert ok.state is RequestState.FINISHED and ok.output_tokens
+    assert eng.scheduler.used_tokens >= 0
+    eng.pool.check_invariants()
+
+
+def test_split_of_pinned_node_releases_cleanly():
+    """A node split while pinned copies its pin count to the tail; the
+    pinner's release must also unpin the tail, or it (and its
+    ancestors) become permanently unevictable."""
+    from repro.core.local_scheduler import (LocalScheduler,
+                                            LocalSchedulerConfig)
+    sch = LocalScheduler(LocalSchedulerConfig(capacity_tokens=1000))
+    a = Request(tokens=(1, 2, 3, 4, 5, 6), max_new_tokens=1)
+    assert sch._reserve(a, 0.0)
+    b = Request(tokens=(1, 2, 3, 9), max_new_tokens=1)  # splits a's node
+    assert sch._reserve(b, 0.0)
+    sch._release(a)
+    sch._release(b)
+    assert all(n.ref_count == 0 for n in sch.tree.iter_nodes()), \
+        [(n.tokens, n.ref_count) for n in sch.tree.iter_nodes()]
+
+
+def test_radix_tree_node_index():
+    """get_node is the O(1) index GlobalScheduler.on_evictions uses."""
+    from repro.core.radix_tree import RadixTree
+    t = RadixTree()
+    path = t.insert([1, 2, 3, 4], instance=0)
+    for n in path:
+        assert t.get_node(n.node_id) is n
+    # splits register the new tail node
+    t.insert([1, 2, 9], instance=0)
+    ids = {n.node_id for n in t.iter_nodes()}
+    assert all(t.get_node(i) is not None for i in ids)
+    # pruned nodes drop out of the index
+    leaf = t.insert([1, 2, 3, 4, 5])[-1]
+    t.window = 0.0
+    t.prune_dead(now=1e9)
+    assert t.get_node(leaf.node_id) is None
+
+
+def test_on_evictions_uses_index(small_model):
+    """Global scheduler eviction notifications resolve nodes through
+    the index and stay consistent with a full-tree walk."""
+    from repro.core.global_scheduler import GlobalScheduler
+    gs = GlobalScheduler(num_instances=2)
+    r = Request(tokens=(1, 2, 3, 4, 5, 6), max_new_tokens=2)
+    gs.schedule(r, 0.0)
+    inst = r.instance
+    nids = [n.node_id for n in gs.tree.iter_nodes()
+            if inst in n.instances]
+    assert nids
+    before = gs.instances[inst].cached_tokens
+    gs.on_evictions(inst, nids, now=0.0)
+    assert gs.instances[inst].cached_tokens < before
+    assert all(inst not in n.instances for n in gs.tree.iter_nodes())

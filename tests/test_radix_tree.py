@@ -3,6 +3,7 @@
 import random
 
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import RadixTree
