@@ -1,6 +1,6 @@
 PY ?= python
 
-.PHONY: ci test bench-engine install
+.PHONY: ci ci-fast test bench-engine install
 
 install:
 	$(PY) -m pip install -e .[test]
@@ -8,6 +8,11 @@ install:
 # tier-1 verify (ROADMAP.md): full suite, fail fast
 ci:
 	PYTHONPATH=src $(PY) -m pytest -x -q
+
+# fast tier-1: the non-slow suite (which includes the mixed-batching
+# tests) — use for inner-loop iteration; `ci` remains the full gate
+ci-fast:
+	PYTHONPATH=src $(PY) -m pytest -q -m "not slow" tests
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -q

@@ -1,4 +1,5 @@
-"""Engine data-plane benchmark: dense reference vs paged pool.
+"""Engine data-plane benchmark: dense reference vs paged pool, plus the
+fused-vs-unfused mixed-workload scenario.
 
 Measures, for the same shared-prefix workload on both planes:
   * steady-state batched decode throughput (tokens/s) at batch >= 8 —
@@ -10,9 +11,16 @@ Measures, for the same shared-prefix workload on both planes:
     pool refcounts); dense admission copies the matched KV slabs into
     the request's cache.
 
-Emits CSV (results/bench/bench_engine.csv, repo idiom) AND JSON
-(results/bench/bench_engine.json) so the perf trajectory tracks engine
-throughput, not just simulator latency.
+The MIXED scenario (DESIGN.md §7) drives ongoing decodes + arriving
+shared-prefix prefills through the paged plane twice — fused ragged
+iterations vs the PR-1 per-request prefill loop — and reports model
+dispatches/iteration, prefill-phase throughput, and p99 per-token
+decode latency (iteration wall time seen by every decode lane while
+prefills share the step).
+
+Emits CSV (results/bench/bench_engine.csv + bench_engine_mixed.csv,
+repo idiom) AND JSON (results/bench/bench_engine.json) so the perf
+trajectory tracks engine throughput, not just simulator latency.
 """
 
 from __future__ import annotations
@@ -55,15 +63,17 @@ def _requests(cfg, n, shared, seed=0):
                     max_new_tokens=OUT) for _ in range(n)]
 
 
-def _engine(cfg, params, paged: bool) -> Engine:
+def _engine(cfg, params, paged: bool, fused=None,
+            max_batch_requests: int = BATCH) -> Engine:
     return Engine(cfg, params, EngineConfig(
         max_context=SHARED + TAIL + OUT, chunk_size=32,
-        max_batch_tokens=512, max_batch_requests=BATCH,
-        capacity_tokens=32768, page_size=PAGE, paged=paged))
+        max_batch_tokens=512, max_batch_requests=max_batch_requests,
+        capacity_tokens=32768, page_size=PAGE, paged=paged, fused=fused))
 
 
-def run():
-    cfg, api, params = _build()
+def run(cfg=None, api=None, params=None):
+    if cfg is None:
+        cfg, api, params = _build()
     shared = tuple(np.random.default_rng(42)
                    .integers(1, cfg.vocab_size, SHARED).tolist())
     rows, out = [], {"config": {
@@ -163,5 +173,111 @@ def run():
     return out
 
 
+MIXED_OUT = 2         # decode budget for the arriving prefill waves
+
+
+def _prefix_reqs(cfg, prefix_seed, tail_seed, out):
+    shared = tuple(np.random.default_rng(prefix_seed)
+                   .integers(1, cfg.vocab_size, SHARED).tolist())
+    rng = np.random.default_rng(tail_seed)
+    return [Request(tokens=shared
+                    + tuple(rng.integers(1, cfg.vocab_size, TAIL).tolist()),
+                    max_new_tokens=out) for _ in range(BATCH)]
+
+
+def _drain_until(eng, pred, now, max_iters=2000):
+    for _ in range(max_iters):
+        if pred():
+            return now
+        eng.step(now)
+        now += 0.01
+    raise RuntimeError("mixed scenario did not converge")
+
+
+def run_mixed(cfg=None, api=None, params=None):
+    """Mixed-workload scenario (DESIGN.md §7): BATCH ongoing decodes +
+    an arriving shared-prefix prefill wave, paged plane, fused ragged
+    iterations vs the PR-1 per-request prefill loop. Reports
+    dispatches/iteration, prefill-phase throughput, and p99 per-token
+    decode latency (iteration wall time every decode lane experiences
+    while prefills share the step)."""
+    if cfg is None:
+        cfg, api, params = _build()
+    rows, out = [], {}
+    for mode in ("pr1", "fused"):
+        eng = _engine(cfg, params, True, fused=(mode == "fused"),
+                      max_batch_requests=2 * BATCH)
+        now = 0.0
+        # -- ongoing decodes: BATCH requests into steady-state decode --
+        dwave = _prefix_reqs(cfg, 10, 100, OUT)
+        for r in dwave:
+            eng.scheduler.enqueue(r, now)
+        now = _drain_until(
+            eng, lambda: len(eng.scheduler.running) == BATCH
+            and not eng.scheduler.prefilling and not eng.scheduler.waiting,
+            now)
+        # -- warmup prefill wave: compile the bucketed traces ----------
+        wwave = _prefix_reqs(cfg, 11, 200, MIXED_OUT)
+        for r in wwave:
+            eng.scheduler.enqueue(r, now)
+        now = _drain_until(
+            eng, lambda: all(r.state.value == "finished" for r in wwave),
+            now)
+        # -- measured wave: fresh shared prefix, timed per iteration ---
+        mwave = _prefix_reqs(cfg, 12, 300, MIXED_OUT)
+        for r in mwave:
+            eng.scheduler.enqueue(r, now)
+        p0 = eng.stats["prefilled_tokens"]
+        i0 = eng.stats["iterations"]
+        d0 = eng.stats["model_dispatches"]
+        iter_s = []
+        while any(r.prefill_done < r.prompt_len for r in mwave):
+            t0 = time.perf_counter()
+            eng.step(now)
+            jax.block_until_ready(eng.pages)
+            iter_s.append(time.perf_counter() - t0)
+            now += 0.01
+        assert all(r.state.value == "decoding" for r in dwave), \
+            "ongoing decodes drained mid-measure"
+        ptoks = eng.stats["prefilled_tokens"] - p0
+        iters = eng.stats["iterations"] - i0
+        res = {
+            "prefill_tokens_per_s": ptoks / sum(iter_s),
+            "dispatches_per_iter":
+                (eng.stats["model_dispatches"] - d0) / max(iters, 1),
+            "p99_decode_ms": 1e3 * float(np.percentile(iter_s, 99)),
+            "mean_iter_ms": 1e3 * float(np.mean(iter_s)),
+            "mixed_iters": iters,
+            "prefilled_tokens": ptoks,
+            "fused_iterations": eng.stats["fused_iterations"],
+        }
+        eng.pool.check_invariants()
+        out[mode] = res
+        rows.append({"plane": f"paged_{mode}", **res})
+    out["speedup_prefill"] = (out["fused"]["prefill_tokens_per_s"]
+                              / out["pr1"]["prefill_tokens_per_s"])
+    out["p99_decode_ratio"] = (out["pr1"]["p99_decode_ms"]
+                               / max(out["fused"]["p99_decode_ms"], 1e-9))
+    rows.append({"plane": "fused_speedup",
+                 "prefill_tokens_per_s": out["speedup_prefill"],
+                 "p99_decode_ms": out["p99_decode_ratio"]})
+    emit("bench_engine_mixed", rows,
+         keys=["plane", "prefill_tokens_per_s", "dispatches_per_iter",
+               "p99_decode_ms", "mean_iter_ms", "mixed_iters",
+               "prefilled_tokens", "fused_iterations"])
+    print(f"[bench_engine_mixed] fused prefill speedup "
+          f"{out['speedup_prefill']:.2f}x, p99 decode latency "
+          f"{out['p99_decode_ratio']:.2f}x lower, "
+          f"{out['fused']['dispatches_per_iter']:.2f} dispatches/iter "
+          f"(pr1: {out['pr1']['dispatches_per_iter']:.2f})")
+    return out
+
+
 if __name__ == "__main__":
-    run()
+    _cfg, _api, _params = _build()
+    full = run(_cfg, _api, _params)
+    mixed = run_mixed(_cfg, _api, _params)
+    path = os.path.join(RESULTS_DIR, "bench_engine.json")
+    full["mixed"] = mixed
+    with open(path, "w") as f:
+        json.dump(full, f, indent=2)

@@ -46,6 +46,12 @@ class BatchItem:
 
 @dataclass
 class Batch:
+    """One iteration's mixed plan: decode slots (1 token each, always
+    admitted first so a prefill flood can never starve decode lanes)
+    plus prefill chunks whose quota was split across priority groups by
+    ``form_batch``. Engines either run the two phases separately (dense
+    reference) or pack every item into one fused ragged dispatch (paged
+    fused plane)."""
     items: List[BatchItem] = field(default_factory=list)
 
     @property
@@ -55,6 +61,12 @@ class Batch:
     @property
     def decode_tokens(self) -> int:
         return sum(i.chunk_tokens for i in self.items if i.phase == "decode")
+
+    def prefill_items(self) -> List[BatchItem]:
+        return [i for i in self.items if i.phase == "prefill"]
+
+    def decode_items(self) -> List[BatchItem]:
+        return [i for i in self.items if i.phase == "decode"]
 
     def __len__(self) -> int:
         return len(self.items)
@@ -173,6 +185,27 @@ class LocalScheduler:
                 self.stats["starved_max_wait"], now - oldest)
         self.stats["batches"] += 1
         return batch
+
+    def clamp_chunk(self, item: BatchItem, *,
+                    snapshot_boundary: bool = False) -> int:
+        """Single authority for post-admission prefill-chunk clamping.
+
+        ``form_batch`` sizes chunks from the *planned* cache hit, but
+        the engine may reuse a different prefix length at admission
+        (snapshot granularity, node pages already evicted), so every
+        chunk is re-clamped to the request's true remaining prompt.
+        With ``snapshot_boundary`` (recurrent archs) the chunk also
+        stops at prompt_len - 1 so the state snapshot lands on a
+        reusable boundary (reuse cap = prompt_len - 1). Keeping both
+        clamps here — instead of two inline sites in the engine's
+        step() — means the recurrent boundary rule cannot drift from
+        the paged path's accounting."""
+        r = item.request
+        chunk = max(min(item.chunk_tokens, r.prompt_len - r.prefill_done), 0)
+        if snapshot_boundary and r.prefill_done < r.prompt_len - 1:
+            chunk = min(chunk, r.prompt_len - 1 - r.prefill_done)
+        item.chunk_tokens = chunk
+        return chunk
 
     # ---- memory management (tree + pool accounting) -----------------------------------
 

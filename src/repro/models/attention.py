@@ -244,6 +244,47 @@ def paged_attention(q, k_pages, v_pages, page_table, lens, *,
     return decode_attention(q, k, v, lens)
 
 
+def mixed_paged_attention(qc, qd, k_pages, v_pages, chunk_table,
+                          chunk_start, dec_table, dec_pos):
+    """Ragged mixed prefill+decode attention over a shared KV page pool.
+
+    One fused call for a scheduling step's whole mixed batch. The
+    ragged token set is split into two uniform halves so each lane's
+    KV is gathered from the pool exactly ONCE (a flat per-token
+    formulation would re-gather a chunk lane's KV C times):
+
+      * chunk half — qc [Lc, C, H, D]: all prefill chunks, padded to a
+        common bucketed length C; lane l's first query sits at absolute
+        position chunk_start[l]. Runs as extend_attention against the
+        lane's gathered table rows — the role the shared-prefix
+        (Hydragen) kernel plays on TPU.
+      * decode half — qd [Ld, H, D]: all single-token decode lanes,
+        the fed token at context position dec_pos[l]. Runs as
+        paged/decode attention masked to dec_pos + 1 — the half the
+        Pallas paged-decode kernel serves on TPU.
+
+    Both halves read pool state AFTER the caller scattered this step's
+    new KV, so intra-chunk causality and cross-half isolation both fall
+    out of absolute-position masks (lanes never share writable pages —
+    the host allocator CoWs shared pages before a sequence may write).
+    Padding lanes must carry an all-scratch (page 0) table row with
+    start/pos 0; their outputs are garbage and dropped by the caller.
+
+    Returns (oc [Lc, C, H, D], od [Ld, H, D]).
+    """
+    _, PS, KH, D = k_pages.shape
+    Lc, P = chunk_table.shape
+    C = qc.shape[1]
+    kc = k_pages[chunk_table].reshape(Lc, P * PS, KH, D)
+    vc = v_pages[chunk_table].reshape(Lc, P * PS, KH, D)
+    # kv_len = start + C is safe for padded lanes/tokens: the causal
+    # mask (k_pos <= q_pos) already bounds every REAL query, and padded
+    # queries' outputs are dropped.
+    oc = extend_attention(qc, kc, vc, chunk_start, chunk_start + C)
+    od = paged_attention(qd, k_pages, v_pages, dec_table, dec_pos + 1)
+    return oc, od
+
+
 def extend_attention(q, k_cache, v_cache, start, kv_len, *, window: int = 0):
     """Chunked-prefill attention: new queries against a partially-filled
     cache. q: [B, C, H, D] (chunk of C new tokens whose first token sits

@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from .attention import (attention, decode_attention, extend_attention,
-                        paged_attention)
+                        mixed_paged_attention, paged_attention)
 from .common import (constrain_batch, constrain_moe_dispatch, rms_norm,
                      rope)
 from .spec import Spec
@@ -166,6 +166,52 @@ def attn_step_paged(p, cfg, x, pages, page_table, pos):
     o = paged_attention(q, k_pages, v_pages, page_table, pos + 1)
     y = jnp.einsum("bhk,hkd->bd", o, p["wo"])
     return y, {"k": k_pages, "v": v_pages}
+
+
+def attn_mixed_paged(p, cfg, xc, xd, pages, chunk_table, chunk_start,
+                     chunk_len, dec_table, dec_pos):
+    """Fused ragged iteration against the page pool: ONE scatter+attend
+    for every query token of the step. xc [Lc, C, d] packs all prefill
+    chunks padded to C (lane l holds chunk_len[l] real tokens starting
+    at absolute position chunk_start[l]); xd [Ld, d] packs all decode
+    lanes (fed token at position dec_pos[l]). KV for both halves is
+    scattered through the lanes' page tables before either half
+    attends, then attention runs per half (extend-style for chunks,
+    decode-style for single-token lanes — mixed_paged_attention).
+
+    Chunk-pad tokens (beyond chunk_len) are redirected to the scratch
+    page: a full table row's clip-clamped tail entry would otherwise
+    point garbage writes at the lane's own live pages. Padding LANES
+    must carry all-scratch table rows with start/pos 0.
+    Returns (yc [Lc, C, d], yd [Ld, d], new pages)."""
+    Lc, C, _ = xc.shape
+    Ld = xd.shape[0]
+    PS = pages["k"].shape[1]
+    qc, kc, vc = _project_qkv(p, cfg, xc)
+    qd = jnp.einsum("bd,dhk->bhk", xd, p["wq"])
+    kd = jnp.einsum("bd,dhk->bhk", xd, p["wk"])
+    vd = jnp.einsum("bd,dhk->bhk", xd, p["wv"])
+    cpos = chunk_start[:, None] + jnp.arange(C)[None, :]        # [Lc, C]
+    if cfg.rope_theta:
+        qc = rope(qc, cpos, cfg.rope_theta)
+        kc = rope(kc, cpos, cfg.rope_theta)
+        qd = rope(qd[:, None], dec_pos[:, None], cfg.rope_theta)[:, 0]
+        kd = rope(kd[:, None], dec_pos[:, None], cfg.rope_theta)[:, 0]
+    valid = jnp.arange(C)[None, :] < chunk_len[:, None]
+    lidx = jnp.arange(Lc)[:, None]
+    cpids = jnp.where(valid, chunk_table[lidx, cpos // PS], 0)
+    coffs = jnp.where(valid, cpos % PS, 0)
+    dpids = dec_table[jnp.arange(Ld), dec_pos // PS]
+    doffs = dec_pos % PS
+    k_pages = pages["k"].at[cpids, coffs].set(kc.astype(pages["k"].dtype))
+    v_pages = pages["v"].at[cpids, coffs].set(vc.astype(pages["v"].dtype))
+    k_pages = k_pages.at[dpids, doffs].set(kd.astype(k_pages.dtype))
+    v_pages = v_pages.at[dpids, doffs].set(vd.astype(v_pages.dtype))
+    oc, od = mixed_paged_attention(qc, qd, k_pages, v_pages, chunk_table,
+                                   chunk_start, dec_table, dec_pos)
+    yc = jnp.einsum("...hk,hkd->...d", oc, p["wo"])
+    yd = jnp.einsum("bhk,hkd->bd", od, p["wo"])
+    return yc, yd, {"k": k_pages, "v": v_pages}
 
 
 def attn_extend_paged(p, cfg, x, pages, page_table, start):

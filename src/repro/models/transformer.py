@@ -330,6 +330,55 @@ def forward_step_paged(params, cfg, x, pages, page_table, position
     return constrain_batch(x), new
 
 
+def _pos_mixed_paged(p, cfg, pos_plan: PosPlan, xc, xd, pages, chunk_table,
+                     chunk_start, chunk_len, dec_table, dec_pos):
+    """One attention layer position over a mixed ragged batch: xc
+    [Lc, C, d] padded prefill chunks, xd [Ld, d] decode lanes. One
+    fused scatter+attend per layer; the FFN tails are the chunk
+    (extend) and single-token (step) tails respectively."""
+    hc = rms_norm(xc, p["norm1"], cfg.norm_eps)
+    hd = rms_norm(xd, p["norm1"], cfg.norm_eps)
+    yc, yd, pages = L.attn_mixed_paged(p["attn"], cfg, hc, hd, pages,
+                                       chunk_table, chunk_start, chunk_len,
+                                       dec_table, dec_pos)
+    if cfg.parallel_block:
+        return (xc + yc + L.mlp_full(p["ffn"], cfg, hc),
+                xd + yd + _mlp_step(p["ffn"], xd.dtype, hd), pages)
+    return (_ffn_extend_tail(p, cfg, pos_plan, xc + yc),
+            _ffn_step_tail(p, cfg, pos_plan, xd + yd), pages)
+
+
+def forward_mixed_paged(params, cfg, xc, xd, pages, chunk_table,
+                        chunk_start, chunk_len, dec_table, dec_pos
+                        ) -> Tuple[jax.Array, jax.Array, Pytree]:
+    """Fused ragged iteration: every query token of the scheduling step
+    in ONE forward. ``xc`` [Lc, C, d] embeds all prefill chunks padded
+    to a bucketed common length C (lane l: chunk_len[l] real tokens
+    from absolute position chunk_start[l]); ``xd`` [Ld, d] embeds all
+    decode lanes (fed token at context position dec_pos[l]). Lanes
+    address the pool through their page-table rows; padding lanes carry
+    all-scratch rows. ``pages`` is the instance-wide pool as in
+    forward_step_paged (caller donates; unrolled for the same in-place
+    aliasing reason). Returns (hidden_c [Lc, C, d], hidden_d [Ld, d],
+    updated pool).
+
+    Decode-only and single-chunk batches are special cases of this
+    entry, so one trace per (Lc, C, Ld) bucket triple serves any mix of
+    phases — model dispatches per iteration stay O(1) in the number of
+    active prefills."""
+    plan = layer_plan(cfg)
+    new = {pj: dict(groups) for pj, groups in pages.items()}
+    for g in range(cfg.n_groups):
+        xc, xd = constrain_batch(xc), constrain_batch(xd)
+        for j, pos in enumerate(plan):
+            gp = jax.tree.map(lambda a: a[g], params[f"p{j}"])
+            xc, xd, c = _pos_mixed_paged(
+                gp, cfg, pos, xc, xd, new[f"p{j}"][f"g{g}"], chunk_table,
+                chunk_start, chunk_len, dec_table, dec_pos)
+            new[f"p{j}"][f"g{g}"] = c
+    return constrain_batch(xc), constrain_batch(xd), new
+
+
 # ---------------------------------------------------------------------
 # chunked-prefill extension (engine continuous batching)
 # ---------------------------------------------------------------------

@@ -55,6 +55,19 @@ class ModelAPI:
     extend_paged: Optional[Callable[[Pytree, Pytree, Dict],
                                     Tuple[jax.Array, Pytree]]] = None
     paged_cache_specs: Optional[Callable[[int, int], Pytree]] = None
+    # fused ragged iteration (mixed prefill chunks + decode lanes in ONE
+    # dispatch — the engine's fused plane):
+    #   mixed_paged(params, pages,
+    #               {"chunk_tokens":[Lc,C], "chunk_start":[Lc],
+    #                "chunk_len":[Lc], "chunk_page_table":[Lc,P],
+    #                "dec_tokens":[Ld], "dec_pos":[Ld],
+    #                "dec_page_table":[Ld,P]}) -> (nxt [Lc+Ld], pages)
+    # nxt packs chunk lanes first (each lane's LAST-valid-token
+    # prediction — only meaningful when the chunk completes a prompt),
+    # then decode lanes; the LM head runs on O(lanes) gathered hidden
+    # states, not O(tokens).
+    mixed_paged: Optional[Callable[[Pytree, Pytree, Dict],
+                                   Tuple[jax.Array, Pytree]]] = None
 
     def init(self, key) -> Pytree:
         return init_params(self.specs, key)
@@ -162,6 +175,20 @@ def _build_decoder(cfg: ModelConfig) -> ModelAPI:
         nxt = top1_logits(h[:, -1], L.head_matrix(params["embed"], cfg))
         return nxt, pages
 
+    def mixed_paged(params, pages, batch):
+        xc = L.embed_tokens(params["embed"], cfg, batch["chunk_tokens"])
+        xd = L.embed_tokens(params["embed"], cfg, batch["dec_tokens"])
+        hc, hd, pages = T.forward_mixed_paged(
+            params["stack"], cfg, xc, xd, pages,
+            batch["chunk_page_table"], batch["chunk_start"],
+            batch["chunk_len"], batch["dec_page_table"], batch["dec_pos"])
+        last = jnp.maximum(batch["chunk_len"] - 1, 0)
+        h = jnp.concatenate(
+            [hc[jnp.arange(hc.shape[0]), last], hd], axis=0)
+        h = rms_norm(h, params["embed"]["final_norm"], cfg.norm_eps)
+        nxt = top1_logits(h, L.head_matrix(params["embed"], cfg))
+        return nxt, pages
+
     paged = T.paged_servable(cfg)
     return ModelAPI(cfg, specs, loss, prefill, decode,
                     lambda b, s: T.cache_specs(cfg, b, s), extend,
@@ -169,7 +196,8 @@ def _build_decoder(cfg: ModelConfig) -> ModelAPI:
                     extend_paged=extend_paged if paged else None,
                     paged_cache_specs=(
                         (lambda n, ps: T.paged_cache_specs(cfg, n, ps))
-                        if paged else None))
+                        if paged else None),
+                    mixed_paged=mixed_paged if paged else None)
 
 
 # ---------------------------------------------------------------------

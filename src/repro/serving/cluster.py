@@ -5,6 +5,14 @@ integration tests to validate the full control plane — scheduling,
 prefix reuse, eviction notifications, failover — against actual model
 forwards. Virtual time advances per engine iteration (the CPU demo has
 no meaningful wall clock for a TPU cost model).
+
+Engines default to the PAGED FUSED data plane (EngineConfig.paged/fused
+auto-resolve for attention-only stacks), so the distributed loop — E2
+placement, rebalancing after failure, eviction notifications — runs
+against fused ragged iterations (DESIGN.md §7) unless a caller forces
+the dense or unfused reference planes. ``check_invariants`` reconciles
+the layers after any amount of rebalancing: pool refcounts, scheduler
+token accounting, and the global scheduler's cached-token gauges.
 """
 
 from __future__ import annotations
@@ -91,6 +99,43 @@ class ClusterRuntime:
                                         if not e.failed):
                 now = max(now, pending[i].arrival_time)
         return self.finished
+
+    # ---- observability / reconciliation ---------------------------------------
+
+    def engine_stats(self) -> Dict[int, Dict[str, int]]:
+        """Per-instance engine stats snapshot (includes the fused
+        plane's dispatch accounting: model_dispatches, fused_iterations)."""
+        return {i: dict(e.stats) for i, e in self.engines.items()}
+
+    def check_invariants(self) -> None:
+        """Cross-layer reconciliation, valid at any point of a run:
+
+        * every alive engine's page pool passes its refcount/free-list
+          invariants;
+        * engine/scheduler reuse accounting never goes negative (the
+          engine surfaces reuse shortfalls back into
+          ``LocalScheduler.used_tokens`` at admission);
+        * live ``("req", id)`` pool tables exist only for live requests
+          (finished/aborted ones were released);
+        * eviction notifications kept every global cached-token gauge
+          non-negative.
+        """
+        for i, eng in self.engines.items():
+            if eng.failed:
+                continue
+            if eng.paged:
+                eng.pool.check_invariants()
+                live_reqs = {("req", rid) for rid in eng.live}
+                req_tables = {k for k in eng.pool.tables
+                              if isinstance(k, tuple) and k[0] == "req"}
+                assert req_tables <= live_reqs, (
+                    f"instance {i}: leaked request tables "
+                    f"{req_tables - live_reqs}")
+            assert eng.scheduler.used_tokens >= 0, (
+                f"instance {i}: negative scheduler token accounting")
+        for i, inst in self.gs.instances.items():
+            assert inst.cached_tokens >= 0, (
+                f"global gauge for instance {i} went negative")
 
     # ---- fault handling --------------------------------------------------------
 

@@ -12,12 +12,15 @@ Two data planes share the scheduling logic (DESIGN.md §2):
     serving/kv_cache.py::PagedKVPool. Prefix reuse is ``fork()`` page
     aliasing with refcounts + copy-on-write — admission performs ZERO
     device KV copies (one page-granular CoW copy only when the reuse
-    boundary is not page-aligned). Decode runs as a single jit'd step
-    over power-of-two-bucketed batch slots, so steady-state decode does
-    no per-iteration cache concat/index copies and no per-batch-size
-    retraces (DESIGN.md §3). Radix-tree nodes alias the pool through
-    per-node page tables; eviction maps to ``release``/``trim``
-    (DESIGN.md §4).
+    boundary is not page-aligned). Iterations with prefill work run
+    FUSED: all ready prefill chunks and all decode slots packed into
+    one flat ragged token batch and dispatched as a single donated jit
+    (DESIGN.md §7) — dispatches/iteration are O(1) in the number of
+    active prefills. Pure-decode iterations run the slot/bucket decode
+    step (DESIGN.md §3): no per-iteration cache concat/index copies,
+    retraces per bucket not per batch size. Radix-tree nodes alias the
+    pool through per-node page tables; eviction maps to
+    ``release``/``trim`` (DESIGN.md §4).
 
   * DENSE (reference; recurrent/hybrid/VLM stacks) — per-request linear
     cache pytrees; cached attention-KV slabs are copied into a new
@@ -76,6 +79,12 @@ class EngineConfig:
     # decoder stack), dense otherwise. True forces paged (raises if the
     # arch can't be paged-served); False forces the dense reference.
     paged: Optional[bool] = None
+    # None = auto: on the paged plane, run FUSED ragged iterations —
+    # every prefill chunk and decode slot of the step in one donated,
+    # bucketed dispatch (DESIGN.md §7). False forces the PR-1 style
+    # per-request prefill loop (kept as the fused plane's comparison
+    # baseline in benchmarks/bench_engine.py). Ignored on dense.
+    fused: Optional[bool] = None
 
 
 def _cache_zeros(specs: Pytree) -> Pytree:
@@ -112,6 +121,10 @@ class Engine:
         if self.paged and self.api.decode_paged is None:
             raise ValueError(f"{cfg.name} is not paged-servable "
                              "(recurrent/cross/encdec positions)")
+        self.fused = self.paged and (econf.fused is None or econf.fused)
+        if econf.fused and not self.paged:
+            raise ValueError("fused ragged iterations require the paged "
+                             "data plane")
         self.scheduler = LocalScheduler(
             LocalSchedulerConfig(
                 instance_id=econf.instance_id,
@@ -129,7 +142,8 @@ class Engine:
                       "decode_steps": 0, "iterations": 0,
                       "decode_batches": 0, "cache_concat_calls": 0,
                       "seed_aliased_pages": 0, "seed_copied_pages": 0,
-                      "aborted": 0}
+                      "aborted": 0, "model_dispatches": 0,
+                      "fused_iterations": 0, "fused_padded_tokens": 0}
         self.failed = False
         if self.paged:
             self._init_paged()
@@ -157,6 +171,8 @@ class Engine:
                                         donate_argnums=(0,))
         self._extend_paged_fn = jax.jit(self._extend_paged_impl,
                                         donate_argnums=(0,))
+        self._mixed_paged_fn = jax.jit(self._mixed_paged_impl,
+                                       donate_argnums=(0,))
         self._copy_page_fn = jax.jit(self._copy_page_impl,
                                      donate_argnums=(0,))
         # keep node->page aliases aligned with radix node splits
@@ -187,6 +203,17 @@ class Engine:
         return self.api.extend_paged(self.params, pages,
                                      {"tokens": tokens, "start": start,
                                       "page_table": page_table})
+
+    def _mixed_paged_impl(self, pages, chunk_tokens, chunk_start, chunk_len,
+                          chunk_pt, dec_tokens, dec_pos, dec_pt):
+        return self.api.mixed_paged(self.params, pages,
+                                    {"chunk_tokens": chunk_tokens,
+                                     "chunk_start": chunk_start,
+                                     "chunk_len": chunk_len,
+                                     "chunk_page_table": chunk_pt,
+                                     "dec_tokens": dec_tokens,
+                                     "dec_pos": dec_pos,
+                                     "dec_page_table": dec_pt})
 
     def _copy_page_impl(self, pages, src, dst):
         # pool leaves are [n_pages, PS, KH, D] (per layer; see
@@ -460,40 +487,85 @@ class Engine:
     # ---- the iteration -------------------------------------------------------
 
     def step(self, now: float) -> List[Request]:
-        """Run one continuous-batching iteration; returns finished reqs."""
+        """Run one continuous-batching iteration; returns finished reqs.
+
+        Paged fused plane (default): admission is host-side page
+        bookkeeping, then ALL prefill chunks and decode slots run as ONE
+        donated ragged dispatch (`_run_mixed`) — dispatches/iteration
+        are O(1) in the number of active prefills. Pure-decode
+        iterations keep the PR-1 slot/bucket decode step (same O(1),
+        cheaper gather). The unfused paged and dense planes serialize
+        per-request prefills before the decode batch (reference
+        behavior)."""
         batch = self.scheduler.form_batch(now)
         if not batch.items:
             return []
         self.stats["iterations"] += 1
 
-        # -- prefill items (each runs alone: variable chunk/position) --
-        newly_prefilled: List[Request] = []
-        aborted: List[Request] = []
+        aborted = self._admit_new(batch, now)
+        if aborted:
+            batch.items = [it for it in batch.items
+                           if it.request not in aborted]
+
+        has_prefill = any(it.chunk_tokens > 0
+                          for it in batch.prefill_items())
+        if self.fused and has_prefill:
+            newly_prefilled = self._run_mixed(batch)
+        else:
+            # -- prefill items (each runs alone: variable chunk/position)
+            newly_prefilled = self._run_prefills(batch)
+            # -- decode items (one batched step) --
+            dec = [it.request for it in batch.decode_items()]
+            if dec and self.paged:
+                self._decode_batch_paged(dec)
+            elif dec:
+                self._decode_batch_dense(dec)
+
+        # -- advance scheduler state --
+        finished = self.scheduler.complete_iteration(batch, now)
+        for r in newly_prefilled:
+            self._store_prefix(r, now)
         for item in batch.items:
-            if item.phase != "prefill":
-                continue
+            r = item.request
+            if item.phase == "decode" and r.output_tokens:
+                r.output_tokens[-1] = self.live[r.request_id]["next"]
+        for r in finished:
+            self.live.pop(r.request_id, None)
+            self.pool.release(("req", r.request_id) if self.paged
+                              else r.request_id)
+        # aborted requests are terminal too (state FAILED) — surface
+        # them so cluster runtimes can account/resubmit
+        return finished + aborted
+
+    def _admit_new(self, batch: Batch, now: float) -> List[Request]:
+        """Admit this iteration's not-yet-live prefill requests (pure
+        host-side page bookkeeping on the paged plane) and re-clamp
+        every chunk through the scheduler's single clamp helper — the
+        engine may reuse a different prefix length than the plan
+        assumed. Unservable requests (oversized prompt / pool
+        exhausted) abort without killing the instance."""
+        aborted: List[Request] = []
+        for item in batch.prefill_items():
             r = item.request
             if r.request_id not in self.live:
                 try:
                     self._admit(r, now)
                 except (AdmissionError, MemoryError):
-                    # unservable (oversized prompt / pool exhausted):
-                    # fail THIS request, keep the instance alive
                     self.scheduler.abort(r)
                     self.stats["aborted"] += 1
                     aborted.append(r)
                     continue
-                # engine may reuse less than the scheduler assumed
-                # (recurrent snapshot granularity) — take the true value
-                item.chunk_tokens = min(item.chunk_tokens,
-                                        r.prompt_len - r.prefill_done)
-            start = r.prefill_done
-            chunk = min(item.chunk_tokens, r.prompt_len - start)
-            if self.has_recurrent and start < r.prompt_len - 1:
-                # stop at the penultimate token so the state snapshot
-                # lands at a reusable boundary (reuse cap = len - 1)
-                chunk = min(chunk, r.prompt_len - 1 - start)
-            item.chunk_tokens = chunk
+            self.scheduler.clamp_chunk(
+                item, snapshot_boundary=self.has_recurrent)
+        return aborted
+
+    def _run_prefills(self, batch: Batch) -> List[Request]:
+        """Serial per-request prefill chunks (dense plane and the
+        unfused paged baseline): one dispatch per chunk."""
+        newly_prefilled: List[Request] = []
+        for item in batch.prefill_items():
+            r = item.request
+            start, chunk = r.prefill_done, item.chunk_tokens
             if chunk <= 0:
                 continue
             toks = jnp.asarray(r.tokens[start:start + chunk], jnp.int32)
@@ -509,6 +581,7 @@ class Engine:
                                          "start": jnp.int32(start)})
                 self.live[r.request_id]["cache"] = cache
             self.stats["prefilled_tokens"] += chunk
+            self.stats["model_dispatches"] += 1
             if self.has_recurrent and start + chunk == r.prompt_len - 1:
                 self._snapshot_full_cache(r, r.prompt_len - 1)
             if start + chunk >= r.prompt_len:
@@ -517,32 +590,74 @@ class Engine:
                 self.live[r.request_id]["next"] = tok
                 r.output_tokens.append(tok)
                 newly_prefilled.append(r)
+        return newly_prefilled
 
-        # -- decode items (one batched step) --
-        dec = [it.request for it in batch.items if it.phase == "decode"]
-        if dec and self.paged:
-            self._decode_batch_paged(dec)
-        elif dec:
-            self._decode_batch_dense(dec)
-
-        # -- advance scheduler state --
-        if aborted:
-            batch.items = [it for it in batch.items
-                           if it.request not in aborted]
-        finished = self.scheduler.complete_iteration(batch, now)
-        for r in newly_prefilled:
-            self._store_prefix(r, now)
-        for item in batch.items:
-            r = item.request
-            if item.phase == "decode" and r.output_tokens:
-                r.output_tokens[-1] = self.live[r.request_id]["next"]
-        for r in finished:
-            self.live.pop(r.request_id, None)
-            self.pool.release(("req", r.request_id) if self.paged
-                              else r.request_id)
-        # aborted requests are terminal too (state FAILED) — surface
-        # them so cluster runtimes can account/resubmit
-        return finished + aborted
+    def _run_mixed(self, batch: Batch) -> List[Request]:
+        """Fused ragged iteration (DESIGN.md §7): pack every prefill
+        chunk and decode slot into ONE donated dispatch. Chunks fill a
+        [Lc, C] half padded to a common bucketed chunk length (each
+        lane addressed by its page-table row and start position);
+        decode slots fill a [Ld] single-token half — so each lane's KV
+        is gathered once, and per-iteration model dispatches are O(1)
+        in the number of active prefills. Padding lanes carry all-zero
+        table rows (the reserved scratch page absorbs their KV writes);
+        padded chunk tokens are redirected to scratch inside the
+        kernel. Retraces are bounded by the O(log^3) set of
+        (Lc, C, Ld) bucket triples, not by batch shapes."""
+        chunk_items = [it for it in batch.prefill_items()
+                       if it.chunk_tokens > 0]
+        dec_items = batch.decode_items()
+        if not chunk_items and not dec_items:
+            return []
+        Lc = _bucket(len(chunk_items))
+        Cb = _bucket(max((it.chunk_tokens for it in chunk_items),
+                         default=1))
+        Ld = _bucket(len(dec_items))
+        ctoks = np.zeros((Lc, Cb), np.int32)
+        cstart = np.zeros(Lc, np.int32)
+        clen = np.zeros(Lc, np.int32)
+        for i, it in enumerate(chunk_items):
+            r, s, n = it.request, it.request.prefill_done, it.chunk_tokens
+            ctoks[i, :n] = r.tokens[s:s + n]
+            cstart[i], clen[i] = s, n
+        cpt = self._page_table_rows(
+            [("req", it.request.request_id) for it in chunk_items],
+            n_rows=Lc)
+        dtoks = np.zeros(Ld, np.int32)
+        dpos = np.zeros(Ld, np.int32)
+        for i, it in enumerate(dec_items):
+            r = it.request
+            dtoks[i] = self.live[r.request_id]["next"]
+            dpos[i] = r.prompt_len + len(r.output_tokens) - 1
+        dpt = self._page_table_rows(
+            [("req", it.request.request_id) for it in dec_items],
+            n_rows=Ld)
+        nxt, self.pages = self._mixed_paged_fn(
+            self.pages, jnp.asarray(ctoks), jnp.asarray(cstart),
+            jnp.asarray(clen), jnp.asarray(cpt), jnp.asarray(dtoks),
+            jnp.asarray(dpos), jnp.asarray(dpt))
+        nxt = np.asarray(nxt)
+        self.stats["model_dispatches"] += 1
+        self.stats["fused_iterations"] += 1
+        self.stats["fused_padded_tokens"] += (
+            Lc * Cb + Ld - int(clen.sum()) - len(dec_items))
+        newly_prefilled: List[Request] = []
+        for i, it in enumerate(chunk_items):
+            r = it.request
+            self.stats["prefilled_tokens"] += it.chunk_tokens
+            if r.prefill_done + it.chunk_tokens >= r.prompt_len:
+                # prefill emits the FIRST generated token
+                tok = int(nxt[i])
+                self.live[r.request_id]["next"] = tok
+                r.output_tokens.append(tok)
+                newly_prefilled.append(r)
+        for i, it in enumerate(dec_items):
+            r = it.request
+            self.live[r.request_id]["next"] = int(nxt[Lc + i])
+        if dec_items:
+            self.stats["decode_steps"] += len(dec_items)
+            self.stats["decode_batches"] += 1
+        return newly_prefilled
 
     def _decode_batch_paged(self, dec: List[Request]) -> None:
         """Slot/bucket decode (DESIGN.md §3): live requests fill the
@@ -569,6 +684,7 @@ class Engine:
             self.live[r.request_id]["next"] = int(nxt[i])
         self.stats["decode_steps"] += B
         self.stats["decode_batches"] += 1
+        self.stats["model_dispatches"] += 1
 
     def _decode_batch_dense(self, dec: List[Request]) -> None:
         """DENSE reference: rebuild the batch cache with O(B * S)
@@ -589,6 +705,7 @@ class Engine:
             self.live[r.request_id]["next"] = int(nxt[i])
         self.stats["decode_steps"] += len(dec)
         self.stats["decode_batches"] += 1
+        self.stats["model_dispatches"] += 1
 
     # ---- failure ---------------------------------------------------------------
 

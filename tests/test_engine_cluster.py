@@ -160,6 +160,49 @@ def test_straggler_sheds_load(small_model):
     assert counts[1] > counts[0], counts
 
 
+@pytest.mark.parametrize("policy", ["e2", "rr"])
+def test_cluster_fused_paged_end_to_end(small_model, policy):
+    """ClusterRuntime on the default paged FUSED plane (DESIGN.md §7):
+    E2 and RR policies, eviction pressure, and a mid-flight failover
+    rebalance. Outputs stay oracle-exact, fused steps actually ran, and
+    the cross-layer reconciliation (engine/scheduler reuse accounting,
+    pool refcounts, global eviction-notification gauges) holds after
+    rebalancing."""
+    cfg, api, params = small_model
+    _oracle.params = params
+    cl = ClusterRuntime(cfg, params, num_instances=2, policy=policy,
+                        engine_cfg=EngineConfig(
+                            max_context=64, chunk_size=16,
+                            max_batch_tokens=64, capacity_tokens=512,
+                            page_size=16))
+    assert all(e.paged and e.fused for e in cl.engines.values()), \
+        "cluster engines must default to the paged fused plane"
+    reqs = _mk_requests(cfg, 10, seed=11)
+    for r in reqs:
+        r.arrival_time = 0.0
+        cl.submit(r, 0.0)
+    t = 0.0
+    for _ in range(4):
+        cl.step(t)
+        t += 0.01
+    cl.check_invariants()
+    cl.fail_instance(0, t)            # rebalance mid-flight
+    for _ in range(1500):
+        cl.step(t)
+        t += 0.01
+        if all(r.state.value == "finished" for r in reqs):
+            break
+    assert all(r.state.value == "finished" for r in reqs)
+    cl.check_invariants()
+    stats = cl.engine_stats()
+    assert any(s["fused_iterations"] > 0
+               for i, s in stats.items() if not cl.engines[i].failed), \
+        "no engine ever took the fused path"
+    for r in reqs:
+        assert list(r.output_tokens) == _oracle(api, cfg, r), \
+            f"req {r.request_id} diverged after rebalancing"
+
+
 @pytest.mark.parametrize("arch", ["jamba-v0.1-52b", "rwkv6-7b"])
 def test_recurrent_state_snapshot_reuse(arch):
     """SSM/hybrid archs reuse recurrent-state snapshots (+ attention KV
