@@ -1,6 +1,6 @@
 PY ?= python
 
-.PHONY: ci ci-fast test bench-engine install
+.PHONY: ci ci-fast test bench-engine bench-smoke install
 
 install:
 	$(PY) -m pip install -e .[test]
@@ -10,12 +10,20 @@ ci:
 	PYTHONPATH=src $(PY) -m pytest -x -q
 
 # fast tier-1: the non-slow suite (which includes the mixed-batching
-# tests) — use for inner-loop iteration; `ci` remains the full gate
+# tests) + the seconds-scale capacity-pressure smoke bench — use for
+# inner-loop iteration; `ci` remains the full gate
 ci-fast:
 	PYTHONPATH=src $(PY) -m pytest -q -m "not slow" tests
+	$(MAKE) bench-smoke
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -q
 
 bench-engine:
 	PYTHONPATH=src $(PY) -m benchmarks.bench_engine
+
+# tiny capacity-pressure bench (KV offload on vs off, DESIGN.md §8):
+# asserts the host tier restores under thrash and improves p99 — runs
+# in seconds, results land in results/bench/bench_offload.{csv,json}
+bench-smoke:
+	PYTHONPATH=src $(PY) -m benchmarks.bench_offload

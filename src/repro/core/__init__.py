@@ -7,10 +7,11 @@ from .cost_model import CostModel, HardwareSpec, ModelSpec, cost_model_for
 from .request import Request, RequestState
 from .e2 import InstanceState, ScheduleDecision, e2_schedule, load_cost, subtree_load
 from .global_scheduler import GlobalScheduler, GlobalSchedulerConfig, PodRouter
-from .local_scheduler import (Batch, BatchItem, LocalScheduler,
-                              LocalSchedulerConfig)
+from .local_scheduler import (AccountingHostTier, Batch, BatchItem,
+                              LocalScheduler, LocalSchedulerConfig)
 
 __all__ = [
+    "AccountingHostTier",
     "RadixTree", "RadixNode", "MatchResult",
     "CostModel", "HardwareSpec", "ModelSpec", "cost_model_for",
     "Request", "RequestState",

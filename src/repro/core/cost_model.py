@@ -23,6 +23,7 @@ from typing import Optional, Sequence, Tuple
 PEAK_FLOPS_BF16 = 197e12          # FLOP/s
 HBM_BW = 819e9                    # B/s
 ICI_BW_PER_LINK = 50e9            # B/s
+HOST_BW = 32e9                    # B/s host<->HBM DMA (PCIe-class link)
 
 
 @dataclass
@@ -31,9 +32,11 @@ class HardwareSpec:
     peak_flops: float = PEAK_FLOPS_BF16
     hbm_bw: float = HBM_BW
     ici_bw: float = ICI_BW_PER_LINK
+    host_bw: float = HOST_BW        # KV offload restore bandwidth per chip
     chips_per_instance: int = 1     # TP degree of one model instance
     mfu_prefill: float = 0.55       # achievable fraction of peak in prefill
     mbu_decode: float = 0.70        # achievable fraction of HBM bw in decode
+    dma_eff: float = 0.80           # achievable fraction of host_bw
 
 
 @dataclass
@@ -71,6 +74,9 @@ class CostModel:
     prefill_b: float = 0.002        # launch/schedule overhead per batch
     decode_a: float = field(init=False)
     decode_b: float = 0.0
+    # host->device KV restore (hierarchical tiering): bandwidth-bound
+    restore_a: float = field(init=False)
+    restore_b: float = 0.0005       # DMA launch / page-table fixup overhead
     avg_context: float = 2048.0     # used for the KV-read term of decode
     # decode runs continuously batched: the weight read amortizes over
     # the co-resident decode tokens (matches the paper's profiled decode
@@ -92,8 +98,12 @@ class CostModel:
         self.decode_a = (weight_bytes + kv_read) / (
             self.hw.hbm_bw * self.hw.mbu_decode * chips
         )
+        # each chip restores its own KV shard over its own host link
+        self.restore_a = self.model.kv_bytes_per_token / (
+            self.hw.host_bw * self.hw.dma_eff * chips
+        )
 
-    # ---- the two functions Algorithm 2 calls --------------------------------
+    # ---- the functions Algorithm 2 calls ------------------------------------
 
     def prefill_time(self, missed_tokens: float) -> float:
         if missed_tokens <= 0:
@@ -104,6 +114,14 @@ class CostModel:
         if out_tokens <= 0:
             return 0.0
         return self.decode_a * out_tokens + self.decode_b
+
+    def restore_time(self, host_tokens: float) -> float:
+        """Seconds to restore ``host_tokens`` of demoted KV host->device
+        (tier-aware E2: a host-cached prefix is neither free nor a full
+        recompute — it costs one bandwidth-bound DMA)."""
+        if host_tokens <= 0:
+            return 0.0
+        return self.restore_a * host_tokens + self.restore_b
 
     # ---- iteration-level batch time (simulator / engine pacing) -------------
 

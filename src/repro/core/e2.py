@@ -25,6 +25,10 @@ class InstanceState:
     window: float = 180.0                 # history H (seconds)
     speed_factor: float = 1.0             # >1 == straggler (runs slower)
     alive: bool = True
+    # host-offload tier capacity (0 = tier disabled): evictions on this
+    # instance demote KV to host memory instead of dropping it, so its
+    # eviction cost M is a restore, not a recompute.
+    host_capacity_tokens: int = 0
 
     # window-H event log: (time, prefill_sec, decode_sec)
     events: deque = field(default_factory=deque)
@@ -32,10 +36,21 @@ class InstanceState:
     decode_sec_sum: float = 0.0
     request_times: deque = field(default_factory=deque)  # assignment times
     inflight: int = 0
-    cached_tokens: int = 0                # tracked estimate of cache use
+    # Tracked estimate of device cache use. Kept UNCLAMPED: additions
+    # accrue in full and eviction notifications subtract full node
+    # lengths, so clamping on write would understate long-lived
+    # instances (gauge drift). Readers clamp via device_cached_est().
+    cached_tokens: int = 0
+    host_cached_tokens: int = 0           # tracked estimate of host-tier use
     # running average of observed output lengths (paper: avg output len in H)
     out_len_events: deque = field(default_factory=deque)  # (time, out_len)
     out_len_sum: float = 0.0
+
+    def device_cached_est(self) -> int:
+        """Clamped read of the device-cache gauge: occupancy can never
+        physically exceed capacity, but the raw gauge must keep the
+        overshoot so later evictions subtract from the right base."""
+        return min(self.cached_tokens, self.capacity_tokens)
 
     # ---- window maintenance --------------------------------------------------
 
@@ -103,29 +118,41 @@ class ScheduleDecision:
 
 def load_cost(inst: InstanceState, tree: RadixTree, match: MatchResult,
               prompt_len: int, now: float) -> float:
-    """L_i + M_i + P_i for assigning the matched request to ``inst``."""
+    """L_i + M_i + P_i for assigning the matched request to ``inst``.
+
+    Tier-aware: tokens the instance holds only in its host-offload tier
+    cost restore_time (a bandwidth-bound DMA), not a full recompute and
+    not zero — so E2 correctly arbitrates restore-here vs recompute-here
+    vs exploit-elsewhere. Restored tokens also re-occupy device pages,
+    so they count toward the eviction-pressure estimate M."""
     cm = inst.cost_model
     # L_i — windowed history load (maintained incrementally; the paper's
     # Σ PREFILLTIME(missed_j) + DECODETIME(avg_out) is what add_work stored).
     L = inst.window_load(now)
 
-    # per-instance missed length: tokens of this prompt NOT cached on inst
+    # per-instance split: device-cached / host-demoted / truly missed
     inst_cached = match.per_instance_len.get(inst.instance_id, 0)
-    missed = max(prompt_len - inst_cached, 0)
+    inst_host = match.per_instance_host_len.get(inst.instance_id, 0)
+    missed = max(prompt_len - inst_cached - inst_host, 0)
 
-    # M_i — eviction cost: recompute time of evicted nodes x their hit rate.
+    # M_i — eviction cost of making room: hit-rate-weighted loss of the
+    # evicted nodes. With a host tier, eviction demotes (loss = restore
+    # on re-hit); without one it drops (loss = full recompute).
     M = 0.0
-    tokens_needed = inst.cached_tokens + missed - inst.capacity_tokens
+    tokens_needed = (inst.device_cached_est() + missed + inst_host
+                     - inst.capacity_tokens)
     if tokens_needed > 0:
         protected: Set[int] = {n.node_id for n in match.path}
         plan = tree.plan_eviction(inst.instance_id, tokens_needed, protected)
         total_req = max(inst.requests_in_window(now), 1)
+        loss = (cm.restore_time if inst.host_capacity_tokens > 0
+                else cm.prefill_time)
         for node in plan:
             n_j = tree.hits_in_window(node, now, inst.instance_id) / total_req
-            M += cm.prefill_time(len(node.tokens)) * n_j
+            M += loss(len(node.tokens)) * n_j
 
-    # P_i — prefill time of the new request's missed tokens on this instance.
-    P = cm.prefill_time(missed)
+    # P_i — prefill of the truly-missed tokens + restore of the demoted.
+    P = cm.prefill_time(missed) + cm.restore_time(inst_host)
 
     return L + (M + P) * inst.speed_factor
 
@@ -153,14 +180,23 @@ def e2_schedule(instances: Dict[int, InstanceState], tree: RadixTree,
     cached_len = match.matched_len
     missed_len = prompt_len - cached_len
 
-    if missed_len < cached_len and match.per_instance_len:
-        # ---- EXPLOIT: instances caching the longest part of the match ----
-        best_len = max(
-            l for i, l in match.per_instance_len.items() if i in alive
-        ) if any(i in alive for i in match.per_instance_len) else 0
+    if missed_len < cached_len and (match.per_instance_len
+                                    or match.per_instance_host_len):
+        # ---- EXPLOIT: instances holding the longest part of the match ----
+        # Tier-aware: a host-demoted prefix is still worth exploiting
+        # (restore beats recompute), so instances rank by their combined
+        # device+host coverage; load_cost prices the restore term, so
+        # among equal-coverage candidates a device copy wins on cost.
+        eff: Dict[int, int] = {}
+        for i, l in match.per_instance_len.items():
+            if i in alive:
+                eff[i] = eff.get(i, 0) + l
+        for i, l in match.per_instance_host_len.items():
+            if i in alive:
+                eff[i] = eff.get(i, 0) + l
+        best_len = max(eff.values()) if eff else 0
         if best_len > 0:
-            K = [i for i, l in match.per_instance_len.items()
-                 if l == best_len and i in alive]
+            K = [i for i, l in eff.items() if l == best_len]
             costs = {i: load_cost(alive[i], tree, match, prompt_len, now)
                      for i in K}
             pick = min(costs, key=costs.get)

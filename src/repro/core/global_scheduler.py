@@ -11,6 +11,7 @@ paper itself prescribes for datacenter scale).
 from __future__ import annotations
 
 import hashlib
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 
@@ -28,6 +29,7 @@ class GlobalSchedulerConfig:
     pd_min_load: float = 1.0         # PD balancing only above this load (s)
     autoscale_frac: float = 0.5      # subtree load > frac * H  => replicate
     capacity_tokens: int = 2_000_000 # per-instance KV capacity (tokens)
+    host_capacity_tokens: int = 0    # per-instance host-offload tier (0=off)
     rebalance_every: float = 1.0     # seconds between rebalance scans
     autoscale_every: float = 5.0     # seconds between autoscale scans
 
@@ -55,13 +57,17 @@ class GlobalScheduler:
 
     def add_instance(self, instance_id: int,
                      capacity_tokens: Optional[int] = None,
-                     speed_factor: float = 1.0) -> None:
+                     speed_factor: float = 1.0,
+                     host_capacity_tokens: Optional[int] = None) -> None:
         self.instances[instance_id] = InstanceState(
             instance_id=instance_id,
             capacity_tokens=capacity_tokens or self.config.capacity_tokens,
             cost_model=self.cost_model,
             window=self.config.window,
             speed_factor=speed_factor,
+            host_capacity_tokens=(
+                self.config.host_capacity_tokens
+                if host_capacity_tokens is None else host_capacity_tokens),
         )
 
     def remove_instance(self, instance_id: int, now: float = 0.0) -> None:
@@ -140,17 +146,29 @@ class GlobalScheduler:
                 match: MatchResult, now: float) -> None:
         inst = self.instances[decision.instance]
         inst_cached = match.per_instance_len.get(decision.instance, 0)
-        missed = max(request.prompt_len - inst_cached, 0)
+        inst_host = match.per_instance_host_len.get(decision.instance, 0)
+        missed = max(request.prompt_len - inst_cached - inst_host, 0)
 
         # Insert/extend prompt path; mark the chosen instance on every node.
         self.tree.insert(request.tokens, instance=decision.instance, now=now)
 
-        # window-H load accounting (Alg. 2's L term source)
+        # window-H load accounting (Alg. 2's L term source). Host-tier
+        # hits charge the restore DMA, not a recompute (folded into the
+        # prefill-phase term: both occupy the instance's prefill lane).
         cm = inst.cost_model
         est_out = inst.avg_output_len(now, default=float(request.max_new_tokens))
-        inst.add_work(now, cm.prefill_time(missed), cm.decode_time(est_out))
-        inst.cached_tokens = min(inst.cached_tokens + missed,
-                                 inst.capacity_tokens)
+        inst.add_work(now,
+                      cm.prefill_time(missed) + cm.restore_time(inst_host),
+                      cm.decode_time(est_out))
+        # Gauge is UNCLAMPED on write: eviction notifications subtract
+        # full node lengths, so clamping additions here would make the
+        # gauge understate long-lived instances (drift); readers clamp
+        # through InstanceState.device_cached_est(). Missed AND restored
+        # tokens re-occupy device. The HOST gauge is untouched here: a
+        # restore keeps the host entry resident (the copy stays valid);
+        # it only falls when the entry is host-dropped (on_evictions),
+        # mirroring the host_instances marking exactly.
+        inst.cached_tokens += missed + inst_host
         inst.inflight += 1
 
         request.instance = decision.instance
@@ -171,21 +189,52 @@ class GlobalScheduler:
                                 or request.max_new_tokens)
 
     def on_evictions(self, instance_id: int, node_ids: Sequence[int],
-                     now: float = 0.0) -> None:
+                     now: float = 0.0, demoted_ids: Sequence[int] = (),
+                     host_dropped_ids: Sequence[int] = ()) -> None:
         """Async eviction notification from a local scheduler (§3.3).
         Node lookups go through the tree's node-id index and dead-node
         cleanup is scoped to the touched parent chains — this path runs
-        once per local eviction batch and must not walk the whole forest."""
+        once per local eviction batch and must not walk the whole forest.
+
+        Tiered protocol: ``demoted_ids`` (a subset of ``node_ids``) left
+        the device but live on in the instance's host tier — they are
+        marked host-resident (keeping their hit history: the prefix is
+        still exploitable at restore cost) instead of removed.
+        ``host_dropped_ids`` fell out of the host tier too and are truly
+        gone. Plain calls (no tier kwargs) behave exactly as before."""
+        dem = set(demoted_ids)
+        hdrop = set(host_dropped_ids)
         inst = self.instances.get(instance_id)
         freed = 0
+        demoted_toks = 0
         for nid in node_ids:
             node = self.tree.get_node(nid)
             if node is not None and instance_id in node.instances:
-                self.tree.remove_instance(node, instance_id)
                 freed += len(node.tokens)
+                if nid in dem:
+                    node.instances.discard(instance_id)
+                    # the host gauge follows the host_instances marking
+                    # exactly (guarded add here / discard below), so a
+                    # restore->re-demote cycle — where the entry stayed
+                    # resident throughout — cannot double-count
+                    if instance_id not in node.host_instances:
+                        node.host_instances.add(instance_id)
+                        demoted_toks += len(node.tokens)
+                else:
+                    self.tree.remove_instance(node, instance_id)
+        host_freed = 0
+        for nid in hdrop:
+            node = self.tree.get_node(nid)
+            if node is not None and instance_id in node.host_instances:
+                node.host_instances.discard(instance_id)
+                host_freed += len(node.tokens)
         if inst is not None:
             inst.cached_tokens = max(inst.cached_tokens - freed, 0)
-        for nid in node_ids:
+            inst.host_cached_tokens = max(
+                inst.host_cached_tokens + demoted_toks - host_freed, 0)
+        for nid in list(node_ids) + list(hdrop):
+            if nid in dem and nid not in hdrop:
+                continue             # demoted nodes are live, never pruned
             node = self.tree.get_node(nid)   # None if already pruned
             if node is not None:
                 self.tree.prune_upward(node, now)
@@ -251,7 +300,8 @@ class PodRouter:
 
     def __init__(self, pods: Dict[int, GlobalScheduler],
                  head_tokens: int = 64, spill_ratio: float = 2.0,
-                 spill_min_load: float = 1.0):
+                 spill_min_load: float = 1.0,
+                 affinity_cap: int = 65536):
         self.pods = pods
         self.head_tokens = head_tokens
         self.spill_ratio = spill_ratio
@@ -259,7 +309,17 @@ class PodRouter:
         # this, any nonzero load "exceeds 2x" an idle pod and affinity
         # degenerates to round-robin (caught by test_pod_router)
         self.spill_min_load = spill_min_load
-        self._affinity: Dict[str, int] = {}
+        # BOUNDED prefix-affinity map: unique-prefix traffic would grow
+        # an unbounded dict (one digest per distinct head); LRU-capped,
+        # a dropped digest just re-resolves by load next time.
+        self.affinity_cap = affinity_cap
+        self._affinity: "OrderedDict[str, int]" = OrderedDict()
+
+    def _remember(self, key: str, pid: int) -> None:
+        self._affinity[key] = pid
+        self._affinity.move_to_end(key)
+        while len(self._affinity) > self.affinity_cap:
+            self._affinity.popitem(last=False)
 
     def _digest(self, tokens: Sequence[int]) -> str:
         head = bytes(str(list(tokens[: self.head_tokens])), "utf-8")
@@ -283,12 +343,11 @@ class PodRouter:
         pid = self._affinity.get(key)
         if pid is None or pid not in loads:
             pid = min(loads, key=loads.get)
-            self._affinity[key] = pid
         else:
             lightest = min(loads, key=loads.get)
             if (lightest != pid
                     and loads[pid] > self.spill_min_load
                     and loads[pid] > self.spill_ratio * loads[lightest]):
                 pid = lightest
-                self._affinity[key] = pid
+        self._remember(key, pid)
         return pid, self.pods[pid].schedule(request, now)

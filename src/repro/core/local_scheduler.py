@@ -17,6 +17,7 @@ both drive it. Token-budget accounting is in tokens (1 token of KV/state
 
 from __future__ import annotations
 
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 
@@ -34,6 +35,25 @@ class LocalSchedulerConfig:
     priority_groups: int = 10            # P in §3.3
     fcfs: bool = False                   # ablation: plain FCFS ordering
     window: float = 180.0
+    # Host-offload tier budget (tokens). 0 disables tiering: eviction
+    # drops KV (seed behavior). >0: eviction DEMOTES node KV to the
+    # host tier (via the attached host_tier data mover) and a later hit
+    # restores it instead of recomputing.
+    host_capacity_tokens: int = 0
+
+
+class AccountingHostTier:
+    """Data-mover stub for runs with no real device memory (the
+    discrete-event simulator): every demote 'succeeds' for the node's
+    full span and drops are free. The LocalScheduler layered on top
+    still does all the real tier accounting (LRU, capacity, gauges), so
+    simulator runs exercise the same policy code the engine does."""
+
+    def demote_many(self, nodes: Sequence[RadixNode]) -> Dict[int, int]:
+        return {n.node_id: len(n.tokens) for n in nodes}
+
+    def drop(self, node_id: int) -> None:
+        pass
 
 
 @dataclass
@@ -42,6 +62,9 @@ class BatchItem:
     phase: str            # "prefill" | "decode"
     chunk_tokens: int     # tokens processed this iteration
     cached_len: int = 0   # cache hit for this request (first chunk only)
+    restored_len: int = 0 # host-tier tokens restored at admission
+                          # (first chunk only; simulator charges
+                          # restore_time for them, the engine DMAs them)
 
 
 @dataclass
@@ -74,25 +97,75 @@ class Batch:
 
 class LocalScheduler:
     def __init__(self, config: LocalSchedulerConfig,
-                 on_evict: Optional[Callable[[int, List[int]], None]] = None):
+                 on_evict: Optional[Callable[[int, List[int]], None]] = None,
+                 host_tier=None):
         self.config = config
         self.tree = RadixTree(window=config.window)
         self.tree.split_hooks.append(self._on_split)
         self.waiting: List[Request] = []
         self.running: List[Request] = []    # requests in decode phase
         self.prefilling: List[Request] = [] # requests mid-chunked-prefill
-        self.used_tokens = 0                # cache pool usage
+        self.used_tokens = 0                # device cache pool usage
         self.on_evict = on_evict            # async global notification
+        # Tier outcome of the LAST apply_eviction/drop_host, published
+        # just before on_evict fires so the notification consumer (the
+        # engine) can forward demoted-not-dead vs truly-dropped to the
+        # global scheduler in ONE message: demoted node ids left the
+        # device but are restorable; host-dropped ids are gone from
+        # both tiers.
+        self.last_demoted_ids: List[int] = []
+        self.last_host_dropped_ids: List[int] = []
+        # host tier: the scheduler owns the POLICY (which nodes live in
+        # the host tier, LRU order, capacity in tokens); host_tier is
+        # the DATA MOVER that actually demotes/drops bytes — the
+        # engine's PagedHostTier (device gather -> pinned numpy) or
+        # AccountingHostTier for the simulator.
+        self.host_tier = host_tier
+        self._host_lru: "OrderedDict[int, int]" = OrderedDict()  # nid -> toks
+        self.host_used_tokens = 0
         self._pinned: Dict[int, List[RadixNode]] = {}  # req id -> pinned path
+        # per-request token account: the part of a request's reservation
+        # that dies WITH the request (outputs + private prompt copies
+        # not published to the prefix store) and must be refunded at
+        # release — without this the gauge leaks max_new (+ any
+        # recomputed/restored duplicate prefix) per finished request
+        # and admission eventually wedges under sustained traffic.
+        # Engines overwrite via set_account/credit_stored; the default
+        # (simulator semantics: every prompt node is published) refunds
+        # just the outputs.
+        self._acct: Dict[int, int] = {}
         self.evicted_log: List[int] = []
         self.stats = {"batches": 0, "evicted_tokens": 0, "admitted": 0,
-                      "starved_max_wait": 0.0}
+                      "starved_max_wait": 0.0, "demoted_tokens": 0,
+                      "restored_tokens": 0, "host_dropped_tokens": 0,
+                      "restore_hits": 0}
+
+    @property
+    def host_enabled(self) -> bool:
+        return (self.host_tier is not None
+                and self.config.host_capacity_tokens > 0)
 
     # ---- request intake ---------------------------------------------------------
 
+    def _tiered_cached(self, request: Request, now: float,
+                       update_stats: bool = False):
+        """(match, device_len, host_len) for this instance, and set the
+        request's cached_len to the *reusable* total (device-forkable +
+        host-restorable) — NOT the raw tree match: nodes whose KV this
+        instance already evicted without demotion are recompute, not
+        cache hits, and must neither boost priority nor shrink the
+        reservation."""
+        m, dev, host = self.tree.tiered_match(
+            request.tokens, self.config.instance_id, now=now,
+            update_stats=update_stats)
+        if not self.host_enabled:
+            host = 0
+        request.cached_len = min(dev + host, request.prompt_len)
+        request.device_cached_len = dev
+        return m, dev, host
+
     def enqueue(self, request: Request, now: float) -> None:
-        match = self.tree.match(request.tokens, now=now, update_stats=True)
-        request.cached_len = match.matched_len
+        self._tiered_cached(request, now, update_stats=True)
         request.state = RequestState.QUEUED_LOCAL
         self.waiting.append(request)
         self.stats["admitted"] += 1
@@ -114,8 +187,7 @@ class LocalScheduler:
         groups: Dict[int, List[Request]] = {}
         for r in self.waiting:
             # re-match: cache contents may have changed since enqueue
-            m = self.tree.match(r.tokens, now=now)
-            r.cached_len = m.matched_len
+            self._tiered_cached(r, now)
             groups.setdefault(self._priority(r), []).append(r)
         for g in groups.values():
             g.sort(key=lambda r: r.arrival_time)   # FCFS within a group
@@ -176,7 +248,8 @@ class LocalScheduler:
                 self.waiting.remove(r)
                 self.prefilling.append(r)
                 batch.items.append(
-                    BatchItem(r, "prefill", chunk, cached_len=r.cached_len))
+                    BatchItem(r, "prefill", chunk, cached_len=r.cached_len,
+                              restored_len=r.restored_len))
                 budget -= chunk
 
         if self.waiting:
@@ -211,11 +284,14 @@ class LocalScheduler:
 
     def _reserve(self, request: Request, now: float) -> bool:
         """Reserve cache space for a request's full prompt + expected output;
-        evict LRU tree nodes if needed (§3.3). Pins the match path."""
-        m = self.tree.match(request.tokens, now=now, update_stats=True)
-        request.cached_len = m.matched_len
-        new_tokens = (request.prompt_len - m.matched_len
-                      + request.max_new_tokens)
+        evict LRU tree nodes if needed (§3.3). Pins the match path.
+
+        Two-tier accounting: only the DEVICE-cached prefix shrinks the
+        reservation — host-demoted tokens are restorable without
+        recompute (they shape cached_len/priority) but they re-occupy
+        device pages on restore, exactly like prefilled tokens do."""
+        m, dev, host = self._tiered_cached(request, now, update_stats=True)
+        new_tokens = (request.prompt_len - dev + request.max_new_tokens)
         if new_tokens + self.used_tokens > self.config.capacity_tokens:
             need = new_tokens + self.used_tokens - self.config.capacity_tokens
             protected = {n.node_id for n in m.path}
@@ -225,6 +301,26 @@ class LocalScheduler:
             if freed < need:
                 return False
             self.apply_eviction(plan)
+            # the eviction's demote cascade can overflow the host
+            # budget and drop the very entries this request matched:
+            # re-walk so restored_len only books KV that still exists
+            # (the device prefix is protected and cannot shrink; the
+            # engine additionally revalidates at staging time)
+            m, dev, host = self._tiered_cached(request, now)
+        request.restored_len = max(
+            min(dev + host, request.prompt_len - 1) - dev, 0)
+        if request.restored_len > 0:
+            # LRU-touch the host entries this request is about to
+            # restore; the entries stay resident (the host copy remains
+            # valid — the engine re-promotes the nodes to device aliases
+            # after prefill) until host LRU pressure drops them.
+            boundary = 0
+            for node in m.path:
+                boundary += len(node.tokens)
+                if boundary > dev and node.node_id in self._host_lru:
+                    self.touch_host(node.node_id)
+            self.stats["restored_tokens"] += request.restored_len
+            self.stats["restore_hits"] += 1
         # pin matched path so concurrent eviction can't pull our prefix
         path = self.tree.insert(request.tokens,
                                 instance=self.config.instance_id, now=now)
@@ -232,22 +328,101 @@ class LocalScheduler:
             n.ref_count += 1
         self._pinned[request.request_id] = path
         self.used_tokens += new_tokens
+        self._acct[request.request_id] = request.max_new_tokens
         return True
 
+    def set_account(self, request_id: int, tokens: int) -> None:
+        """Engine hook: set the request's dies-with-it token account
+        (prompt - aliased + max_new on the paged plane); later
+        credit_stored calls subtract the spans the request publishes."""
+        self._acct[request_id] = tokens
+
+    def credit_stored(self, request_id: int, tokens: int) -> None:
+        """Engine hook: ``tokens`` of the request's KV were published
+        to the prefix store (node alias / slab) — they now outlive the
+        request and are refunded by eviction, not by release."""
+        a = self._acct.get(request_id)
+        if a is not None:
+            self._acct[request_id] = max(a - tokens, 0)
+
+    def touch_host(self, node_id: int) -> None:
+        """LRU-recency touch for a host-tier entry (restore hit)."""
+        if node_id in self._host_lru:
+            self._host_lru.move_to_end(node_id)
+
     def apply_eviction(self, plan: Sequence[RadixNode]) -> int:
-        """Evict ``plan`` from the tree and run ALL the bookkeeping
-        (pool accounting, stats, eviction log, async notification) —
-        the single place eviction side effects happen, shared by
-        _reserve and the engine's page-fragmentation reclaim."""
-        self.tree.evict(plan, self.config.instance_id)
+        """Evict ``plan`` from the device tier and run ALL the
+        bookkeeping (pool accounting, tier demotion, stats, eviction
+        log, async notification) — the single place eviction side
+        effects happen, shared by _reserve and the engine's
+        page-fragmentation reclaim.
+
+        With the host tier enabled, eviction DEMOTES: the data mover
+        copies each node's KV device->host (and frees its pages); the
+        node is marked host-resident and joins the host LRU. Nodes the
+        mover cannot demote (KV never materialized) are dropped as
+        before. Host-capacity overflow then truly drops the coldest
+        host entries. Both outcomes are surfaced through on_tier_evict
+        so the global scheduler can tell demoted-not-dead from gone."""
+        inst = self.config.instance_id
+        self.tree.evict(plan, inst)
         freed = sum(len(n.tokens) for n in plan)
         self.used_tokens = max(self.used_tokens - freed, 0)
         self.stats["evicted_tokens"] += freed
         ids = [n.node_id for n in plan]
+        demoted_ids: List[int] = []
+        host_dropped: List[int] = []
+        if self.host_enabled and plan:
+            got = self.host_tier.demote_many(plan)
+            for n in plan:
+                g = got.get(n.node_id, 0)
+                if g <= 0:
+                    continue
+                prev = self._host_lru.pop(n.node_id, None)
+                if prev is not None:
+                    self.host_used_tokens -= prev
+                self._host_lru[n.node_id] = g
+                self.host_used_tokens += g
+                n.host_instances.add(inst)
+                demoted_ids.append(n.node_id)
+                self.stats["demoted_tokens"] += g
+            # host-capacity enforcement: coldest entries truly die
+            while (self.host_used_tokens > self.config.host_capacity_tokens
+                   and self._host_lru):
+                nid, toks = self._host_lru.popitem(last=False)
+                self.host_used_tokens -= toks
+                self.host_tier.drop(nid)
+                node = self.tree.get_node(nid)
+                if node is not None:
+                    node.host_instances.discard(inst)
+                host_dropped.append(nid)
+                self.stats["host_dropped_tokens"] += toks
         self.evicted_log.extend(ids)
+        self.last_demoted_ids = demoted_ids
+        self.last_host_dropped_ids = host_dropped
         if self.on_evict is not None:
-            self.on_evict(self.config.instance_id, ids)  # async in prod
+            self.on_evict(inst, ids)  # async in prod
         return freed
+
+    def drop_host(self, node_id: int) -> int:
+        """Forcibly drop one host-tier entry (both policy state and the
+        mover's bytes) — the failure-injection path tests use to model
+        a host entry dying mid-flight. Returns tokens dropped."""
+        toks = self._host_lru.pop(node_id, None)
+        if toks is None:
+            return 0
+        self.host_used_tokens -= toks
+        if self.host_tier is not None:
+            self.host_tier.drop(node_id)
+        node = self.tree.get_node(node_id)
+        if node is not None:
+            node.host_instances.discard(self.config.instance_id)
+        self.stats["host_dropped_tokens"] += toks
+        self.last_demoted_ids = []
+        self.last_host_dropped_ids = [node_id]
+        if self.on_evict is not None:
+            self.on_evict(self.config.instance_id, [])
+        return toks
 
     # ---- iteration completion -----------------------------------------------------------
 
@@ -283,8 +458,12 @@ class LocalScheduler:
     def _release(self, request: Request) -> None:
         for n in self._pinned.pop(request.request_id, []):
             n.ref_count = max(n.ref_count - 1, 0)
-        # output tokens + non-shared prompt stay cached until LRU-evicted;
-        # pool usage stays (they are cached KV) — only eviction frees it.
+        # prompt KV published to the prefix store stays cached until
+        # LRU-evicted (eviction refunds those spans); the request's
+        # PRIVATE tokens — outputs and any unpublished prompt copy —
+        # die here and are refunded from the per-request account.
+        self.used_tokens = max(
+            self.used_tokens - self._acct.pop(request.request_id, 0), 0)
 
     def _on_split(self, head: RadixNode, tail: RadixNode) -> None:
         """Keep pin lists aligned with node splits: _split copies the
@@ -295,6 +474,19 @@ class LocalScheduler:
         for path in self._pinned.values():
             if head in path and tail not in path:
                 path.append(tail)
+        # keep host-LRU token accounting aligned with the split: the
+        # head's demoted span [node_start, node_start+L) now crosses the
+        # head/tail boundary at head's new span length. (The data mover
+        # splits the actual KV arrays through its own split hook.)
+        toks = self._host_lru.get(head.node_id)
+        if toks is not None:
+            head_toks = min(toks, len(head.tokens))
+            tail_toks = toks - head_toks
+            self._host_lru[head.node_id] = head_toks
+            if tail_toks > 0:
+                # tail lands at the MRU end — close enough to the
+                # head's recency for LRU purposes
+                self._host_lru[tail.node_id] = tail_toks
 
     def abort(self, request: Request) -> None:
         """Drop an admitted request the engine cannot serve (oversized
@@ -302,18 +494,17 @@ class LocalScheduler:
         path, mark it FAILED. The engine skips its batch item; the
         caller decides whether to resubmit.
 
-        Only the max_new_tokens part of the reservation is refunded
-        here: _reserve already inserted the prompt path and marked it
-        cached on this instance, and those (KV-less) suffix nodes stay
-        in the tree until LRU eviction — which refunds their token span
-        through apply_eviction. Refunding the prompt part here too
-        would double-count when that eviction lands."""
+        Only the request's private account (max_new_tokens at this
+        point — the engine sets more only on successful admission) is
+        refunded here, by _release: _reserve already inserted the
+        prompt path and marked it cached on this instance, and those
+        (KV-less) suffix nodes stay in the tree until LRU eviction —
+        which refunds their token span through apply_eviction.
+        Refunding the prompt part here too would double-count when
+        that eviction lands."""
         for q in (self.prefilling, self.running, self.waiting):
             if request in q:
                 q.remove(request)
-        if request.request_id in self._pinned:
-            self.used_tokens = max(
-                self.used_tokens - request.max_new_tokens, 0)
         self._release(request)
         request.state = RequestState.FAILED
 
@@ -329,7 +520,10 @@ class LocalScheduler:
             r.output_tokens = []
         self.waiting, self.prefilling, self.running = [], [], []
         self._pinned.clear()
+        self._acct.clear()
         self.used_tokens = 0
+        self._host_lru.clear()
+        self.host_used_tokens = 0
         self.tree = RadixTree(window=self.config.window)
         self.tree.split_hooks.append(self._on_split)
         return out

@@ -32,6 +32,7 @@ class RadixNode:
         "parent",
         "children",
         "instances",
+        "host_instances",
         "hit_times",
         "last_access",
         "ref_count",
@@ -44,6 +45,11 @@ class RadixNode:
         self.children: Dict[int, RadixNode] = {}
         # Which model instances currently cache this node's KV/state.
         self.instances: Set[int] = set()
+        # Which instances hold this node's KV *demoted to host memory*
+        # (hierarchical tiering): re-hitting it costs restore_time(len),
+        # not recompute. An instance can appear in both sets (host copy
+        # retained after a restore re-promoted the node to device).
+        self.host_instances: Set[int] = set()
         # Per-instance deque of hit timestamps within the history window H.
         self.hit_times: Dict[int, deque] = {}
         self.last_access: float = 0.0
@@ -86,6 +92,10 @@ class MatchResult:
     last_node_matched: int                 # tokens matched inside last_node
     # per-instance matched length: how many of matched_len each instance caches
     per_instance_len: Dict[int, int] = field(default_factory=dict)
+    # matched tokens an instance holds ONLY in its host-offload tier
+    # (demoted KV): reusable at restore_time(len) instead of recompute.
+    # Disjoint from per_instance_len (device caching wins the count).
+    per_instance_host_len: Dict[int, int] = field(default_factory=dict)
 
 
 class RadixTree:
@@ -123,8 +133,17 @@ class RadixTree:
         matched: List[RadixNode] = []
         i = 0
         per_inst: Dict[int, int] = {}
+        per_host: Dict[int, int] = {}
         last_node: Optional[RadixNode] = None
         last_matched = 0
+
+        def count(child: RadixNode, j: int) -> None:
+            for inst in child.instances:
+                per_inst[inst] = per_inst.get(inst, 0) + j
+            for inst in child.host_instances:
+                if inst not in child.instances:
+                    per_host[inst] = per_host.get(inst, 0) + j
+
         while i < len(tokens):
             child = node.children.get(tokens[i])
             if child is None:
@@ -140,8 +159,7 @@ class RadixTree:
             last_matched = j
             if j == len(span):
                 matched.append(child)
-                for inst in child.instances:
-                    per_inst[inst] = per_inst.get(inst, 0) + j
+                count(child, j)
                 if update_stats:
                     child.last_access = now
                 i += j
@@ -151,8 +169,7 @@ class RadixTree:
                         break
                 continue
             # partial match inside this child's span
-            for inst in child.instances:
-                per_inst[inst] = per_inst.get(inst, 0) + j
+            count(child, j)
             i += j
             break
         return MatchResult(
@@ -161,7 +178,49 @@ class RadixTree:
             last_node=last_node,
             last_node_matched=last_matched,
             per_instance_len=per_inst,
+            per_instance_host_len=per_host,
         )
+
+    def tiered_match(self, tokens: Sequence[int], instance: int,
+                     now: float = 0.0, update_stats: bool = False
+                     ) -> Tuple[MatchResult, int, int]:
+        """Match + the two reusable prefix lengths for ``instance``:
+
+        ``device_len`` — contiguous fully-matched prefix the instance
+        caches on device (forkable page aliases; eviction is leaf-first,
+        so device caching along a path is always a prefix of it);
+        ``host_len`` — tokens contiguously *extending* device_len that
+        the instance holds demoted in its host tier (restorable at
+        restore_time instead of recompute). Returns (match, device_len,
+        host_len)."""
+        m = self.match(tokens, now=now, update_stats=update_stats)
+        device_len = 0
+        host_len = 0
+        phase = "device"
+        for node in m.path:
+            span = len(node.tokens)
+            if phase == "device":
+                if instance in node.instances:
+                    device_len += span
+                    continue
+                phase = "host"
+            if instance in node.host_instances:
+                host_len += span
+            else:
+                phase = "done"
+                break
+        # partial match inside the deepest touched node: admission will
+        # split it at this boundary (insert), turning the partial span
+        # into a full node — so it is reusable and counts here too
+        if (phase != "done" and m.last_node is not None
+                and device_len + host_len < m.matched_len
+                and m.last_node_matched < len(m.last_node.tokens)):
+            part = m.last_node_matched
+            if phase == "device" and instance in m.last_node.instances:
+                device_len += part
+            elif instance in m.last_node.host_instances:
+                host_len += part
+        return m, device_len, host_len
 
     # ---- insertion ---------------------------------------------------------
 
@@ -217,6 +276,7 @@ class RadixTree:
         for c in tail.children.values():
             c.parent = tail
         tail.instances = set(node.instances)
+        tail.host_instances = set(node.host_instances)
         tail.hit_times = {k: deque(v) for k, v in node.hit_times.items()}
         tail.last_access = node.last_access
         tail.ref_count = node.ref_count
@@ -260,11 +320,13 @@ class RadixTree:
         node.hit_times.pop(instance, None)
 
     def drop_instance_everywhere(self, instance: int) -> int:
-        """Instance failure: remove it from every node. Returns #nodes touched."""
+        """Instance failure: remove it from every node — both tiers (its
+        host memory dies with it). Returns #nodes touched."""
         touched = 0
         for n in self.iter_nodes():
-            if instance in n.instances:
+            if instance in n.instances or instance in n.host_instances:
                 self.remove_instance(n, instance)
+                n.host_instances.discard(instance)
                 touched += 1
         return touched
 
@@ -277,6 +339,7 @@ class RadixTree:
         removed = 0
         while (node is not None and node.parent is not None
                and node.is_leaf() and not node.instances
+               and not node.host_instances
                and node.ref_count == 0
                and self.hits_in_window(node, now) == 0):
             parent = node.parent
@@ -294,7 +357,8 @@ class RadixTree:
         while changed:
             changed = False
             for n in list(self.iter_nodes()):
-                if (n.is_leaf() and not n.instances and n.ref_count == 0
+                if (n.is_leaf() and not n.instances and not n.host_instances
+                        and n.ref_count == 0
                         and self.hits_in_window(n, now) == 0 and n.parent is not None):
                     del n.parent.children[n.tokens[0]]
                     self._by_id.pop(n.node_id, None)

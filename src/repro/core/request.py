@@ -31,6 +31,8 @@ class Request:
     state: RequestState = RequestState.QUEUED_GLOBAL
     instance: Optional[int] = None
     cached_len: int = 0                     # prefix tokens found cached
+    device_cached_len: int = 0              # ... of which device-resident
+    restored_len: int = 0                   # host-tier tokens restored
     prefill_done: int = 0                   # prompt tokens prefilled so far
     output_tokens: List[int] = field(default_factory=list)
     # timeline

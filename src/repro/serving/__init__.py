@@ -2,9 +2,11 @@
 and the discrete-event cluster simulator."""
 
 from .kv_cache import PagedKVPool, PageTable
+from .kv_offload import HostKVStore, PagedHostTier
 from .engine import Engine, EngineConfig
 from .cluster import ClusterRuntime
 from .simulator import SimConfig, Simulator, simulate
 
-__all__ = ["PagedKVPool", "PageTable", "Engine", "EngineConfig",
-           "ClusterRuntime", "SimConfig", "Simulator", "simulate"]
+__all__ = ["PagedKVPool", "PageTable", "HostKVStore", "PagedHostTier",
+           "Engine", "EngineConfig", "ClusterRuntime", "SimConfig",
+           "Simulator", "simulate"]

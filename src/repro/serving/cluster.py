@@ -34,20 +34,29 @@ class ClusterRuntime:
                  cost_model: Optional[CostModel] = None,
                  policy: str = "e2"):
         self.policy = policy
+        base = engine_cfg or EngineConfig()
         self.gs = GlobalScheduler(
             num_instances=num_instances,
             cost_model=cost_model or cost_model_for("smollm-360m"),
             config=scheduler_cfg or GlobalSchedulerConfig(
-                capacity_tokens=(engine_cfg or EngineConfig()).capacity_tokens))
+                capacity_tokens=base.capacity_tokens,
+                host_capacity_tokens=base.host_capacity_tokens))
         self.engines: Dict[int, Engine] = {}
-        base = engine_cfg or EngineConfig()
         for i in range(num_instances):
             ec = dataclasses.replace(base, instance_id=i)
-            self.engines[i] = Engine(
-                model_cfg, params, ec,
-                on_evict=lambda inst, ids: self.gs.on_evictions(inst, ids))
+            self.engines[i] = Engine(model_cfg, params, ec,
+                                     on_evict=self._notify_evictions,
+                                     on_evict_rich=True)
         self._rr_next = 0
         self.finished: List[Request] = []
+
+    def _notify_evictions(self, inst: int, node_ids, demoted_ids=(),
+                          host_dropped_ids=()) -> None:
+        """Tiered eviction notification (4-arg rich protocol): the
+        engine reports which evicted nodes were demoted to its host
+        tier (still exploitable at restore cost) vs truly dropped."""
+        self.gs.on_evictions(inst, node_ids, demoted_ids=demoted_ids,
+                             host_dropped_ids=host_dropped_ids)
 
     # ---- request intake -------------------------------------------------
 
@@ -118,7 +127,11 @@ class ClusterRuntime:
         * live ``("req", id)`` pool tables exist only for live requests
           (finished/aborted ones were released);
         * eviction notifications kept every global cached-token gauge
-          non-negative.
+          non-negative;
+        * BOTH tiers reconcile: the host store's byte accounting equals
+          the scheduler's host-LRU token accounting entry-for-entry (no
+          KV leaked between the device pool and the host store), and
+          the host tier respects its capacity.
         """
         for i, eng in self.engines.items():
             if eng.failed:
@@ -133,9 +146,25 @@ class ClusterRuntime:
                     f"{req_tables - live_reqs}")
             assert eng.scheduler.used_tokens >= 0, (
                 f"instance {i}: negative scheduler token accounting")
+            if eng.host_store is not None:
+                sch = eng.scheduler
+                eng.host_store.check_invariants()
+                assert sch.host_used_tokens == eng.host_store.used_tokens, (
+                    f"instance {i}: host tier accounting diverged "
+                    f"(scheduler {sch.host_used_tokens} vs store "
+                    f"{eng.host_store.used_tokens})")
+                assert set(sch._host_lru) == set(eng.host_store.entries), (
+                    f"instance {i}: host tier entry sets diverged")
+                assert (sch.host_used_tokens
+                        <= sch.config.host_capacity_tokens), (
+                    f"instance {i}: host tier over capacity")
+                assert not eng._pending_restore, (
+                    f"instance {i}: unflushed restore stage")
         for i, inst in self.gs.instances.items():
             assert inst.cached_tokens >= 0, (
                 f"global gauge for instance {i} went negative")
+            assert inst.host_cached_tokens >= 0, (
+                f"global host gauge for instance {i} went negative")
 
     # ---- fault handling --------------------------------------------------------
 
@@ -153,8 +182,9 @@ class ClusterRuntime:
         inst = max(self.engines) + 1
         ec = dataclasses.replace(engine_cfg or EngineConfig(),
                                  instance_id=inst)
-        self.engines[inst] = Engine(
-            model_cfg, params, ec,
-            on_evict=lambda i, ids: self.gs.on_evictions(i, ids))
-        self.gs.add_instance(inst)
+        self.engines[inst] = Engine(model_cfg, params, ec,
+                                    on_evict=self._notify_evictions,
+                                    on_evict_rich=True)
+        self.gs.add_instance(inst,
+                             host_capacity_tokens=ec.host_capacity_tokens)
         return inst

@@ -28,6 +28,15 @@ Two data planes share the scheduling logic (DESIGN.md §2):
     concat/index per iteration. Kept as the equivalence oracle for the
     paged path and as the only path for snapshot-granularity archs.
 
+With ``EngineConfig.host_capacity_tokens > 0`` the paged plane grows a
+second memory tier (DESIGN.md §8): eviction DEMOTES node KV device->
+host (one batched gather per eviction plan into numpy spans keyed by
+radix node) instead of dropping it, and a later prefix hit RESTORES it
+into fresh pages — one batched scatter folded into the step's fused
+dispatch — instead of recomputing the prefill. The local scheduler
+owns the tier policy (host LRU + budget); serving/kv_offload.py holds
+the bytes and moves them.
+
 Reuse granularity (DESIGN.md §5):
   * attention KV      — token granularity (exact: KV depends only on the
                         token prefix; RoPE positions are absolute);
@@ -43,6 +52,7 @@ pjit'd ones from launch/serve.py; the scheduling logic is shared.
 from __future__ import annotations
 
 import dataclasses
+import inspect
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -54,6 +64,7 @@ from ..core.local_scheduler import Batch, LocalScheduler, LocalSchedulerConfig
 from ..core.request import Request, RequestState
 from ..models import zoo, transformer as T
 from .kv_cache import PagedKVPool
+from .kv_offload import HostKVStore, PagedHostTier
 
 Pytree = Any
 
@@ -85,6 +96,11 @@ class EngineConfig:
     # per-request prefill loop (kept as the fused plane's comparison
     # baseline in benchmarks/bench_engine.py). Ignored on dense.
     fused: Optional[bool] = None
+    # Host-offload tier budget in tokens (DESIGN.md §8). 0 disables the
+    # tier (eviction drops KV, the seed behavior). >0 — paged plane
+    # only — eviction demotes node KV device->host and a later prefix
+    # hit restores it into fresh pages instead of recomputing.
+    host_capacity_tokens: int = 0
 
 
 def _cache_zeros(specs: Pytree) -> Pytree:
@@ -107,7 +123,8 @@ def _bucket(n: int) -> int:
 
 class Engine:
     def __init__(self, cfg, params, econf: EngineConfig,
-                 on_evict: Optional[Callable] = None):
+                 on_evict: Optional[Callable] = None,
+                 on_evict_rich: Optional[bool] = None):
         # the demo engine serves full attention; SWA only changes
         # semantics beyond max_context, which the demo never reaches
         self.model_cfg = dataclasses.replace(cfg, sliding_window=0)
@@ -125,6 +142,9 @@ class Engine:
         if econf.fused and not self.paged:
             raise ValueError("fused ragged iterations require the paged "
                              "data plane")
+        if econf.host_capacity_tokens > 0 and not self.paged:
+            raise ValueError("the host-offload KV tier requires the paged "
+                             "data plane (dense state is not pageable)")
         self.scheduler = LocalScheduler(
             LocalSchedulerConfig(
                 instance_id=econf.instance_id,
@@ -133,9 +153,28 @@ class Engine:
                 max_batch_tokens=econf.max_batch_tokens,
                 max_batch_requests=econf.max_batch_requests,
                 priority_groups=econf.priority_groups,
-                fcfs=econf.fcfs),
+                fcfs=econf.fcfs,
+                host_capacity_tokens=econf.host_capacity_tokens),
             on_evict=self._on_evict)
         self._ext_evict = on_evict
+        # rich notification protocol: the callback also accepts
+        # demoted_ids= / host_dropped_ids= KEYWORDS (passed by name, so
+        # GlobalScheduler.on_evictions — whose third positional is
+        # `now` — can be wired directly), letting the global scheduler
+        # tell demoted-not-dead nodes from dropped ones. Detection is
+        # by parameter NAME; pass on_evict_rich explicitly for wrapped
+        # callables signature() cannot see through (misclassifying one
+        # as legacy silently discards tier information).
+        self._ext_evict_rich = bool(on_evict_rich)
+        if on_evict is not None and on_evict_rich is None:
+            try:
+                params = inspect.signature(on_evict).parameters
+                self._ext_evict_rich = (
+                    "demoted_ids" in params
+                    or any(p.kind is inspect.Parameter.VAR_KEYWORD
+                           for p in params.values()))
+            except (TypeError, ValueError):
+                pass
         # per-request live state: next input token (+ cache pytree when dense)
         self.live: Dict[int, Dict[str, Any]] = {}
         self.stats = {"reused_tokens": 0, "prefilled_tokens": 0,
@@ -143,8 +182,14 @@ class Engine:
                       "decode_batches": 0, "cache_concat_calls": 0,
                       "seed_aliased_pages": 0, "seed_copied_pages": 0,
                       "aborted": 0, "model_dispatches": 0,
-                      "fused_iterations": 0, "fused_padded_tokens": 0}
+                      "fused_iterations": 0, "fused_padded_tokens": 0,
+                      "demoted_tokens": 0, "restored_tokens": 0,
+                      "restore_failures": 0, "demote_dispatches": 0,
+                      "restore_dispatches": 0}
         self.failed = False
+        self.host_store: Optional[HostKVStore] = None
+        # restores staged by admissions, flushed once per step
+        self._pending_restore: List[Tuple[np.ndarray, np.ndarray, Any]] = []
         if self.paged:
             self._init_paged()
         else:
@@ -177,6 +222,21 @@ class Engine:
                                      donate_argnums=(0,))
         # keep node->page aliases aligned with radix node splits
         self.scheduler.tree.split_hooks.append(self._on_split)
+        # hierarchical KV tiering (DESIGN.md §8): the scheduler owns
+        # demote/drop policy, PagedHostTier moves the bytes, the store
+        # holds them; restores staged at admission are flushed as ONE
+        # scatter dispatch per step (batched into the fused iteration).
+        self._pending_restore = []
+        if self.econf.host_capacity_tokens > 0:
+            self.host_store = HostKVStore()
+            self.scheduler.host_tier = PagedHostTier(self, self.host_store)
+            self.scheduler.tree.split_hooks.append(self._on_split_host)
+            self._gather_pages_fn = jax.jit(
+                lambda pages, idx: jax.tree.map(lambda a: a[idx], pages))
+            self._scatter_tokens_fn = jax.jit(self._scatter_tokens_impl,
+                                              donate_argnums=(0,))
+        else:
+            self.host_store = None
 
     def _init_dense(self) -> None:
         self.pool = PagedKVPool(
@@ -219,6 +279,26 @@ class Engine:
         # pool leaves are [n_pages, PS, KH, D] (per layer; see
         # transformer.paged_cache_specs)
         return jax.tree.map(lambda a: a.at[dst].set(a[src]), pages)
+
+    def _scatter_tokens_impl(self, pages, pidx, sidx, data):
+        """Token-granular KV scatter (host-tier restore): write
+        data[t] into pages[pidx[t], sidx[t]] for every restored token.
+        Padding tokens carry pidx 0 — the reserved scratch page."""
+        return jax.tree.map(lambda a, d: a.at[pidx, sidx].set(d),
+                            pages, data)
+
+    def gather_pages_host(self, page_ids: List[int]) -> Any:
+        """Demote-side transfer: gather whole pages from the device
+        pool and land them on host as numpy — ONE bucketed device
+        gather + ONE device->host copy for an entire eviction plan.
+        Padding indices hit the scratch page and are sliced off."""
+        n = len(page_ids)
+        nb = _bucket(n)
+        idx = np.zeros(nb, np.int32)
+        idx[:n] = page_ids
+        gathered = self._gather_pages_fn(self.pages, jnp.asarray(idx))
+        self.stats["demote_dispatches"] += 1
+        return jax.tree.map(lambda a: np.asarray(a)[:n], gathered)
 
     # ---- host-side page bookkeeping ----------------------------------------
 
@@ -284,17 +364,32 @@ class Engine:
             self.pool.fork(key_h, key_t, d_tail)
         self.pool.trim(key_h, min(d_head, t.num_tokens))
 
+    def _on_split_host(self, head, tail) -> None:
+        """Split hook for the host tier: a demoted span crossing the
+        new node boundary is split between head and tail entries."""
+        if self.host_store is not None:
+            self.host_store.on_split(head, tail)
+
     # ---- eviction hook ------------------------------------------------------
 
     def _on_evict(self, instance_id: int, node_ids: List[int]) -> None:
-        if self.paged:
+        if self.paged and self.host_store is None:
             for nid in node_ids:
                 self.pool.release(("node", nid))
-        else:
+        elif not self.paged:
             for nid in node_ids:
                 self.kv_store.pop(nid, None)
+        # (offload engines: PagedHostTier.demote_many already released
+        # every node table — demoted KV went host-side, the rest died)
         if self._ext_evict is not None:
-            self._ext_evict(instance_id, node_ids)
+            if self._ext_evict_rich:
+                self._ext_evict(
+                    instance_id, node_ids,
+                    demoted_ids=list(self.scheduler.last_demoted_ids),
+                    host_dropped_ids=list(
+                        self.scheduler.last_host_dropped_ids))
+            else:
+                self._ext_evict(instance_id, node_ids)
 
     # ---- admission ----------------------------------------------------------
 
@@ -315,7 +410,11 @@ class Engine:
     def _admit_paged(self, r: Request, now: float) -> None:
         """Seed a request by ALIASING the matched prefix's pages: fork
         the deepest covering node sequence — refcount increments only,
-        zero KV device copies (DESIGN.md §4)."""
+        zero KV device copies (DESIGN.md §4). With the host tier, the
+        reusable prefix may extend past the aliased part through
+        demoted spans: those are RESTORED — fresh pages are allocated
+        and the host KV is staged for one batched scatter in this
+        step's fused dispatch — instead of recomputed."""
         # the match is always node-aligned here: _reserve already ran
         # tree.insert(r.tokens), which split any partially-matching
         # node at this prompt's boundary (splits are the only boundary
@@ -331,10 +430,29 @@ class Engine:
         # the model — that forward produces the first output token
         # (same rule as vLLM/SGLang: reuse cap = prompt_len - 1)
         reuse = min(best_len, r.prompt_len - 1)
+        # host-tier restore plan: demoted spans contiguously extending
+        # the aliased prefix (planned BEFORE _ensure_free, revalidated
+        # after — freeing room can cascade into host-capacity drops)
+        restore_plan: List[Tuple[int, int, int]] = []
+        if self.host_store is not None and best_len == reuse:
+            restore_plan, _ = self._host_restore_chain(
+                m, reuse, r.prompt_len - 1)
         rid = ("req", r.request_id)
         need = r.prompt_len - reuse + r.max_new_tokens
         # + one page of headroom for the CoW of a shared partial tail
         self._ensure_free(need + self.pool.page_size)
+        restore_end = reuse
+        for nid, lo, hi in restore_plan:
+            e = self.host_store.get(nid)
+            if e is None or e.start > lo or e.start + e.length < hi:
+                # host entry evicted mid-flight (demote cascade of
+                # _ensure_free overflowed the host budget): fall back
+                # to recomputing the rest of the chain
+                self.stats["restore_failures"] += 1
+                break
+            restore_end = hi
+        restore_plan = [(nid, lo, min(hi, restore_end))
+                        for nid, lo, hi in restore_plan if lo < restore_end]
         if best_key is not None and reuse > 0:
             self.pool.fork(best_key, rid, reuse)
             self.stats["seed_aliased_pages"] += len(
@@ -347,15 +465,107 @@ class Engine:
         except MemoryError:
             self.pool.release(rid)    # don't leak the table: a retry
             raise                     # would trip pool.create's assert
-        # the scheduler reserved prompt - cached_len + max_new, but the
-        # engine may reuse fewer tokens (matched nodes whose pages were
-        # never stored / already evicted); surface the difference so
-        # admission gating sees the pool's true occupancy
-        if r.cached_len > reuse:
-            self.scheduler.used_tokens += r.cached_len - reuse
+        if restore_end > reuse:
+            self._stage_restore(r, rid, reuse, restore_end, restore_plan)
+        # the scheduler reserved prompt - device_cached_len + max_new,
+        # but the engine may alias a different prefix length (matched
+        # nodes whose pages were never stored / already evicted / more
+        # coverage than the plan assumed); surface the difference so
+        # admission gating sees the pool's true occupancy. Restored
+        # tokens occupy fresh pages, so only the ALIASED length offsets
+        # the reservation.
+        delta = r.device_cached_len - reuse
+        if delta:
+            self.scheduler.used_tokens = max(
+                self.scheduler.used_tokens + delta, 0)
+        # everything beyond the aliased prefix is this request's private
+        # pool usage until _store_prefix publishes spans to node aliases
+        # (credit_stored); the unpublished rest is refunded at release
+        self.scheduler.set_account(r.request_id, need)
         self.live[r.request_id] = {"next": None}
-        r.prefill_done = reuse
-        self.stats["reused_tokens"] += reuse
+        r.prefill_done = restore_end
+        self.stats["reused_tokens"] += restore_end
+
+    def _host_restore_chain(self, m, boundary: int, limit: int
+                            ) -> Tuple[List[Tuple[int, int, int]], int]:
+        """Walk the match path past the device-aliased ``boundary`` and
+        chain host entries that contiguously extend it, stopping at the
+        first hole or ``limit`` (= prompt_len - 1, the reuse cap).
+        Returns ([(node_id, lo, hi)], new_boundary) in absolute token
+        depths."""
+        plan: List[Tuple[int, int, int]] = []
+        cum = 0
+        for node in m.path:
+            node_start = cum
+            cum += len(node.tokens)
+            if cum <= boundary:
+                continue
+            if node_start != boundary or boundary >= limit:
+                break
+            e = self.host_store.get(node.node_id)
+            if e is None or e.start != node_start:
+                break
+            take = min(e.length, limit - boundary)
+            if take <= 0:
+                break
+            plan.append((node.node_id, node_start, node_start + take))
+            boundary = node_start + take
+            if boundary < cum:        # partial span ends the chain
+                break
+        return plan, boundary
+
+    def _stage_restore(self, r: Request, rid, lo: int, hi: int,
+                       plan: List[Tuple[int, int, int]]) -> None:
+        """Stage the host->device scatter for tokens [lo, hi) of the
+        request's sequence: map each restored token onto its (page,
+        slot) in the request's freshly appended table and queue the
+        host KV; ``_flush_restores`` runs ONE scatter dispatch per step
+        for all admissions (batched into the fused iteration)."""
+        table = self.pool.tables[rid]
+        ps = self.pool.page_size
+        toks = np.arange(lo, hi)
+        pages_arr = np.asarray(table.pages, np.int32)
+        pidx = pages_arr[toks // ps]
+        sidx = (toks % ps).astype(np.int32)
+        chunks = [self.host_store.get(nid).slice(a, b)
+                  for nid, a, b in plan]
+        data = (chunks[0] if len(chunks) == 1
+                else jax.tree.map(lambda *xs: np.concatenate(xs, 0),
+                                  *chunks))
+        self._pending_restore.append((pidx, sidx, data))
+        for nid, _, _ in plan:
+            self.scheduler.touch_host(nid)
+        self.stats["restored_tokens"] += hi - lo
+
+    def _flush_restores(self) -> None:
+        """Apply every restore staged by this step's admissions as ONE
+        donated, bucketed scatter dispatch; padding lanes target the
+        reserved scratch page."""
+        staged, self._pending_restore = self._pending_restore, []
+        if not staged:
+            return
+        pidx = np.concatenate([s[0] for s in staged])
+        sidx = np.concatenate([s[1] for s in staged])
+        n = len(pidx)
+        nb = _bucket(n)
+        pp = np.zeros(nb, np.int32)
+        pp[:n] = pidx
+        ss = np.zeros(nb, np.int32)
+        ss[:n] = sidx
+
+        def cat(*leaves):
+            x = (leaves[0] if len(leaves) == 1
+                 else np.concatenate(leaves, axis=0))
+            if nb > n:
+                x = np.concatenate(
+                    [x, np.zeros((nb - n,) + x.shape[1:], x.dtype)], axis=0)
+            return x
+
+        data = jax.tree.map(cat, *[s[2] for s in staged])
+        self.pages = self._scatter_tokens_fn(
+            self.pages, jnp.asarray(pp), jnp.asarray(ss),
+            jax.tree.map(jnp.asarray, data))
+        self.stats["restore_dispatches"] += 1
 
     def _admit_dense(self, r: Request, now: float) -> None:
         cache = _cache_zeros(self._cache_spec)
@@ -371,6 +581,16 @@ class Engine:
             self.pool.create(r.request_id)
             self.pool.append(r.request_id,
                              r.prompt_len - reuse + r.max_new_tokens)
+        # attention stacks publish per-node slabs in _store_prefix
+        # (credit_stored); recurrent stacks publish nothing per node —
+        # their inserted tree nodes stay marked and are refunded by
+        # eviction, so only the outputs die with the request (refunding
+        # the prompt part too would double-count with that eviction)
+        self.scheduler.set_account(
+            r.request_id,
+            r.max_new_tokens if self.has_recurrent
+            else max(r.prompt_len - r.device_cached_len, 0)
+            + r.max_new_tokens)
         self.live[r.request_id] = {"cache": cache, "next": None}
         r.prefill_done = reuse
         self.stats["reused_tokens"] += reuse
@@ -455,6 +675,9 @@ class Engine:
             # alias the request's pages per radix node: each node's
             # sequence covers the full root->node token path, so any
             # later match can fork from the deepest covering node.
+            # Publishing a span moves its tokens from the request's
+            # private account to the prefix store (eviction refunds
+            # them later; release no longer does).
             rid = ("req", r.request_id)
             if rid not in self.pool.tables:
                 return
@@ -464,6 +687,8 @@ class Engine:
                 key = ("node", node.node_id)
                 if key not in self.pool.tables:
                     self.pool.fork(rid, key, off)
+                    self.scheduler.credit_stored(r.request_id,
+                                                 len(node.tokens))
             return
         if not self.has_recurrent:
             cache = self.live[r.request_id]["cache"]
@@ -480,6 +705,7 @@ class Engine:
                                  c[name].shape[3], c[name].shape[4]))
                             for name in ("k", "v") if name in c}
                     self.kv_store[node.node_id] = slab
+                    self.scheduler.credit_stored(r.request_id, span)
                 off += span
         # (recurrent archs snapshot mid-prefill at prompt_len - 1 —
         # see _snapshot_full_cache; nothing to store here)
@@ -506,6 +732,11 @@ class Engine:
         if aborted:
             batch.items = [it for it in batch.items
                            if it.request not in aborted]
+
+        # host-tier restores staged by this step's admissions land as
+        # one batched scatter BEFORE the model reads any lane KV
+        if self._pending_restore:
+            self._flush_restores()
 
         has_prefill = any(it.chunk_tokens > 0
                           for it in batch.prefill_items())

@@ -1,0 +1,212 @@
+"""Hierarchical KV tiering — the host-memory offload tier (DESIGN.md §8).
+
+Device HBM is tier 0 (the paged pool); this module adds tier 1: plain
+host RAM holding *demoted* KV. Under memory pressure the local
+scheduler's eviction no longer drops a radix node's KV — it demotes it:
+the node's pages are gathered device->host in ONE batched transfer and
+parked here, indexed by radix node id at token granularity. A later
+cache hit on a demoted prefix restores it host->device into freshly
+allocated pages (one batched scatter folded into the engine's fused
+step) instead of recomputing the prefill — a bandwidth-bound DMA versus
+a compute-bound recompute (CostModel.restore_time vs prefill_time).
+
+Split of responsibilities:
+
+  * ``LocalScheduler`` owns the tier POLICY: which nodes are
+    host-resident, their LRU order, and the host token budget
+    (``LocalSchedulerConfig.host_capacity_tokens``).
+  * ``HostKVStore`` (here) owns the BYTES: numpy KV spans keyed by node
+    id, mirroring the page-pool pytree structure per layer. It has no
+    eviction logic of its own — single-authority capacity lives with
+    the scheduler, so the two can be reconciled exactly
+    (``ClusterRuntime.check_invariants``).
+  * ``PagedHostTier`` (here) is the DATA MOVER the scheduler drives:
+    ``demote_many`` gathers page KV for a whole eviction plan in one
+    bucketed device gather + one host transfer, then releases the
+    pages; ``drop`` frees host bytes. The engine provides the device
+    side (pool, pages pytree, jitted gather).
+
+Entries are TOKEN-granular (arrays of shape [span, KH, D] per layer
+leaf), so demote/restore boundaries are independent of page alignment;
+the engine's restore scatter maps tokens back onto (page, slot) pairs
+of the destination request's table.
+
+All numpy buffers are C-contiguous host arrays ("pinned" in the TPU
+runtime sense: jax device_get lands them in transfer-friendly memory);
+the KV round-trips bit-exactly, which tests/test_kv_offload.py checks
+against the dense oracle.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+Pytree = Any
+
+
+@dataclass
+class HostEntry:
+    """One demoted radix-node span: tokens [start, start+length) of the
+    node's root->node sequence, as host numpy arrays per layer leaf."""
+    node_id: int
+    start: int                       # absolute token depth of the span
+    kv: Pytree                       # {pj: {gg: {"k"/"v": np [L, KH, D]}}}
+    length: int = 0
+
+    def slice(self, lo: int, hi: int) -> Pytree:
+        """Token-subrange [lo, hi) of this span, in ABSOLUTE depth."""
+        a, b = lo - self.start, hi - self.start
+        assert 0 <= a <= b <= self.length, (lo, hi, self.start, self.length)
+        return _tree_map(lambda x: x[a:b], self.kv)
+
+
+def _tree_map(fn, tree: Pytree) -> Pytree:
+    if isinstance(tree, dict):
+        return {k: _tree_map(fn, v) for k, v in tree.items()}
+    return fn(tree)
+
+
+def tree_leaves(tree: Pytree, prefix: Tuple = ()) -> List[Tuple[Tuple, Any]]:
+    if isinstance(tree, dict):
+        out = []
+        for k in tree:
+            out.extend(tree_leaves(tree[k], prefix + (k,)))
+        return out
+    return [(prefix, tree)]
+
+
+class HostKVStore:
+    """Host-RAM byte store for demoted KV. Capacity is enforced by the
+    LocalScheduler (single authority); the store only tracks usage so
+    the two layers can be reconciled."""
+
+    def __init__(self):
+        self.entries: Dict[int, HostEntry] = {}
+        self.used_tokens = 0
+        self.stats = {"puts": 0, "drops": 0, "splits": 0}
+
+    def __contains__(self, node_id: int) -> bool:
+        return node_id in self.entries
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    def put(self, node_id: int, start: int, kv: Pytree, length: int) -> None:
+        assert node_id not in self.entries, f"node {node_id} already demoted"
+        self.entries[node_id] = HostEntry(node_id, start, kv, length)
+        self.used_tokens += length
+        self.stats["puts"] += 1
+
+    def get(self, node_id: int) -> Optional[HostEntry]:
+        return self.entries.get(node_id)
+
+    def drop(self, node_id: int) -> int:
+        e = self.entries.pop(node_id, None)
+        if e is None:
+            return 0
+        self.used_tokens -= e.length
+        self.stats["drops"] += 1
+        return e.length
+
+    def clear(self) -> None:
+        self.entries.clear()
+        self.used_tokens = 0
+
+    def on_split(self, head, tail) -> None:
+        """Radix-node split hook: the head keeps its node id but now
+        spans fewer tokens; any demoted span crossing the new boundary
+        is split so each entry again covers exactly (a prefix of) its
+        node's span — numpy slicing, no device traffic."""
+        e = self.entries.get(head.node_id)
+        if e is None:
+            return
+        boundary = head.depth_tokens()           # absolute, post-split
+        keep = boundary - e.start
+        if keep >= e.length:
+            return                               # span ends before the cut
+        tail_kv = _tree_map(lambda x: x[keep:], e.kv)
+        e.kv = _tree_map(lambda x: x[:keep], e.kv)
+        tail_len, e.length = e.length - keep, keep
+        self.entries[tail.node_id] = HostEntry(
+            tail.node_id, boundary, tail_kv, tail_len)
+        self.stats["splits"] += 1
+
+    def check_invariants(self) -> None:
+        total = 0
+        for nid, e in self.entries.items():
+            assert e.node_id == nid
+            assert e.length >= 0 and e.start >= 0
+            for _, leaf in tree_leaves(e.kv):
+                assert isinstance(leaf, np.ndarray), "host tier must hold numpy"
+                assert leaf.shape[0] == e.length, (leaf.shape, e.length)
+            total += e.length
+        assert total == self.used_tokens, (total, self.used_tokens)
+
+
+class PagedHostTier:
+    """Data mover between an Engine's paged device plane and a
+    HostKVStore. The LocalScheduler calls ``demote_many`` with the
+    eviction plan's nodes and ``drop`` on host-capacity overflow."""
+
+    def __init__(self, engine, store: HostKVStore):
+        self.engine = engine
+        self.store = store
+
+    # ---- demote: device -> host -------------------------------------------
+
+    def demote_many(self, nodes: Sequence) -> Dict[int, int]:
+        """Demote every node in an eviction plan whose KV is actually
+        materialized in the pool: ONE bucketed device gather over all
+        their pages, one device->host transfer, then per-node numpy
+        slicing into the store. Releases the nodes' pool tables either
+        way (the device tier is gone after eviction). Returns
+        {node_id: demoted_token_count} for the nodes now host-resident."""
+        eng, pool = self.engine, self.engine.pool
+        ps = pool.page_size
+        jobs: List[Tuple[Any, int, int, int, int]] = []
+        all_pages: List[int] = []
+        out: Dict[int, int] = {}
+        for node in nodes:
+            key = ("node", node.node_id)
+            t = pool.tables.get(key)
+            if t is None:
+                continue                       # KV never materialized
+            end = node.depth_tokens()
+            start = end - len(node.tokens)
+            cov = min(t.num_tokens, end)       # table may be trimmed
+            prev = self.store.get(node.node_id)
+            if prev is not None:
+                # re-demotion of a restored-then-evicted node: the host
+                # copy is still valid (KV is a pure function of the
+                # token prefix) — no new transfer needed.
+                out[node.node_id] = prev.length
+                pool.release(key)
+                continue
+            if cov > start:
+                p0, p1 = start // ps, -(-cov // ps)
+                jobs.append((node.node_id, start, cov,
+                             len(all_pages), p1 - p0))
+                all_pages.extend(t.pages[p0:p1])
+            pool.release(key)
+        if jobs:
+            gathered = eng.gather_pages_host(all_pages)  # numpy [N,PS,KH,D]
+            for nid, start, cov, ofs, npg in jobs:
+                base = (start // ps) * ps
+                span = _tree_map(
+                    lambda x: np.ascontiguousarray(
+                        x[ofs:ofs + npg].reshape((npg * ps,) + x.shape[2:])
+                        [start - base:cov - base]),
+                    gathered)
+                self.store.put(nid, start, span, cov - start)
+                out[nid] = cov - start
+            eng.stats["demoted_tokens"] += sum(
+                cov - start for _, start, cov, _, _ in jobs)
+        return out
+
+    # ---- drop: host entry dies --------------------------------------------
+
+    def drop(self, node_id: int) -> None:
+        self.store.drop(node_id)

@@ -23,7 +23,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from ..core.cost_model import CostModel, cost_model_for
 from ..core.global_scheduler import GlobalScheduler, GlobalSchedulerConfig
-from ..core.local_scheduler import LocalScheduler, LocalSchedulerConfig
+from ..core.local_scheduler import (AccountingHostTier, LocalScheduler,
+                                    LocalSchedulerConfig)
 from ..core.request import Request, RequestState
 
 
@@ -34,6 +35,10 @@ class SimConfig:
     model: str = "mistral-7b"
     chips_per_instance: int = 1
     capacity_tokens: int = 400_000      # KV capacity per instance
+    # host-offload tier per instance (0 = off): eviction demotes KV to
+    # host, re-hits restore at CostModel.restore_time instead of
+    # recomputing the prefill (hierarchical tiering, DESIGN.md §8)
+    host_capacity_tokens: int = 0
     chunk_size: int = 512
     max_batch_tokens: int = 4096
     max_batch_requests: int = 256
@@ -83,7 +88,8 @@ class Simulator:
         gs_cfg = GlobalSchedulerConfig(
             window=cfg.window, th_bal=cfg.th_bal,
             imbal_ratio=cfg.imbal_ratio,
-            capacity_tokens=cfg.capacity_tokens)
+            capacity_tokens=cfg.capacity_tokens,
+            host_capacity_tokens=cfg.host_capacity_tokens)
         if not cfg.enable_rebalance:
             gs_cfg.th_bal = 1e18
         if not cfg.enable_autoscale:
@@ -105,24 +111,42 @@ class Simulator:
                     max_batch_requests=cfg.max_batch_requests,
                     priority_groups=cfg.priority_groups,
                     fcfs=cfg.fcfs_local,
-                    window=cfg.window),
-                on_evict=lambda inst, ids: self.gs.on_evictions(inst, ids))
+                    window=cfg.window,
+                    host_capacity_tokens=cfg.host_capacity_tokens),
+                on_evict=self._notify_evictions,
+                host_tier=(AccountingHostTier()
+                           if cfg.host_capacity_tokens > 0 else None))
         self._busy: Dict[int, bool] = {i: False for i in self.locals}
         self._rr = itertools.cycle(range(cfg.num_instances))
         self._ctx_sum: Dict[int, float] = {i: 0.0 for i in self.locals}
         self._ctx_n: Dict[int, int] = {i: 0 for i in self.locals}
+
+    def _notify_evictions(self, inst: int, node_ids) -> None:
+        """Forward local evictions WITH the tier outcome (demoted vs
+        truly dropped), so E2 keeps pricing demoted prefixes as
+        restorable on that instance instead of writing them off."""
+        ls = self.locals[inst]
+        self.gs.on_evictions(inst, node_ids,
+                             demoted_ids=ls.last_demoted_ids,
+                             host_dropped_ids=ls.last_host_dropped_ids)
 
     # ---- service-time model ------------------------------------------------
 
     def _iter_time(self, inst: int, batch) -> float:
         # cache-aware prefill: only missed tokens burn compute — the first
         # chunk of a request skips its cached prefix (already accounted by
-        # LocalScheduler chunking from cached_len)
+        # LocalScheduler chunking from cached_len). Host-tier restores
+        # charge one bandwidth-bound DMA for the iteration's admissions
+        # (the engine batches them into a single scatter the same way).
         n_dec = sum(1 for it in batch.items if it.phase == "decode")
         avg_ctx = None
         if self._ctx_n[inst]:
             avg_ctx = self._ctx_sum[inst] / self._ctx_n[inst]
         t = self.cm.batch_time(batch.prefill_tokens, n_dec, avg_ctx)
+        restored = sum(it.restored_len for it in batch.items
+                       if it.phase == "prefill")
+        if restored:
+            t += self.cm.restore_time(restored)
         sf = self.cfg.speed_factors or {}
         return t * sf.get(inst, 1.0)
 
@@ -183,6 +207,19 @@ class Simulator:
         total_prompt = sum(r.prompt_len for r in finished)
         stats["cache_hit_frac"] = (reused / total_prompt
                                    if total_prompt else 0.0)
+        # per-tier counters (hierarchical KV tiering): how much KV was
+        # demoted instead of dropped, how much came back via restore,
+        # and the fraction of all prompt tokens served from the host
+        # tier — the ablation signal for offload-on vs -off runs.
+        for key in ("demoted_tokens", "restored_tokens",
+                    "host_dropped_tokens", "restore_hits",
+                    "evicted_tokens"):
+            stats[key] = float(sum(ls.stats[key] for ls
+                                   in self.locals.values()))
+        stats["restore_hit_frac"] = (stats["restored_tokens"] / total_prompt
+                                     if total_prompt else 0.0)
+        stats["host_used_tokens"] = float(sum(
+            ls.host_used_tokens for ls in self.locals.values()))
         return SimResult(finished, makespan=now, stats=stats)
 
 

@@ -1,0 +1,469 @@
+"""Hierarchical KV tiering (DESIGN.md §8): host-offload store unit
+tests, demote/restore token-exactness against the dense oracle under
+randomized capacity-pressure schedules (incl. CoW boundaries), restore
+failure fallback, admission under pool exhaustion with the tier on,
+two-tier reconciliation, tier-aware E2 costs, and the global
+cached-token gauge drift fix."""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.core import GlobalScheduler, GlobalSchedulerConfig
+from repro.core.request import Request, RequestState
+from repro.models import zoo
+from repro.serving.cluster import ClusterRuntime
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving.kv_offload import HostKVStore
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = dataclasses.replace(reduced(ARCHS["smollm-360m"]), n_layers=2,
+                              dtype="float32")
+    api = zoo.build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    return cfg, api, params
+
+
+def _econf(**kw):
+    base = dict(max_context=64, chunk_size=16, max_batch_tokens=64,
+                capacity_tokens=160, page_size=8, paged=True,
+                host_capacity_tokens=4096)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def _mk_requests(cfg, n, shared, tail=8, out=3, seed=2):
+    rng = np.random.default_rng(seed)
+    return [Request(tokens=tuple(shared)
+                    + tuple(rng.integers(1, cfg.vocab_size, tail).tolist()),
+                    max_new_tokens=out) for _ in range(n)]
+
+
+def _drain(eng, target, done, now, max_iters=3000):
+    for _ in range(max_iters):
+        if len(done) >= target:
+            return now
+        done += eng.step(now)
+        now += 0.01
+    raise RuntimeError("engine did not converge")
+
+
+def _pressure_schedule(cfg, eng, shared, seed):
+    """Warm the shared prefix, thrash it out of the device pool with
+    unique prompts, re-hit it (restore), and repeat — the randomized
+    demote/restore/CoW schedule of the acceptance criteria."""
+    rng = np.random.default_rng(seed)
+    now, done, n_target = 0.0, [], 0
+    for wave in range(3):
+        hits = _mk_requests(cfg, 2 + wave % 2, shared,
+                            tail=int(rng.integers(5, 10)),
+                            out=int(rng.integers(2, 4)),
+                            seed=seed + 10 * wave)
+        for r in hits:
+            eng.scheduler.enqueue(r, now)
+        n_target += len(hits)
+        now = _drain(eng, n_target, done, now)
+        for i in range(4):
+            plen = int(rng.integers(35, 50))
+            r = Request(tokens=tuple(
+                np.random.default_rng(1000 * seed + 10 * wave + i)
+                .integers(1, cfg.vocab_size, plen).tolist()),
+                max_new_tokens=2)
+            eng.scheduler.enqueue(r, now)
+            n_target += 1
+            now = _drain(eng, n_target, done, now)
+    return done
+
+
+# ---------------------------------------------------------------------------
+# HostKVStore unit behavior
+# ---------------------------------------------------------------------------
+
+def test_host_store_roundtrip():
+    st = HostKVStore()
+    kv = {"p0": {"g0": {"k": np.arange(12, dtype=np.float32).reshape(3, 2, 2),
+                        "v": np.ones((3, 2, 2), np.float32)}}}
+    st.put(7, start=16, kv=kv, length=3)
+    assert 7 in st and st.used_tokens == 3
+    e = st.get(7)
+    sl = e.slice(17, 19)
+    np.testing.assert_array_equal(sl["p0"]["g0"]["k"],
+                                  kv["p0"]["g0"]["k"][1:3])
+    st.check_invariants()
+    assert st.drop(7) == 3
+    assert st.used_tokens == 0 and st.get(7) is None
+    st.check_invariants()
+
+
+def test_host_store_split_follows_radix_split():
+    """A node split must split the demoted span so each entry again
+    covers exactly its node's tokens — numpy slicing, bit-identical."""
+    from repro.core.radix_tree import RadixTree
+    tree = RadixTree()
+    st = HostKVStore()
+    tree.split_hooks.append(st.on_split)
+    node = tree.insert(range(10))[0]
+    kv = {"p0": {"g0": {"k": np.arange(10, dtype=np.float32)[:, None, None]}}}
+    st.put(node.node_id, start=0, kv=kv, length=10)
+    tree.insert([0, 1, 2, 3, 99])           # splits node at 4
+    tail = node.children[4]
+    head_e, tail_e = st.get(node.node_id), st.get(tail.node_id)
+    assert head_e.length == 4 and head_e.start == 0
+    assert tail_e.length == 6 and tail_e.start == 4
+    np.testing.assert_array_equal(
+        tail_e.kv["p0"]["g0"]["k"][:, 0, 0], np.arange(4, 10))
+    assert st.used_tokens == 10
+    st.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# engine demote/restore: token-exactness vs the dense oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shared_len,seed", [(32, 1), (29, 2), (32, 3)])
+def test_offload_matches_dense_oracle(small_model, shared_len, seed):
+    """Fused paged plane WITH the host tier vs the dense reference:
+    outputs must be token-identical across randomized demote/restore
+    schedules, including CoW (unaligned) reuse boundaries."""
+    cfg, api, params = small_model
+    shared = tuple(np.random.default_rng(seed)
+                   .integers(1, cfg.vocab_size, shared_len).tolist())
+    outs = {}
+    for mode in ("dense", "offload"):
+        eng = Engine(cfg, params, _econf(
+            paged=(mode == "offload"),
+            host_capacity_tokens=(4096 if mode == "offload" else 0)))
+        done = _pressure_schedule(cfg, eng, shared, seed)
+        outs[mode] = {tuple(r.tokens): list(r.output_tokens) for r in done}
+        if mode == "offload":
+            assert eng.stats["demoted_tokens"] > 0, "pressure never demoted"
+            assert eng.stats["restored_tokens"] > 0, "re-hits never restored"
+            eng.pool.check_invariants()
+            eng.host_store.check_invariants()
+            assert (eng.scheduler.host_used_tokens
+                    == eng.host_store.used_tokens)
+            assert set(eng.scheduler._host_lru) == set(eng.host_store.entries)
+    assert outs["offload"] == outs["dense"], \
+        "host-tier restore diverged from the dense oracle"
+
+
+def test_restore_is_batched_not_per_token(small_model):
+    """All restores staged by one step's admissions flush as ONE
+    scatter dispatch."""
+    cfg, api, params = small_model
+    eng = Engine(cfg, params, _econf())
+    shared = tuple(np.random.default_rng(5)
+                   .integers(1, cfg.vocab_size, 32).tolist())
+    _pressure_schedule(cfg, eng, shared, 5)
+    assert eng.stats["restored_tokens"] > 0
+    assert eng.stats["restore_dispatches"] <= eng.stats["iterations"]
+    # a restore moves whole spans per dispatch, not single tokens
+    assert (eng.stats["restored_tokens"]
+            >= 8 * eng.stats["restore_dispatches"])
+
+
+def test_restore_failure_falls_back_to_recompute(small_model):
+    """Host entries dying mid-flight (demote cascade between restore
+    planning and page allocation) must degrade to recompute — same
+    tokens out, restore_failures counted, no wedge."""
+    cfg, api, params = small_model
+    shared = tuple(np.random.default_rng(7)
+                   .integers(1, cfg.vocab_size, 32).tolist())
+    outs = {}
+    for mode in ("dense", "sabotaged"):
+        eng = Engine(cfg, params, _econf(
+            paged=(mode == "sabotaged"),
+            host_capacity_tokens=(4096 if mode == "sabotaged" else 0)))
+        if mode == "sabotaged":
+            orig = eng._host_restore_chain
+
+            def chain_then_lose(m, boundary, limit, _orig=orig, _eng=eng):
+                # model a concurrent demote cascade blowing the host
+                # budget at the raciest point: every planned entry dies
+                # between restore planning and staging (_ensure_free
+                # runs in between and can host-drop in production)
+                plan, end = _orig(m, boundary, limit)
+                for nid, _, _ in plan:
+                    _eng.scheduler.drop_host(nid)
+                return plan, end
+
+            eng._host_restore_chain = chain_then_lose
+        done = _pressure_schedule(cfg, eng, shared, 7)
+        outs[mode] = {tuple(r.tokens): list(r.output_tokens) for r in done}
+        if mode == "sabotaged":
+            assert eng.stats["restore_failures"] > 0, \
+                "sabotage never hit a planned restore"
+            assert eng.stats["restored_tokens"] == 0
+            eng.pool.check_invariants()
+            eng.host_store.check_invariants()
+            assert (eng.scheduler.host_used_tokens
+                    == eng.host_store.used_tokens)
+    assert outs["sabotaged"] == outs["dense"], \
+        "restore-failure fallback diverged from the dense oracle"
+
+
+def test_oversized_abort_and_exhaustion_with_tier(small_model):
+    """Admission hardening with the tier ON: an oversized request still
+    aborts cleanly, pool exhaustion under unique traffic still serves
+    everything, and both tiers reconcile throughout."""
+    cfg, api, params = small_model
+    eng = Engine(cfg, params, _econf(capacity_tokens=200,
+                                     host_capacity_tokens=300))
+    big = Request(tokens=tuple(range(1, 70)), max_new_tokens=8)  # 77 > 64
+    eng.scheduler.enqueue(big, 0.0)
+    rng = np.random.default_rng(3)
+    reqs = [Request(tokens=tuple(rng.integers(1, cfg.vocab_size, 40)
+                                 .tolist()), max_new_tokens=3)
+            for _ in range(6)]
+    now, done = 0.0, []
+    for r in reqs:
+        eng.scheduler.enqueue(r, now)
+    for _ in range(800):
+        done += eng.step(now)
+        eng.pool.check_invariants()
+        eng.host_store.check_invariants()
+        assert eng.scheduler.host_used_tokens == eng.host_store.used_tokens
+        assert (eng.scheduler.host_used_tokens
+                <= eng.scheduler.config.host_capacity_tokens)
+        now += 0.01
+        if len(done) == len(reqs) + 1:
+            break
+    assert big.state is RequestState.FAILED
+    assert eng.stats["aborted"] == 1
+    assert len(done) == len(reqs) + 1, "requests starved under eviction"
+    assert eng.scheduler.stats["demoted_tokens"] > 0
+    # host capacity of 300 cannot hold all ~258 + prior tokens: LRU
+    # entries must have been truly dropped at some point or fit exactly
+    assert eng.scheduler.host_used_tokens <= 300
+
+
+def test_cluster_invariants_and_failover_with_tier(small_model):
+    """ClusterRuntime with offload engines: E2 placement + pressure +
+    instance failure; check_invariants reconciles pool, host store and
+    global gauges at every step."""
+    cfg, api, params = small_model
+    rt = ClusterRuntime(cfg, params, num_instances=2,
+                        engine_cfg=_econf(capacity_tokens=220,
+                                          host_capacity_tokens=2048))
+    rng = np.random.default_rng(11)
+    shared = tuple(rng.integers(1, cfg.vocab_size, 24).tolist())
+    reqs = []
+    for i in range(10):
+        if i % 2 == 0:
+            toks = shared + tuple(rng.integers(1, cfg.vocab_size, 8).tolist())
+        else:
+            toks = tuple(rng.integers(1, cfg.vocab_size, 40).tolist())
+        reqs.append(Request(tokens=toks, max_new_tokens=2,
+                            arrival_time=0.05 * i))
+    pending = sorted(reqs, key=lambda r: r.arrival_time)
+    now, i = 0.0, 0
+    failed_once = False
+    for _ in range(1500):
+        while i < len(pending) and pending[i].arrival_time <= now:
+            rt.submit(pending[i], now)
+            i += 1
+        rt.step(now)
+        rt.check_invariants()
+        if not failed_once and len(rt.finished) >= 4:
+            rt.fail_instance(0, now)
+            failed_once = True
+        now += 0.01
+        if len(rt.finished) == len(reqs):
+            break
+    assert len(rt.finished) == len(reqs)
+    stats = rt.engine_stats()
+    assert any(s["demoted_tokens"] > 0 for s in stats.values())
+
+
+# ---------------------------------------------------------------------------
+# tier-aware E2 + gauge drift fix
+# ---------------------------------------------------------------------------
+
+def _gs(n=2, **kw):
+    base = dict(th_bal=1e9, capacity_tokens=100_000,
+                host_capacity_tokens=1_000_000)
+    base.update(kw)
+    return GlobalScheduler(num_instances=n,
+                           config=GlobalSchedulerConfig(**base))
+
+
+def test_e2_exploits_demoted_prefix_via_restore():
+    """A demoted (host-tier) prefix is still an exploit target: restore
+    beats recompute-elsewhere, and the decision survives the device
+    eviction notification because the node was demoted, not dropped."""
+    gs = _gs()
+    prefix = list(range(4000))
+    d0 = gs.schedule(Request(tokens=tuple(prefix + [1]),
+                             max_new_tokens=4), now=0.0)
+    nids = [n.node_id for n in gs.tree.nodes_cached_on(d0.instance)]
+    gs.on_evictions(d0.instance, nids, now=0.1, demoted_ids=nids)
+    inst = gs.instances[d0.instance]
+    assert inst.host_cached_tokens > 0
+    m = gs.tree.match(tuple(prefix + [2]), now=0.2)
+    assert m.per_instance_host_len.get(d0.instance, 0) >= 4000
+    d1 = gs.schedule(Request(tokens=tuple(prefix + [2]),
+                             max_new_tokens=4), now=0.2)
+    assert d1.mode == "exploit"
+    assert d1.instance == d0.instance
+    # restore is priced: cheaper than a full recompute, dearer than free
+    cm = gs.cost_model
+    assert 0 < cm.restore_time(4000) < cm.prefill_time(4000)
+
+
+def test_e2_host_dropped_prefix_is_gone():
+    """host_dropped notification truly kills the prefix: next request
+    explores instead of exploiting a ghost."""
+    gs = _gs()
+    prefix = list(range(3000))
+    d0 = gs.schedule(Request(tokens=tuple(prefix + [1]),
+                             max_new_tokens=4), now=0.0)
+    nids = [n.node_id for n in gs.tree.nodes_cached_on(d0.instance)]
+    gs.on_evictions(d0.instance, nids, now=0.1, demoted_ids=nids)
+    gs.on_evictions(d0.instance, [], now=0.2, host_dropped_ids=nids)
+    assert gs.instances[d0.instance].host_cached_tokens == 0
+    m = gs.tree.match(tuple(prefix + [2]), now=0.3)
+    assert m.per_instance_host_len.get(d0.instance, 0) == 0
+    assert m.per_instance_len.get(d0.instance, 0) == 0
+
+
+def test_reserve_rechecks_host_chain_after_eviction_cascade():
+    """A reservation whose own eviction demotes enough KV to overflow
+    the host budget — dropping the very entries it matched — must not
+    book a restore for vanished KV (the simulator would otherwise
+    charge restore_time for a full recompute)."""
+    from repro.core import (AccountingHostTier, LocalScheduler,
+                            LocalSchedulerConfig)
+    ls = LocalScheduler(
+        LocalSchedulerConfig(instance_id=0, capacity_tokens=1000,
+                             chunk_size=4096, max_batch_tokens=8192,
+                             host_capacity_tokens=1200),
+        host_tier=AccountingHostTier())
+    A = tuple(range(10_000, 10_800))
+    B = tuple(range(20_000, 20_900))
+
+    def serve(tokens):
+        r = Request(tokens=tokens, max_new_tokens=2)
+        ls.enqueue(r, 0.0)
+        done, now = [], 0.0
+        while not done:
+            now += 0.01
+            done = ls.complete_iteration(ls.form_batch(now), now)
+        return r
+
+    serve(A + (1,))
+    serve(B + (2,))                      # evicts+demotes A (host: 800)
+    assert any(t >= 800 for t in ls._host_lru.values())
+    rehit = Request(tokens=A + (3,), max_new_tokens=2)
+    ls.enqueue(rehit, 10.0)
+    ls.form_batch(10.01)                 # reserve: demotes B -> drops A
+    assert ls.host_used_tokens <= 1200
+    # A's entry was host-dropped by the cascade: nothing restorable
+    a_alive = any(t >= 800 for t in ls._host_lru.values())
+    if not a_alive:
+        assert rehit.restored_len == 0, \
+            "booked a restore for a host entry the cascade dropped"
+
+
+def test_demote_and_host_drop_same_notification_prunes():
+    """A node demoted AND host-dropped in one notification (demote
+    cascade overflowing the host budget within one eviction plan) is
+    dead in both tiers and must be pruned, not leaked."""
+    gs = _gs()
+    prefix = list(range(2000))
+    d0 = gs.schedule(Request(tokens=tuple(prefix), max_new_tokens=4),
+                     now=0.0)
+    gs.tree.window = 0.0            # age out window-H hits
+    nids = [n.node_id for n in gs.tree.nodes_cached_on(d0.instance)]
+    gs.on_evictions(d0.instance, nids, now=1e9, demoted_ids=nids,
+                    host_dropped_ids=nids)
+    assert gs.tree.total_nodes() == 0, "dead dual-tier node leaked"
+    assert gs.instances[d0.instance].host_cached_tokens == 0
+
+
+def test_host_gauge_survives_restore_redemote_cycle():
+    """The host gauge mirrors host_instances marking: restore keeps the
+    entry resident (no subtract), re-demotion must not double-add, and
+    the eventual host drop zeroes it exactly."""
+    gs = _gs()
+    prefix = list(range(1500))
+    d0 = gs.schedule(Request(tokens=tuple(prefix + [1]),
+                             max_new_tokens=4), now=0.0)
+    inst = gs.instances[d0.instance]
+    nids = [n.node_id for n in gs.tree.nodes_cached_on(d0.instance)]
+    gs.on_evictions(d0.instance, nids, now=0.1, demoted_ids=nids)
+    first = inst.host_cached_tokens
+    assert first > 0
+    # restore (exploit re-hit) — entry stays resident host-side
+    gs.schedule(Request(tokens=tuple(prefix + [2]), max_new_tokens=4),
+                now=0.2)
+    assert inst.host_cached_tokens == first
+    # re-demotion of the restored nodes: no double count
+    nids2 = [n.node_id for n in gs.tree.nodes_cached_on(d0.instance)]
+    gs.on_evictions(d0.instance, nids2, now=0.3, demoted_ids=nids2)
+    assert inst.host_cached_tokens <= first + 10  # only new split tails
+    # final host drop zeroes the gauge without relying on the clamp
+    all_host = [n.node_id for n in gs.tree.iter_nodes()
+                if d0.instance in n.host_instances]
+    gs.on_evictions(d0.instance, [], now=0.4, host_dropped_ids=all_host)
+    assert inst.host_cached_tokens == 0
+
+
+def test_global_cached_gauge_accounts_unclamped():
+    """Gauge drift fix: additions accrue unclamped so eviction
+    subtractions (full node lengths) land on the right base; reads
+    clamp at capacity."""
+    gs = _gs(n=1, capacity_tokens=1000)
+    inst = gs.instances[0]
+    gs.schedule(Request(tokens=tuple(range(900)), max_new_tokens=4), 0.0)
+    gs.schedule(Request(tokens=tuple(range(5000, 5900)),
+                        max_new_tokens=4), 0.1)
+    # two 900-token explores: raw gauge 1800 (old code clamped at 1000)
+    assert inst.cached_tokens == 1800
+    assert inst.device_cached_est() == 1000
+    nids = [n.node_id for n in gs.tree.nodes_cached_on(0)
+            if n.tokens[0] == 0]
+    gs.on_evictions(0, nids, now=0.2)
+    # subtracting the evicted 900 leaves the OTHER prompt's 900 intact
+    # (the old clamped gauge would understate this as 100)
+    assert inst.cached_tokens == 900
+
+
+def test_simulator_surfaces_tier_counters():
+    """SimResult reports per-tier counters, and a capacity-pressured
+    run with the tier on actually restores."""
+    from repro.serving.simulator import simulate
+
+    def mk_reqs():
+        rng = np.random.default_rng(0)
+        prefixes = [tuple(rng.integers(1, 50000, 3000).tolist())
+                    for _ in range(6)]
+        reqs, t = [], 0.0
+        for _round in range(3):
+            for pref in prefixes:
+                reqs.append(Request(
+                    tokens=pref + tuple(rng.integers(1, 50000, 40).tolist()),
+                    max_new_tokens=8, arrival_time=t))
+                # spaced so each round is SERVED before the next prefix
+                # thrashes it out of the small device pool — the rehit
+                # then finds the prefix demoted, not device-resident
+                t += 1.0
+        return reqs
+
+    res = simulate(mk_reqs(), num_instances=2, capacity_tokens=5000,
+                   host_capacity_tokens=40_000)
+    s = res.summary()
+    for key in ("demoted_tokens", "restored_tokens", "restore_hit_frac",
+                "cache_hit_frac"):
+        assert key in s
+    assert s["demoted_tokens"] > 0
+    assert s["restored_tokens"] > 0
+    assert s["restore_hit_frac"] > 0
+    base = simulate(mk_reqs(), num_instances=2, capacity_tokens=5000,
+                    host_capacity_tokens=0).summary()
+    assert base["restored_tokens"] == 0
+    assert base["restore_hit_frac"] == 0

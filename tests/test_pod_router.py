@@ -55,3 +55,25 @@ def test_affinity_spills_when_pod_overloaded():
     pid2, _ = router.route(Request(tokens=head + (2,) * 30,
                                    max_new_tokens=8), now=1.0)
     assert pid2 != pid, "router should spill off an overloaded pod"
+
+
+def test_affinity_map_is_lru_bounded():
+    """Unique-prefix traffic must not grow the digest map without
+    limit; recent families keep their affinity, ancient ones age out
+    and simply re-resolve by load."""
+    pods = {p: GlobalScheduler(num_instances=2) for p in range(2)}
+    router = PodRouter(pods, affinity_cap=16)
+    hot = tuple(range(50, 130))
+    router.route(Request(tokens=hot + (1,) * 20, max_new_tokens=4), now=0.0)
+    for i in range(100):                      # 100 unique prefix heads
+        router.route(Request(tokens=tuple(range(10_000 + 500 * i,
+                                                10_000 + 500 * i + 80)),
+                             max_new_tokens=4), now=0.1 + 0.01 * i)
+        # keep the hot family warm so the LRU retains it
+        pid_hot, _ = router.route(
+            Request(tokens=hot + (2 + i,) * 20, max_new_tokens=4),
+            now=0.105 + 0.01 * i)
+    assert len(router._affinity) <= 16, "affinity map exceeded its cap"
+    assert router._digest(hot + (999,) * 20) == router._digest(hot + (0,) * 20)
+    assert router._digest(hot) in router._affinity, \
+        "hot family aged out despite constant traffic"
