@@ -22,8 +22,11 @@ test:
 bench-engine:
 	PYTHONPATH=src $(PY) -m benchmarks.bench_engine
 
-# tiny capacity-pressure bench (KV offload on vs off, DESIGN.md §8):
-# asserts the host tier restores under thrash and improves p99 — runs
-# in seconds, results land in results/bench/bench_offload.{csv,json}
+# tiny capacity-pressure + rebalance-under-load benches (DESIGN.md
+# §8/§9): assert the host tier restores under thrash and improves p99,
+# and that tier-to-tier migration beats drop-and-recompute when Th_bal
+# redirects a hot prefix — run in seconds, results land in
+# results/bench/bench_offload.{csv,json} + bench_migration.{csv,json}
 bench-smoke:
 	PYTHONPATH=src $(PY) -m benchmarks.bench_offload
+	PYTHONPATH=src $(PY) -m benchmarks.bench_migration

@@ -24,6 +24,8 @@ PEAK_FLOPS_BF16 = 197e12          # FLOP/s
 HBM_BW = 819e9                    # B/s
 ICI_BW_PER_LINK = 50e9            # B/s
 HOST_BW = 32e9                    # B/s host<->HBM DMA (PCIe-class link)
+DCN_BW = 25e9                     # B/s host<->host datacenter network
+                                  # (200 Gb/s NIC per serving host)
 
 
 @dataclass
@@ -33,10 +35,13 @@ class HardwareSpec:
     hbm_bw: float = HBM_BW
     ici_bw: float = ICI_BW_PER_LINK
     host_bw: float = HOST_BW        # KV offload restore bandwidth per chip
+    dcn_bw: float = DCN_BW          # host->host KV migration bandwidth
+                                    # (per instance — NIC, not per chip)
     chips_per_instance: int = 1     # TP degree of one model instance
     mfu_prefill: float = 0.55       # achievable fraction of peak in prefill
     mbu_decode: float = 0.70        # achievable fraction of HBM bw in decode
     dma_eff: float = 0.80           # achievable fraction of host_bw
+    dcn_eff: float = 0.70           # achievable fraction of dcn_bw
 
 
 @dataclass
@@ -77,6 +82,11 @@ class CostModel:
     # host->device KV restore (hierarchical tiering): bandwidth-bound
     restore_a: float = field(init=False)
     restore_b: float = 0.0005       # DMA launch / page-table fixup overhead
+    # host->host KV migration over DCN (tier-to-tier prefix migration):
+    # a demoted span ships to another instance's host tier, where the
+    # normal restore path materializes it on device
+    migrate_a: float = field(init=False)
+    migrate_b: float = 0.002        # RPC setup / span index exchange
     avg_context: float = 2048.0     # used for the KV-read term of decode
     # decode runs continuously batched: the weight read amortizes over
     # the co-resident decode tokens (matches the paper's profiled decode
@@ -102,6 +112,12 @@ class CostModel:
         self.restore_a = self.model.kv_bytes_per_token / (
             self.hw.host_bw * self.hw.dma_eff * chips
         )
+        # migration crosses ONE host NIC pair regardless of TP degree
+        # (host RAM is per host; the restore on the target then fans the
+        # span back out over the chips' host links)
+        self.migrate_a = self.model.kv_bytes_per_token / (
+            self.hw.dcn_bw * self.hw.dcn_eff
+        )
 
     # ---- the functions Algorithm 2 calls ------------------------------------
 
@@ -122,6 +138,15 @@ class CostModel:
         if host_tokens <= 0:
             return 0.0
         return self.restore_a * host_tokens + self.restore_b
+
+    def migrate_time(self, tokens: float) -> float:
+        """Seconds to ship ``tokens`` of demoted KV host->host over DCN
+        (tier-to-tier migration). The migrated span still pays
+        restore_time on the target when a request materializes it on
+        device — E2 prices migration as migrate + restore vs recompute."""
+        if tokens <= 0:
+            return 0.0
+        return self.migrate_a * tokens + self.migrate_b
 
     # ---- iteration-level batch time (simulator / engine pacing) -------------
 

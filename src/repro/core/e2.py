@@ -102,6 +102,22 @@ class InstanceState:
         return (self.decode_sec_sum / total) if total > 0 else 0.0
 
 
+@dataclass(frozen=True)
+class MigrationPlan:
+    """Tier-to-tier prefix migration rider on a schedule decision: ship
+    the demoted host-tier span tokens[lo:hi] of the request's prompt
+    from ``src``'s host tier to the chosen instance's host tier, where
+    the normal §8 restore path materializes it on device — priced at
+    migrate_time + restore_time against recomputing the prefill."""
+    src: int
+    lo: int                         # token range [lo, hi) of the prompt
+    hi: int
+
+    @property
+    def tokens(self) -> int:
+        return self.hi - self.lo
+
+
 @dataclass
 class ScheduleDecision:
     instance: int
@@ -110,21 +126,129 @@ class ScheduleDecision:
     missed_len: int
     cost: float = 0.0
     candidates: Dict[int, float] = field(default_factory=dict)
+    # set when the cheapest way to serve on ``instance`` includes
+    # pulling a remote host-tier span (the runtime executes it)
+    migration: Optional[MigrationPlan] = None
 
 
 # ---------------------------------------------------------------------------
 # Algorithm 2: LOADCOST(i, R_k)
 # ---------------------------------------------------------------------------
 
+def _phase_cost(cm: CostModel, missed: int, inst_host: int,
+                mig_tokens: int) -> Tuple[float, bool]:
+    """Prefill-phase cost of serving (missed, host-restorable) tokens,
+    optionally pulling ``mig_tokens`` of them from another instance's
+    host tier instead of recomputing: P = prefill(missed - m) +
+    restore(host + m) + migrate(m) when that beats plain
+    prefill(missed) + restore(host). Returns (cost, used_migration)."""
+    base = cm.prefill_time(missed) + cm.restore_time(inst_host)
+    if mig_tokens <= 0 or missed <= 0:
+        return base, False
+    m = min(mig_tokens, missed)
+    alt = (cm.prefill_time(missed - m) + cm.restore_time(inst_host + m)
+           + cm.migrate_time(m))
+    return (alt, True) if alt < base else (base, False)
+
+
+def coverage_boundary(match: MatchResult, inst_id: int) -> int:
+    """Contiguous node-aligned prefix ``inst_id`` can reuse without any
+    cross-instance transfer: device-cached nodes, then host-demoted
+    nodes extending them (the §8 restore-chain shape)."""
+    b = 0
+    phase = "device"
+    for node in match.path:
+        if phase == "device" and inst_id in node.instances:
+            b += len(node.tokens)
+            continue
+        phase = "host"
+        if inst_id in node.host_instances:
+            b += len(node.tokens)
+        else:
+            break
+    return b
+
+
+def plan_migration(tree: RadixTree, match: MatchResult, inst_id: int,
+                   instances: Dict[int, InstanceState], prompt_len: int,
+                   now: float) -> Optional[MigrationPlan]:
+    """Best tier-to-tier migration candidate for serving this request on
+    ``inst_id``: the longest chain of matched nodes that contiguously
+    extends inst_id's own reusable prefix AND is host-resident on one
+    other alive instance. Whole nodes only — span boundaries stay
+    node-aligned in every tree (split boundaries only refine), so the
+    shipped entries land restorable on the target. Returns None when
+    nothing is migratable or either side lacks a host tier."""
+    inst = instances.get(inst_id)
+    if inst is None or inst.host_capacity_tokens <= 0:
+        return None
+    lo = coverage_boundary(match, inst_id)
+    limit = prompt_len - 1           # reuse cap: last token always runs
+    if lo >= limit or not match.path:
+        return None
+    rest: List[Tuple[int, RadixNode]] = []
+    b = 0
+    for node in match.path:
+        if b >= lo:
+            rest.append((b, node))
+        b += len(node.tokens)
+    if not rest:
+        return None
+    best_src, best_hi = None, lo
+    for j in sorted(rest[0][1].host_instances):
+        s = instances.get(j)
+        if (j == inst_id or s is None or not s.alive
+                or s.host_capacity_tokens <= 0):
+            continue
+        hi = lo
+        for start, node in rest:
+            if start != hi or j not in node.host_instances:
+                break
+            if start + len(node.tokens) > limit:
+                break
+            if inst_id in node.host_instances:
+                # the target already holds this span (non-contiguously)
+                # in its own tier: its entry bridges the restore chain
+                # for free — shipping it would double-price the restore
+                # and move bytes ingest discards as already-resident
+                break
+            hi = start + len(node.tokens)
+        if hi > best_hi:
+            best_src, best_hi = j, hi
+    if best_src is None:
+        return None
+    return MigrationPlan(best_src, lo, best_hi)
+
+
+def attach_migration(inst: InstanceState, match: MatchResult,
+                     plan: Optional[MigrationPlan], prompt_len: int
+                     ) -> Optional[MigrationPlan]:
+    """``plan``, but only when migration actually undercuts recomputing
+    the span on ``inst`` — the single arbitration both the E2 candidate
+    loop and the post-assignment redirect paths use (keeping the
+    pricing from diverging between them)."""
+    if plan is None:
+        return None
+    inst_cached = match.per_instance_len.get(inst.instance_id, 0)
+    inst_host = match.per_instance_host_len.get(inst.instance_id, 0)
+    missed = max(prompt_len - inst_cached - inst_host, 0)
+    _, used = _phase_cost(inst.cost_model, missed, inst_host, plan.tokens)
+    return plan if used else None
+
+
 def load_cost(inst: InstanceState, tree: RadixTree, match: MatchResult,
-              prompt_len: int, now: float) -> float:
+              prompt_len: int, now: float,
+              migration: Optional[MigrationPlan] = None) -> float:
     """L_i + M_i + P_i for assigning the matched request to ``inst``.
 
     Tier-aware: tokens the instance holds only in its host-offload tier
     cost restore_time (a bandwidth-bound DMA), not a full recompute and
     not zero — so E2 correctly arbitrates restore-here vs recompute-here
     vs exploit-elsewhere. Restored tokens also re-occupy device pages,
-    so they count toward the eviction-pressure estimate M."""
+    so they count toward the eviction-pressure estimate M. With a
+    ``migration`` candidate, P additionally prices pulling that remote
+    host-tier span (migrate + restore) against recomputing it — device
+    occupancy (hence M) is identical either way."""
     cm = inst.cost_model
     # L_i — windowed history load (maintained incrementally; the paper's
     # Σ PREFILLTIME(missed_j) + DECODETIME(avg_out) is what add_work stored).
@@ -151,8 +275,10 @@ def load_cost(inst: InstanceState, tree: RadixTree, match: MatchResult,
             n_j = tree.hits_in_window(node, now, inst.instance_id) / total_req
             M += loss(len(node.tokens)) * n_j
 
-    # P_i — prefill of the truly-missed tokens + restore of the demoted.
-    P = cm.prefill_time(missed) + cm.restore_time(inst_host)
+    # P_i — prefill of the truly-missed tokens + restore of the demoted
+    # (+ the migrate-vs-recompute arbitration for the remote span).
+    P, _ = _phase_cost(cm, missed, inst_host,
+                       migration.tokens if migration is not None else 0)
 
     return L + (M + P) * inst.speed_factor
 
@@ -164,7 +290,8 @@ def load_cost(inst: InstanceState, tree: RadixTree, match: MatchResult,
 def e2_schedule(instances: Dict[int, InstanceState], tree: RadixTree,
                 match: MatchResult, prompt_len: int, now: float,
                 imbal_ratio: float = 0.85,
-                pd_min_load: float = 1.0) -> ScheduleDecision:
+                pd_min_load: float = 1.0,
+                enable_migration: bool = True) -> ScheduleDecision:
     """Pure E2 decision (no tree mutation): exploit vs explore.
 
     ``imbal_ratio``: ImbalR in Algorithm 1 — an instance whose windowed
@@ -172,6 +299,9 @@ def e2_schedule(instances: Dict[int, InstanceState], tree: RadixTree,
     (prefill-phase units) outright, as its MXU capacity is nearly idle.
     ``pd_min_load``: PD balancing only kicks in above this absolute load
     (an idle cluster is trivially "decode heavy" at ratio 0/0 edge cases).
+    ``enable_migration``: price tier-to-tier prefix migration per
+    candidate (migrate + restore vs recompute) and attach the winning
+    plan to the decision for the runtime to execute.
     """
     alive = {i: s for i, s in instances.items() if s.alive}
     if not alive:
@@ -179,6 +309,19 @@ def e2_schedule(instances: Dict[int, InstanceState], tree: RadixTree,
 
     cached_len = match.matched_len
     missed_len = prompt_len - cached_len
+
+    plans: Dict[int, Optional[MigrationPlan]] = {}
+
+    def mig_plan(i: int) -> Optional[MigrationPlan]:
+        if i not in plans:
+            plans[i] = (plan_migration(tree, match, i, instances,
+                                       prompt_len, now)
+                        if enable_migration else None)
+        return plans[i]
+
+    def attach(pick: int) -> Optional[MigrationPlan]:
+        return attach_migration(alive[pick], match, mig_plan(pick),
+                                prompt_len)
 
     if missed_len < cached_len and (match.per_instance_len
                                     or match.per_instance_host_len):
@@ -197,11 +340,13 @@ def e2_schedule(instances: Dict[int, InstanceState], tree: RadixTree,
         best_len = max(eff.values()) if eff else 0
         if best_len > 0:
             K = [i for i, l in eff.items() if l == best_len]
-            costs = {i: load_cost(alive[i], tree, match, prompt_len, now)
+            costs = {i: load_cost(alive[i], tree, match, prompt_len, now,
+                                  migration=mig_plan(i))
                      for i in K}
             pick = min(costs, key=costs.get)
             return ScheduleDecision(pick, "exploit", cached_len, missed_len,
-                                    costs[pick], costs)
+                                    costs[pick], costs,
+                                    migration=attach(pick))
         # matched prefix exists in tree but no alive instance caches it —
         # fall through to explore.
 
@@ -217,13 +362,15 @@ def e2_schedule(instances: Dict[int, InstanceState], tree: RadixTree,
         max_i = max(ratios, key=ratios.get)
         if ratios[max_i] > imbal_ratio:
             return ScheduleDecision(max_i, "pd_balance", cached_len,
-                                    missed_len, 0.0, ratios)
+                                    missed_len, 0.0, ratios,
+                                    migration=attach(max_i))
 
-    costs = {i: load_cost(s, tree, match, prompt_len, now)
+    costs = {i: load_cost(s, tree, match, prompt_len, now,
+                          migration=mig_plan(i))
              for i, s in alive.items()}
     pick = min(costs, key=costs.get)
     return ScheduleDecision(pick, "explore", cached_len, missed_len,
-                            costs[pick], costs)
+                            costs[pick], costs, migration=attach(pick))
 
 
 def subtree_load(tree: RadixTree, node: RadixNode, cm: CostModel,

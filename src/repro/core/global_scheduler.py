@@ -16,8 +16,10 @@ from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 from .cost_model import CostModel, cost_model_for
-from .e2 import InstanceState, ScheduleDecision, e2_schedule, load_cost, subtree_load
-from .radix_tree import MatchResult, RadixNode, RadixTree
+from .e2 import (InstanceState, MigrationPlan, ScheduleDecision,
+                 attach_migration, e2_schedule, load_cost, plan_migration,
+                 subtree_load)
+from .radix_tree import MatchResult, PrefixSpan, RadixNode, RadixTree
 from .request import Request
 
 
@@ -32,6 +34,10 @@ class GlobalSchedulerConfig:
     host_capacity_tokens: int = 0    # per-instance host-offload tier (0=off)
     rebalance_every: float = 1.0     # seconds between rebalance scans
     autoscale_every: float = 5.0     # seconds between autoscale scans
+    # Tier-to-tier prefix migration: price shipping a demoted host-tier
+    # span to the chosen instance (migrate + restore) against
+    # recomputing it, and attach the winning plan to the decision.
+    enable_migration: bool = True
 
 
 class GlobalScheduler:
@@ -49,7 +55,8 @@ class GlobalScheduler:
         self.decisions: List[ScheduleDecision] = []
         self.stats = {"exploit": 0, "explore": 0, "pd_balance": 0,
                       "rebalance": 0, "autoscale": 0, "scheduled": 0,
-                      "failures": 0}
+                      "failures": 0, "migrations_planned": 0,
+                      "migrated_tokens": 0}
         for i in range(num_instances):
             self.add_instance(i)
 
@@ -109,27 +116,36 @@ class GlobalScheduler:
         decision = e2_schedule(self.instances, self.tree, match,
                                request.prompt_len, now,
                                imbal_ratio=cfg.imbal_ratio,
-                               pd_min_load=cfg.pd_min_load)
+                               pd_min_load=cfg.pd_min_load,
+                               enable_migration=cfg.enable_migration)
 
         # Post-assignment adjustment 1 — load rebalancing: redirect exploit
-        # traffic from a flagged-heavy instance to its light partner.
+        # traffic from a flagged-heavy instance to its light partner. The
+        # redirect target gets its own migration plan: this is exactly
+        # the rebalance-under-load case where pulling the demoted span
+        # beats recomputing it on the light instance.
         if decision.mode == "exploit":
             tgt = self._redirects.get(decision.instance)
             if tgt is not None and self.instances[tgt].alive:
-                decision = ScheduleDecision(tgt, "rebalance",
-                                            decision.cached_len,
-                                            decision.missed_len)
+                decision = ScheduleDecision(
+                    tgt, "rebalance", decision.cached_len,
+                    decision.missed_len,
+                    migration=self._maybe_migration(match, tgt,
+                                                    request.prompt_len, now))
         # Post-assignment adjustment 2 — autoscaling: a hot prefix seeds a
         # replica on its designated target; once cached both copies are
-        # load-balanced by plain E2 exploit.
+        # load-balanced by plain E2 exploit. Seeding too prefers pulling
+        # the span over recomputing it when a host copy exists anywhere.
         if decision.mode == "exploit" and match.path:
             for node in match.path:
                 tgt = self._hot_nodes.pop(node.node_id, None)
                 if tgt is not None and self.instances[tgt].alive \
                         and tgt != decision.instance:
-                    decision = ScheduleDecision(tgt, "autoscale",
-                                                decision.cached_len,
-                                                decision.missed_len)
+                    decision = ScheduleDecision(
+                        tgt, "autoscale", decision.cached_len,
+                        decision.missed_len,
+                        migration=self._maybe_migration(
+                            match, tgt, request.prompt_len, now))
                     break
 
         self._commit(request, decision, match, now)
@@ -141,6 +157,18 @@ class GlobalScheduler:
         if now - self._last_autoscale >= cfg.autoscale_every:
             self.maybe_autoscale(now)
         return decision
+
+    def _maybe_migration(self, match: MatchResult, inst_id: int,
+                         prompt_len: int, now: float
+                         ) -> Optional[MigrationPlan]:
+        """Migration plan for a post-assignment target (rebalance /
+        autoscale redirect), attached only when it beats recompute."""
+        if not self.config.enable_migration:
+            return None
+        plan = plan_migration(self.tree, match, inst_id, self.instances,
+                              prompt_len, now)
+        return attach_migration(self.instances[inst_id], match, plan,
+                                prompt_len)
 
     def _commit(self, request: Request, decision: ScheduleDecision,
                 match: MatchResult, now: float) -> None:
@@ -155,11 +183,18 @@ class GlobalScheduler:
         # window-H load accounting (Alg. 2's L term source). Host-tier
         # hits charge the restore DMA, not a recompute (folded into the
         # prefill-phase term: both occupy the instance's prefill lane).
+        # A planned migration converts part of the missed prefill into
+        # migrate + restore work — the same arbitration load_cost priced.
         cm = inst.cost_model
         est_out = inst.avg_output_len(now, default=float(request.max_new_tokens))
-        inst.add_work(now,
-                      cm.prefill_time(missed) + cm.restore_time(inst_host),
-                      cm.decode_time(est_out))
+        mig = min(decision.migration.tokens, missed) \
+            if decision.migration is not None else 0
+        prefill_work = (cm.prefill_time(missed - mig)
+                        + cm.restore_time(inst_host + mig)
+                        + cm.migrate_time(mig))
+        if mig:
+            self.stats["migrations_planned"] += 1
+        inst.add_work(now, prefill_work, cm.decode_time(est_out))
         # Gauge is UNCLAMPED on write: eviction notifications subtract
         # full node lengths, so clamping additions here would make the
         # gauge understate long-lived instances (drift); readers clamp
@@ -188,30 +223,37 @@ class GlobalScheduler:
         inst.observe_output_len(now, len(request.output_tokens)
                                 or request.max_new_tokens)
 
-    def on_evictions(self, instance_id: int, node_ids: Sequence[int],
-                     now: float = 0.0, demoted_ids: Sequence[int] = (),
-                     host_dropped_ids: Sequence[int] = ()) -> None:
-        """Async eviction notification from a local scheduler (§3.3).
-        Node lookups go through the tree's node-id index and dead-node
-        cleanup is scoped to the touched parent chains — this path runs
-        once per local eviction batch and must not walk the whole forest.
+    def on_evictions(self, instance_id: int, evicted: Sequence[PrefixSpan],
+                     now: float = 0.0, *,
+                     demoted: Sequence[PrefixSpan] = (),
+                     host_dropped: Sequence[PrefixSpan] = ()) -> None:
+        """Async eviction notification from a local scheduler (§3.3) —
+        protocol v2 (DESIGN.md §9): every span is CONTENT-ADDRESSED
+        (path key of its end boundary + token length), so the sender's
+        node ids never appear on the wire and the forest resolves each
+        span to its OWN node chain via the path-key index, regardless of
+        how either tree split its nodes. Resolution + dead-node cleanup
+        stay scoped to the touched chains — this path runs once per
+        local eviction batch and must not walk the whole forest.
 
-        Tiered protocol: ``demoted_ids`` (a subset of ``node_ids``) left
-        the device but live on in the instance's host tier — they are
-        marked host-resident (keeping their hit history: the prefix is
-        still exploitable at restore cost) instead of removed.
-        ``host_dropped_ids`` fell out of the host tier too and are truly
-        gone. Plain calls (no tier kwargs) behave exactly as before."""
-        dem = set(demoted_ids)
-        hdrop = set(host_dropped_ids)
+        Tiered protocol: ``demoted`` (a subset of ``evicted``) left the
+        device but live on in the instance's host tier — their chains
+        are marked host-resident (keeping their hit history: the prefix
+        is still exploitable at restore cost) instead of removed.
+        ``host_dropped`` fell out of the host tier too and are truly
+        gone. Unresolvable spans (pruned here, or ambiguous under a
+        digest collision) degrade to a no-op."""
+        dem_keys = {s.key for s in demoted}
+        hdrop_keys = {s.key for s in host_dropped}
         inst = self.instances.get(instance_id)
         freed = 0
         demoted_toks = 0
-        for nid in node_ids:
-            node = self.tree.get_node(nid)
-            if node is not None and instance_id in node.instances:
+        for span in evicted:
+            for node in self.tree.resolve_span(span):
+                if instance_id not in node.instances:
+                    continue
                 freed += len(node.tokens)
-                if nid in dem:
+                if span.key in dem_keys:
                     node.instances.discard(instance_id)
                     # the host gauge follows the host_instances marking
                     # exactly (guarded add here / discard below), so a
@@ -223,21 +265,54 @@ class GlobalScheduler:
                 else:
                     self.tree.remove_instance(node, instance_id)
         host_freed = 0
-        for nid in hdrop:
-            node = self.tree.get_node(nid)
-            if node is not None and instance_id in node.host_instances:
-                node.host_instances.discard(instance_id)
-                host_freed += len(node.tokens)
+        for span in host_dropped:
+            for node in self.tree.resolve_span(span):
+                if instance_id in node.host_instances:
+                    node.host_instances.discard(instance_id)
+                    host_freed += len(node.tokens)
         if inst is not None:
             inst.cached_tokens = max(inst.cached_tokens - freed, 0)
             inst.host_cached_tokens = max(
                 inst.host_cached_tokens + demoted_toks - host_freed, 0)
-        for nid in list(node_ids) + list(hdrop):
-            if nid in dem and nid not in hdrop:
-                continue             # demoted nodes are live, never pruned
-            node = self.tree.get_node(nid)   # None if already pruned
+        for span in list(evicted) + list(host_dropped):
+            if span.key in dem_keys and span.key not in hdrop_keys:
+                continue             # demoted spans are live, never pruned
+            node = self.tree.node_by_key(span.key)  # None if pruned/collided
             if node is not None:
                 self.tree.prune_upward(node, now)
+
+    def on_migration(self, src: int, dst: int, tokens: Sequence[int],
+                     ranges: Sequence[Tuple[int, int]], now: float = 0.0,
+                     *, move: bool = False) -> None:
+        """Runtime feedback after a tier-to-tier migration executed:
+        token ranges [lo, hi) of ``tokens`` now sit in ``dst``'s host
+        tier. Marks the covered forest nodes host-resident on dst (and,
+        for a move — drain — removes the src marking) and keeps both
+        host gauges in line with the markings. Ranges are node-aligned
+        (the exporter ships whole-node pieces), so every forest node
+        inside a range is fully covered."""
+        if not ranges:
+            return
+        dst_inst = self.instances.get(dst)
+        src_inst = self.instances.get(src)
+        m = self.tree.match(tokens, now=now)
+        moved = 0
+        boundary = 0
+        for node in m.path:
+            start, end = boundary, boundary + len(node.tokens)
+            boundary = end
+            if not any(lo <= start and end <= hi for lo, hi in ranges):
+                continue
+            if dst_inst is not None and dst not in node.host_instances:
+                node.host_instances.add(dst)
+                dst_inst.host_cached_tokens += len(node.tokens)
+                moved += len(node.tokens)
+            if move and src in node.host_instances:
+                node.host_instances.discard(src)
+                if src_inst is not None:
+                    src_inst.host_cached_tokens = max(
+                        src_inst.host_cached_tokens - len(node.tokens), 0)
+        self.stats["migrated_tokens"] += moved
 
     # ---- post-assignment load management ----------------------------------------
 

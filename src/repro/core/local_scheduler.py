@@ -17,11 +17,12 @@ both drive it. Token-budget accounting is in tokens (1 token of KV/state
 
 from __future__ import annotations
 
+import itertools
 from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 
-from .radix_tree import RadixNode, RadixTree
+from .radix_tree import PathKey, PrefixSpan, RadixNode, RadixTree
 from .request import Request, RequestState
 
 
@@ -45,14 +46,30 @@ class LocalSchedulerConfig:
 class AccountingHostTier:
     """Data-mover stub for runs with no real device memory (the
     discrete-event simulator): every demote 'succeeds' for the node's
-    full span and drops are free. The LocalScheduler layered on top
-    still does all the real tier accounting (LRU, capacity, gauges), so
+    full span, migration ships no bytes, and drops are free. The
+    LocalScheduler layered on top still does all the real tier
+    accounting (LRU, capacity, gauges, content-addressed keys), so
     simulator runs exercise the same policy code the engine does."""
 
-    def demote_many(self, nodes: Sequence[RadixNode]) -> Dict[int, int]:
-        return {n.node_id: len(n.tokens) for n in nodes}
+    carries_bytes = False    # migration payloads are accounting-only
 
-    def drop(self, node_id: int) -> None:
+    def demote_many(self, nodes: Sequence[RadixNode]) -> Dict[PathKey, int]:
+        return {n.path_key: len(n.tokens) for n in nodes}
+
+    def drop(self, key: PathKey) -> None:
+        pass
+
+    def ingest(self, node: RadixNode, start: int, length: int,
+               payload, offset: int) -> None:
+        pass
+
+    def export(self, node: RadixNode, lo: int, hi: int):
+        return None
+
+    def pending_has(self, key: PathKey) -> bool:
+        return False
+
+    def drain(self) -> None:
         pass
 
 
@@ -65,6 +82,10 @@ class BatchItem:
     restored_len: int = 0 # host-tier tokens restored at admission
                           # (first chunk only; simulator charges
                           # restore_time for them, the engine DMAs them)
+    migrated_len: int = 0 # tokens that arrived via tier-to-tier
+                          # migration for this request (first chunk
+                          # only; simulator charges migrate_time — the
+                          # restore itself shows up in restored_len)
 
 
 @dataclass
@@ -97,31 +118,38 @@ class Batch:
 
 class LocalScheduler:
     def __init__(self, config: LocalSchedulerConfig,
-                 on_evict: Optional[Callable[[int, List[int]], None]] = None,
-                 host_tier=None):
+                 on_evict: Optional[Callable] = None,
+                 host_tier=None,
+                 node_id_start: int = 0):
         self.config = config
-        self.tree = RadixTree(window=config.window)
+        self._node_ids = lambda: itertools.count(node_id_start)
+        self.tree = RadixTree(window=config.window,
+                              id_source=self._node_ids())
         self.tree.split_hooks.append(self._on_split)
         self.waiting: List[Request] = []
         self.running: List[Request] = []    # requests in decode phase
         self.prefilling: List[Request] = [] # requests mid-chunked-prefill
         self.used_tokens = 0                # device cache pool usage
-        self.on_evict = on_evict            # async global notification
-        # Tier outcome of the LAST apply_eviction/drop_host, published
-        # just before on_evict fires so the notification consumer (the
-        # engine) can forward demoted-not-dead vs truly-dropped to the
-        # global scheduler in ONE message: demoted node ids left the
-        # device but are restorable; host-dropped ids are gone from
-        # both tiers.
-        self.last_demoted_ids: List[int] = []
-        self.last_host_dropped_ids: List[int] = []
-        # host tier: the scheduler owns the POLICY (which nodes live in
-        # the host tier, LRU order, capacity in tokens); host_tier is
-        # the DATA MOVER that actually demotes/drops bytes — the
-        # engine's PagedHostTier (device gather -> pinned numpy) or
+        # Async global notification — protocol v2 (keyword-only,
+        # content-addressed): called as
+        #   on_evict(instance_id, evicted_spans,
+        #            demoted=[...], host_dropped=[...])
+        # with PrefixSpans throughout; local node ids never leave this
+        # scheduler.
+        self.on_evict = on_evict
+        # host tier: the scheduler owns the POLICY (which spans live in
+        # the host tier, their ordering, capacity in tokens, the
+        # demote-vs-drop admission weighting); host_tier is the DATA
+        # MOVER that actually demotes/drops/ships bytes — the engine's
+        # PagedHostTier (device gather -> pinned numpy) or
         # AccountingHostTier for the simulator.
         self.host_tier = host_tier
-        self._host_lru: "OrderedDict[int, int]" = OrderedDict()  # nid -> toks
+        # host residency, CONTENT-ADDRESSED: path key -> demoted token
+        # count, in recency order; _host_nodes pins each key to the
+        # owning local node id so a digest collision can never alias two
+        # different prefixes onto one entry.
+        self._host_lru: "OrderedDict[PathKey, int]" = OrderedDict()
+        self._host_nodes: Dict[PathKey, int] = {}
         self.host_used_tokens = 0
         self._pinned: Dict[int, List[RadixNode]] = {}  # req id -> pinned path
         # per-request token account: the part of a request's reservation
@@ -138,7 +166,8 @@ class LocalScheduler:
         self.stats = {"batches": 0, "evicted_tokens": 0, "admitted": 0,
                       "starved_max_wait": 0.0, "demoted_tokens": 0,
                       "restored_tokens": 0, "host_dropped_tokens": 0,
-                      "restore_hits": 0}
+                      "restore_hits": 0, "migrated_in_tokens": 0,
+                      "migrated_out_tokens": 0, "demote_skipped_tokens": 0}
 
     @property
     def host_enabled(self) -> bool:
@@ -249,7 +278,11 @@ class LocalScheduler:
                 self.prefilling.append(r)
                 batch.items.append(
                     BatchItem(r, "prefill", chunk, cached_len=r.cached_len,
-                              restored_len=r.restored_len))
+                              restored_len=r.restored_len,
+                              migrated_len=r.migrated_len))
+                # the DCN charge is one-time — a re-queued request must
+                # not re-pay a migration that already happened
+                r.migrated_len = 0
                 budget -= chunk
 
         if self.waiting:
@@ -300,7 +333,7 @@ class LocalScheduler:
             freed = sum(len(n.tokens) for n in plan)
             if freed < need:
                 return False
-            self.apply_eviction(plan)
+            self.apply_eviction(plan, now)
             # the eviction's demote cascade can overflow the host
             # budget and drop the very entries this request matched:
             # re-walk so restored_len only books KV that still exists
@@ -317,8 +350,10 @@ class LocalScheduler:
             boundary = 0
             for node in m.path:
                 boundary += len(node.tokens)
-                if boundary > dev and node.node_id in self._host_lru:
-                    self.touch_host(node.node_id)
+                if (boundary > dev
+                        and self._host_nodes.get(node.path_key)
+                        == node.node_id):
+                    self.touch_host(node.path_key)
             self.stats["restored_tokens"] += request.restored_len
             self.stats["restore_hits"] += 1
         # pin matched path so concurrent eviction can't pull our prefix
@@ -345,12 +380,60 @@ class LocalScheduler:
         if a is not None:
             self._acct[request_id] = max(a - tokens, 0)
 
-    def touch_host(self, node_id: int) -> None:
-        """LRU-recency touch for a host-tier entry (restore hit)."""
-        if node_id in self._host_lru:
-            self._host_lru.move_to_end(node_id)
+    def touch_host(self, key: PathKey) -> None:
+        """Recency touch for a host-tier entry (restore hit)."""
+        if key in self._host_lru:
+            self._host_lru.move_to_end(key)
 
-    def apply_eviction(self, plan: Sequence[RadixNode]) -> int:
+    def _host_hits(self, key: PathKey, now: float) -> int:
+        """Window-H hit count of the node owning a host entry — the
+        n_j signal E2 already tracks, reused as the host-tier
+        admission/retention weight."""
+        nid = self._host_nodes.get(key)
+        node = self.tree.get_node(nid) if nid is not None else None
+        if node is None:
+            return 0
+        return self.tree.hits_in_window(node, now, self.config.instance_id)
+
+    def _host_victim(self, now: float,
+                     protected: frozenset = frozenset()) -> PathKey:
+        """Pick the host entry to drop on overflow: lowest window-H hit
+        rate first (hot prefixes outlive one-shot prompts), recency
+        (LRU position) breaking ties; ``protected`` (just-ingested /
+        just-demoted under an incoming restore) lose only when nothing
+        else is left. O(entries) per drop — fine at host-LRU scale."""
+        best_key, best_score = None, None
+        for pos, key in enumerate(self._host_lru):
+            score = (key in protected, self._host_hits(key, now), pos)
+            if best_score is None or score < best_score:
+                best_key, best_score = key, score
+        return best_key
+
+    def _enforce_host_capacity(self, now: float,
+                               protected: frozenset = frozenset()
+                               ) -> List[PrefixSpan]:
+        """Drop hit-rate-weighted victims until the host tier fits its
+        budget; returns the dropped spans for the v2 notification."""
+        dropped: List[PrefixSpan] = []
+        inst = self.config.instance_id
+        while (self.host_used_tokens > self.config.host_capacity_tokens
+               and self._host_lru):
+            key = self._host_victim(now, protected)
+            toks = self._host_lru.pop(key)
+            nid = self._host_nodes.pop(key, None)
+            self.host_used_tokens -= toks
+            self.host_tier.drop(key)
+            node = self.tree.get_node(nid) if nid is not None else None
+            if node is not None:
+                node.host_instances.discard(inst)
+                dropped.append(node.span())
+            else:
+                dropped.append(PrefixSpan(key, toks))
+            self.stats["host_dropped_tokens"] += toks
+        return dropped
+
+    def apply_eviction(self, plan: Sequence[RadixNode],
+                       now: float = 0.0) -> int:
         """Evict ``plan`` from the device tier and run ALL the
         bookkeeping (pool accounting, tier demotion, stats, eviction
         log, async notification) — the single place eviction side
@@ -359,70 +442,201 @@ class LocalScheduler:
 
         With the host tier enabled, eviction DEMOTES: the data mover
         copies each node's KV device->host (and frees its pages); the
-        node is marked host-resident and joins the host LRU. Nodes the
-        mover cannot demote (KV never materialized) are dropped as
-        before. Host-capacity overflow then truly drops the coldest
-        host entries. Both outcomes are surfaced through on_tier_evict
-        so the global scheduler can tell demoted-not-dead from gone."""
+        node is marked host-resident and joins the host LRU keyed by
+        its path. Admission is hit-rate weighted: under host-budget
+        pressure a span with no window-H re-hits beyond its own insert
+        (a one-shot prompt) is dropped outright instead of displacing a
+        re-hit prefix; with budget to spare everything demotes. Nodes
+        the mover cannot demote (KV never materialized) and spans whose
+        path key is ambiguous (digest collision) are dropped as before.
+        Host-capacity overflow then drops the lowest-hit-rate entries.
+        The v2 notification ships (evicted, demoted, host_dropped)
+        PrefixSpans in ONE keyword-only message."""
         inst = self.config.instance_id
+        # window-H hit counts BEFORE evict: tree.evict drops this
+        # instance's hit history with its marking, and the demote
+        # admission weighting below needs the pre-eviction heat
+        plan_hits = {n.node_id: self.tree.hits_in_window(n, now, inst)
+                     for n in plan}
         self.tree.evict(plan, inst)
         freed = sum(len(n.tokens) for n in plan)
         self.used_tokens = max(self.used_tokens - freed, 0)
         self.stats["evicted_tokens"] += freed
-        ids = [n.node_id for n in plan]
-        demoted_ids: List[int] = []
-        host_dropped: List[int] = []
+        spans = [n.span() for n in plan]
+        demoted_spans: List[PrefixSpan] = []
+        dropped_spans: List[PrefixSpan] = []
         if self.host_enabled and plan:
-            got = self.host_tier.demote_many(plan)
+            cap = self.config.host_capacity_tokens
+            candidates: List[RadixNode] = []
+            projected = self.host_used_tokens
             for n in plan:
-                g = got.get(n.node_id, 0)
+                key = n.path_key
+                resident = self._host_nodes.get(key) == n.node_id
+                if self.tree.key_ambiguous(key) and not resident:
+                    # collided identity: its KV cannot be addressed
+                    # safely by content — recompute on re-hit
+                    self.stats["demote_skipped_tokens"] += len(n.tokens)
+                    continue
+                hot = plan_hits.get(n.node_id, 0) > 1
+                if (not hot and not resident
+                        and projected + len(n.tokens) > cap):
+                    # one-shot span under host pressure: not worth
+                    # displacing a re-hit prefix
+                    self.stats["demote_skipped_tokens"] += len(n.tokens)
+                    continue
+                if not resident:
+                    projected += len(n.tokens)
+                candidates.append(n)
+            got = (self.host_tier.demote_many(candidates)
+                   if candidates else {})
+            fresh = set()
+            for n in candidates:
+                g = got.get(n.path_key, 0)
                 if g <= 0:
                     continue
-                prev = self._host_lru.pop(n.node_id, None)
+                prev = self._host_lru.pop(n.path_key, None)
                 if prev is not None:
                     self.host_used_tokens -= prev
-                self._host_lru[n.node_id] = g
+                self._host_lru[n.path_key] = g
+                self._host_nodes[n.path_key] = n.node_id
                 self.host_used_tokens += g
                 n.host_instances.add(inst)
-                demoted_ids.append(n.node_id)
+                demoted_spans.append(n.span())
+                fresh.add(n.path_key)
                 self.stats["demoted_tokens"] += g
-            # host-capacity enforcement: coldest entries truly die
-            while (self.host_used_tokens > self.config.host_capacity_tokens
-                   and self._host_lru):
-                nid, toks = self._host_lru.popitem(last=False)
-                self.host_used_tokens -= toks
-                self.host_tier.drop(nid)
-                node = self.tree.get_node(nid)
-                if node is not None:
-                    node.host_instances.discard(inst)
-                host_dropped.append(nid)
-                self.stats["host_dropped_tokens"] += toks
-        self.evicted_log.extend(ids)
-        self.last_demoted_ids = demoted_ids
-        self.last_host_dropped_ids = host_dropped
+            dropped_spans = self._enforce_host_capacity(
+                now, protected=frozenset(fresh))
+        self.evicted_log.extend(n.node_id for n in plan)
         if self.on_evict is not None:
-            self.on_evict(inst, ids)  # async in prod
+            self.on_evict(inst, spans, demoted=demoted_spans,
+                          host_dropped=dropped_spans)  # async in prod
         return freed
 
-    def drop_host(self, node_id: int) -> int:
+    def drop_host(self, key: PathKey) -> int:
         """Forcibly drop one host-tier entry (both policy state and the
         mover's bytes) — the failure-injection path tests use to model
         a host entry dying mid-flight. Returns tokens dropped."""
-        toks = self._host_lru.pop(node_id, None)
+        toks = self._host_lru.pop(key, None)
         if toks is None:
             return 0
+        nid = self._host_nodes.pop(key, None)
         self.host_used_tokens -= toks
         if self.host_tier is not None:
-            self.host_tier.drop(node_id)
-        node = self.tree.get_node(node_id)
+            self.host_tier.drop(key)
+        node = self.tree.get_node(nid) if nid is not None else None
+        span = node.span() if node is not None else PrefixSpan(key, toks)
         if node is not None:
             node.host_instances.discard(self.config.instance_id)
         self.stats["host_dropped_tokens"] += toks
-        self.last_demoted_ids = []
-        self.last_host_dropped_ids = [node_id]
         if self.on_evict is not None:
-            self.on_evict(self.config.instance_id, [])
+            self.on_evict(self.config.instance_id, [], demoted=[],
+                          host_dropped=[span])
         return toks
+
+    # ---- tier-to-tier migration (DESIGN.md §9) -------------------------------
+
+    def export_host_span(self, tokens: Sequence[int], lo: int, hi: int
+                         ) -> List[Tuple[int, int, object]]:
+        """Migration SOURCE side: slice this instance's host-tier
+        entries covering tokens[lo:hi] into portable (lo, hi, payload)
+        pieces. Pieces are contiguous from ``lo`` and end on node
+        boundaries of THIS tree (or on ``hi``) — boundaries only ever
+        refine across trees, so the receiver can re-align them to its
+        own nodes. Stops at the first gap or partial entry; the caller
+        ships whatever contiguous prefix actually exists (the planner's
+        view may be stale), and the receiver's restore path degrades
+        the rest to recompute."""
+        out: List[Tuple[int, int, object]] = []
+        if not self.host_enabled or hi <= lo:
+            return out
+        m = self.tree.match(tokens[:hi])
+        boundary = 0
+        cursor = lo
+        for node in m.path:
+            start = boundary
+            boundary += len(node.tokens)
+            if boundary <= lo:
+                continue
+            if cursor >= hi or start > cursor:
+                break
+            key = node.path_key
+            toks = self._host_lru.get(key)
+            if toks is None or self._host_nodes.get(key) != node.node_id:
+                break                       # not host-resident: chain ends
+            piece_end = min(start + toks, hi)
+            if piece_end <= cursor:
+                break
+            if piece_end < boundary and piece_end < hi:
+                break                       # partial entry tail: not aligned
+            payload = self.host_tier.export(node, cursor, piece_end)
+            if payload is None and getattr(self.host_tier,
+                                           "carries_bytes", False):
+                break                       # bytes vanished mid-flight
+            out.append((cursor, piece_end, payload))
+            self.stats["migrated_out_tokens"] += piece_end - cursor
+            cursor = piece_end
+        return out
+
+    def ingest_host_span(self, tokens: Sequence[int],
+                         spans: Sequence[Tuple[int, int, object]],
+                         now: float = 0.0) -> List[Tuple[int, int]]:
+        """Migration TARGET side: align incoming host-tier pieces to
+        THIS tree's node boundaries (inserting the path, host-marking
+        only — the device tier is untouched), admit them into the host
+        LRU + data mover, enforce the host budget (hit-rate weighted;
+        the just-ingested spans are protected — they are about to be
+        restored), and return the accepted (lo, hi) ranges."""
+        accepted: List[Tuple[int, int]] = []
+        if not self.host_enabled:
+            return accepted
+        inst = self.config.instance_id
+        fresh: Set[PathKey] = set()
+        for lo, hi, payload in spans:
+            if hi <= lo:
+                continue
+            if payload is None and getattr(self.host_tier,
+                                           "carries_bytes", False):
+                continue                    # byteless piece on a byte mover
+            path = self.tree.insert(tokens[:hi], now=now)
+            boundary = 0
+            cursor = lo
+            for node in path:
+                start = boundary
+                boundary += len(node.tokens)
+                if boundary <= lo:
+                    continue
+                if start >= hi or start != cursor:
+                    break
+                length = min(boundary, hi) - start
+                key = node.path_key
+                if self._host_nodes.get(key) == node.node_id:
+                    # already resident here — but only as far as the
+                    # existing entry actually reaches: a partial entry
+                    # must not inflate the accepted range (the caller
+                    # charges DCN time and host-marks the forest by it)
+                    have = self._host_lru.get(key, 0)
+                    cursor = start + min(have, length)
+                    if have < length:
+                        break
+                    continue
+                if key in self._host_lru or self.tree.key_ambiguous(key):
+                    break                       # collided identity: stop
+                self.host_tier.ingest(node, start, length, payload,
+                                      start - lo)
+                self._host_lru[key] = length
+                self._host_nodes[key] = node.node_id
+                self.host_used_tokens += length
+                node.host_instances.add(inst)
+                fresh.add(key)
+                self.stats["migrated_in_tokens"] += length
+                cursor = start + length
+            if cursor > lo:
+                accepted.append((lo, cursor))
+        dropped = self._enforce_host_capacity(now,
+                                              protected=frozenset(fresh))
+        if dropped and self.on_evict is not None:
+            self.on_evict(inst, [], demoted=[], host_dropped=dropped)
+        return accepted
 
     # ---- iteration completion -----------------------------------------------------------
 
@@ -474,19 +688,37 @@ class LocalScheduler:
         for path in self._pinned.values():
             if head in path and tail not in path:
                 path.append(tail)
-        # keep host-LRU token accounting aligned with the split: the
-        # head's demoted span [node_start, node_start+L) now crosses the
-        # head/tail boundary at head's new span length. (The data mover
-        # splits the actual KV arrays through its own split hook.)
-        toks = self._host_lru.get(head.node_id)
-        if toks is not None:
-            head_toks = min(toks, len(head.tokens))
-            tail_toks = toks - head_toks
-            self._host_lru[head.node_id] = head_toks
-            if tail_toks > 0:
-                # tail lands at the MRU end — close enough to the
-                # head's recency for LRU purposes
-                self._host_lru[tail.node_id] = tail_toks
+        # keep host-LRU accounting aligned with the split. Path-keyed
+        # identity: the TAIL keeps the pre-split key (its end boundary
+        # is unchanged), so the existing entry's key now names the tail
+        # — its tokens past the cut stay put, while the head's part is
+        # rekeyed under the head's new (shallower) key. (The data mover
+        # splits the actual KV arrays through its own split hook, under
+        # the same key moves.)
+        old_key = tail.path_key
+        toks = self._host_lru.get(old_key)
+        if toks is None or self._host_nodes.get(old_key) != head.node_id:
+            return          # no entry, or a collided key we don't own
+        head_toks = min(toks, len(head.tokens))
+        tail_toks = toks - head_toks
+        if head.path_key in self._host_lru:
+            # digest collision with an existing entry: the head part
+            # cannot be addressed by content — drop its tokens (the
+            # store's split hook mirrors this by the same condition)
+            self.host_used_tokens -= head_toks
+            self.stats["host_dropped_tokens"] += head_toks
+            head_toks = 0
+        if tail_toks > 0:
+            self._host_lru[old_key] = tail_toks    # keeps LRU position
+            self._host_nodes[old_key] = tail.node_id
+        else:
+            self._host_lru.pop(old_key)
+            self._host_nodes.pop(old_key)
+        if head_toks > 0:
+            # head part lands at the MRU end — close enough to the
+            # original recency for LRU purposes
+            self._host_lru[head.path_key] = head_toks
+            self._host_nodes[head.path_key] = head.node_id
 
     def abort(self, request: Request) -> None:
         """Drop an admitted request the engine cannot serve (oversized
@@ -523,8 +755,10 @@ class LocalScheduler:
         self._acct.clear()
         self.used_tokens = 0
         self._host_lru.clear()
+        self._host_nodes.clear()
         self.host_used_tokens = 0
-        self.tree = RadixTree(window=self.config.window)
+        self.tree = RadixTree(window=self.config.window,
+                              id_source=self._node_ids())
         self.tree.split_hooks.append(self._on_split)
         return out
 

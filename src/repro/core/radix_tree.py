@@ -10,6 +10,25 @@ The tree stores sequences of token ids.  Each edge/node holds a token
 span; children are indexed by their first token for O(1) fan-out lookup.
 A node is "cached on instance i" when i appears in ``node.instances``.
 
+Prefix identity is CONTENT-ADDRESSED (DESIGN.md §9): every node carries
+a ``PathKey`` — an incremental rolling hash of its full root→node token
+path plus the absolute depth — maintained in O(edge) through inserts
+and splits. Node ids are allocated PER TREE (each tree owns its own
+counter): they are meaningful only inside one tree (pins, eviction
+plans, `_hot_nodes`), while everything that crosses trees or tiers —
+eviction/demotion/host-drop notifications, host-store entries, the
+migration protocol — is keyed by path. A ``PrefixSpan`` (path key of
+the span's END boundary + its token length) names the same KV range in
+any tree regardless of how that tree happened to split its nodes,
+because every split boundary a local tree has, the global forest that
+saw a superset of the traffic has too.
+
+Hash-collision fallback: the key index keeps a bucket per key; a bucket
+with >1 nodes (two distinct paths, same 61-bit digest AND depth —
+~2^-61 per pair) is AMBIGUOUS: `node_by_key` then resolves only with
+full-path verification (explicit tokens) and returns None otherwise, so
+consumers degrade to recompute — never to another prefix's KV.
+
 This is pure host-side control-plane code (no jax).
 """
 
@@ -18,9 +37,45 @@ from __future__ import annotations
 import itertools
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Callable, Dict, Iterable, Iterator, List, Optional, Sequence, Set, Tuple
+from typing import (Callable, Dict, Iterable, Iterator, List, NamedTuple,
+                    Optional, Sequence, Set, Tuple)
 
-_node_ids = itertools.count()
+# Rolling polynomial hash over token ids (mod a Mersenne prime). The
+# digest of a path extends incrementally token by token, so a node's
+# key derives from its parent's in O(len(edge)).
+_HASH_MOD = (1 << 61) - 1
+_HASH_BASE = 1_000_003
+
+# Version tag of the cross-tree notification/migration protocol (v2 =
+# content-addressed PrefixSpans, keyword-only tier arguments).
+NOTIFY_PROTOCOL_VERSION = 2
+
+
+def extend_digest(digest: int, tokens: Sequence[int]) -> int:
+    for t in tokens:
+        digest = (digest * _HASH_BASE + t + 1) % _HASH_MOD
+    return digest
+
+
+class PathKey(NamedTuple):
+    """Content-addressed identity of one root→boundary token path."""
+    digest: int          # rolling hash of tokens[0:depth]
+    depth: int           # absolute token depth of the boundary
+
+
+class PrefixSpan(NamedTuple):
+    """A token range [key.depth - length, key.depth) named by content:
+    the unit of the eviction/demotion/migration protocol."""
+    key: PathKey
+    length: int
+
+
+ROOT_KEY = PathKey(0, 0)
+
+
+def path_key_of(tokens: Sequence[int]) -> PathKey:
+    """Key of an explicit token sequence (tests / protocol consumers)."""
+    return PathKey(extend_digest(0, tokens), len(tokens))
 
 
 class RadixNode:
@@ -28,6 +83,7 @@ class RadixNode:
 
     __slots__ = (
         "node_id",
+        "path_key",
         "tokens",
         "parent",
         "children",
@@ -38,8 +94,17 @@ class RadixNode:
         "ref_count",
     )
 
-    def __init__(self, tokens: Tuple[int, ...], parent: Optional["RadixNode"]):
-        self.node_id: int = next(_node_ids)
+    def __init__(self, tokens: Tuple[int, ...], parent: Optional["RadixNode"],
+                 node_id: int = 0):
+        # node_id is TREE-LOCAL (see module docstring); path_key is the
+        # portable identity, derived incrementally from the parent's.
+        self.node_id: int = node_id
+        if parent is None:
+            self.path_key: PathKey = ROOT_KEY
+        else:
+            pk = parent.path_key
+            self.path_key = PathKey(extend_digest(pk.digest, tokens),
+                                    pk.depth + len(tokens))
         self.tokens: Tuple[int, ...] = tokens
         self.parent = parent
         self.children: Dict[int, RadixNode] = {}
@@ -78,6 +143,21 @@ class RadixNode:
     def is_leaf(self) -> bool:
         return not self.children
 
+    def full_tokens(self) -> Tuple[int, ...]:
+        """Root→node token path (O(depth) parent walk) — the content a
+        PathKey digests; used for full-path verification on hash match."""
+        parts: List[Tuple[int, ...]] = []
+        n: Optional[RadixNode] = self
+        while n is not None:
+            parts.append(n.tokens)
+            n = n.parent
+        parts.reverse()
+        return tuple(t for p in parts for t in p)
+
+    def span(self) -> PrefixSpan:
+        """This node's token range as a portable protocol span."""
+        return PrefixSpan(self.path_key, len(self.tokens))
+
     def __repr__(self) -> str:  # pragma: no cover - debug aid
         return f"RadixNode(id={self.node_id}, len={len(self.tokens)}, inst={sorted(self.instances)})"
 
@@ -102,21 +182,95 @@ class RadixTree:
     """A forest rooted at a sentinel node (paper: several global trees —
     a sentinel root with children is an equivalent representation)."""
 
-    def __init__(self, window: float = 180.0):
-        self.root = RadixNode((), None)
+    def __init__(self, window: float = 180.0,
+                 id_source: Optional[Iterator[int]] = None):
+        # PER-TREE node ids: every tree allocates independently (tests
+        # randomize the start to prove nothing cross-tree leans on ids).
+        self._ids: Iterator[int] = (id_source if id_source is not None
+                                    else itertools.count())
+        self.root = RadixNode((), None, node_id=next(self._ids))
         self.window = window  # history window H in seconds (default 3 min)
         self._token_count = 0  # cached tokens (nodes with >=1 instance count full)
-        # node-id -> node index: O(1) lookup for eviction notifications
-        # (GlobalScheduler.on_evictions) instead of an O(all-nodes) walk
+        # node-id -> node index: O(1) lookup for same-tree references
+        # (pins, eviction plans) instead of an O(all-nodes) walk
         self._by_id: Dict[int, RadixNode] = {}
+        # path-key -> nodes index: O(1) content-addressed lookup for the
+        # cross-tree protocol. A bucket normally holds exactly one node;
+        # >1 marks a digest collision (ambiguous key, see node_by_key).
+        self._by_key: Dict[PathKey, List[RadixNode]] = {}
         # structural hooks: each called as hook(head, tail) after a node
         # split, with head keeping the id/prefix and tail the new suffix
-        # node. The local scheduler keeps pin lists aligned; engines
-        # keep page-table aliases aligned with node boundaries.
+        # node (and the ORIGINAL path key, whose boundary is unchanged).
+        # The local scheduler keeps pin lists aligned; engines keep
+        # page-table aliases aligned with node boundaries.
         self.split_hooks: List[Callable[[RadixNode, RadixNode], None]] = []
 
     def get_node(self, node_id: int) -> Optional[RadixNode]:
         return self._by_id.get(node_id)
+
+    # ---- content-addressed index -------------------------------------------
+
+    def _register(self, node: RadixNode) -> None:
+        self._by_id[node.node_id] = node
+        self._by_key.setdefault(node.path_key, []).append(node)
+
+    def _unregister(self, node: RadixNode) -> None:
+        self._by_id.pop(node.node_id, None)
+        bucket = self._by_key.get(node.path_key)
+        if bucket is not None:
+            try:
+                bucket.remove(node)
+            except ValueError:
+                pass
+            if not bucket:
+                del self._by_key[node.path_key]
+
+    def key_ambiguous(self, key: PathKey) -> bool:
+        """True when two distinct token paths in THIS tree collide on
+        (digest, depth) — consumers must not address KV by this key."""
+        return len(self._by_key.get(key, ())) > 1
+
+    def node_by_key(self, key: PathKey,
+                    tokens: Optional[Sequence[int]] = None
+                    ) -> Optional[RadixNode]:
+        """Resolve a path key to this tree's node ending at that
+        boundary. On an ambiguous (collided) key, resolution requires
+        ``tokens`` — the expected root→boundary path — and verifies the
+        full path; without tokens it returns None (callers degrade to
+        recompute, never to another prefix's KV)."""
+        bucket = self._by_key.get(key)
+        if not bucket:
+            return None
+        if tokens is not None:
+            for n in bucket:
+                if n.full_tokens() == tuple(tokens):
+                    return n
+            return None
+        if len(bucket) == 1:
+            return bucket[0]
+        return None
+
+    def resolve_span(self, span: PrefixSpan,
+                     tokens: Optional[Sequence[int]] = None
+                     ) -> List[RadixNode]:
+        """Resolve a protocol span to the chain of THIS tree's nodes
+        covering its token range, deepest first. The sender's node may
+        map to several nodes here (this tree split finer) — boundaries
+        are compatible because split boundaries only ever refine. An
+        unresolvable/ambiguous key, or a chain whose node boundaries
+        would overshoot the span (stale notification), yields a partial
+        (possibly empty) chain — safe no-op degradation."""
+        node = self.node_by_key(span.key, tokens)
+        chain: List[RadixNode] = []
+        covered = 0
+        while (node is not None and node.parent is not None
+               and covered < span.length):
+            if covered + len(node.tokens) > span.length:
+                break
+            chain.append(node)
+            covered += len(node.tokens)
+            node = node.parent
+        return chain
 
     # ---- matching ----------------------------------------------------------
 
@@ -225,12 +379,13 @@ class RadixTree:
     # ---- insertion ---------------------------------------------------------
 
     def insert(self, tokens: Sequence[int], instance: Optional[int] = None,
-               now: float = 0.0) -> List[RadixNode]:
+               now: float = 0.0, record: bool = True) -> List[RadixNode]:
         """Insert ``tokens``; splits partially-matched nodes (paper §3.2).
 
         Returns the full node path covering the sequence. If ``instance`` is
-        given, marks every node on the path as cached there and records a
-        window-H hit.
+        given, marks every node on the path as cached there and (unless
+        ``record=False`` — for re-inserts of an already-counted serve,
+        e.g. the engine's post-prefill publish) records a window-H hit.
         """
         tokens = tuple(tokens)
         node = self.root
@@ -239,9 +394,9 @@ class RadixTree:
         while i < len(tokens):
             child = node.children.get(tokens[i])
             if child is None:
-                leaf = RadixNode(tokens[i:], node)
+                leaf = RadixNode(tokens[i:], node, node_id=next(self._ids))
                 node.children[tokens[i]] = leaf
-                self._by_id[leaf.node_id] = leaf
+                self._register(leaf)
                 path.append(leaf)
                 i = len(tokens)
                 break
@@ -265,13 +420,20 @@ class RadixTree:
             n.last_access = now
             if instance is not None:
                 n.instances.add(instance)
-                self.record_hit(n, instance, now)
+                if record:
+                    self.record_hit(n, instance, now)
         return path
 
     def _split(self, node: RadixNode, at: int) -> RadixNode:
-        """Split ``node`` so it keeps tokens[:at]; tail becomes its child."""
+        """Split ``node`` so it keeps tokens[:at]; tail becomes its child.
+
+        Path-key maintenance is O(at) — the head's new key extends the
+        parent's digest over tokens[:at]; the TAIL keeps the original
+        key (its end boundary, hence its root→boundary content, is
+        unchanged), so host-store entries / notifications in flight
+        keyed by the old identity still name the same token range."""
         assert 0 < at < len(node.tokens)
-        tail = RadixNode(node.tokens[at:], node)
+        tail = RadixNode(node.tokens[at:], node, node_id=next(self._ids))
         tail.children = node.children
         for c in tail.children.values():
             c.parent = tail
@@ -280,9 +442,16 @@ class RadixTree:
         tail.hit_times = {k: deque(v) for k, v in node.hit_times.items()}
         tail.last_access = node.last_access
         tail.ref_count = node.ref_count
+        self._unregister(node)
+        parent_key = node.parent.path_key
         node.tokens = node.tokens[:at]
         node.children = {tail.tokens[0]: tail}
-        self._by_id[tail.node_id] = tail
+        tail.path_key = node.path_key          # end boundary unchanged
+        node.path_key = PathKey(
+            extend_digest(parent_key.digest, node.tokens),
+            parent_key.depth + at)
+        self._register(node)
+        self._register(tail)
         for hook in self.split_hooks:
             hook(node, tail)
         return tail
@@ -344,7 +513,7 @@ class RadixTree:
                and self.hits_in_window(node, now) == 0):
             parent = node.parent
             del parent.children[node.tokens[0]]
-            self._by_id.pop(node.node_id, None)
+            self._unregister(node)
             removed += 1
             node = parent
         return removed
@@ -361,7 +530,7 @@ class RadixTree:
                         and n.ref_count == 0
                         and self.hits_in_window(n, now) == 0 and n.parent is not None):
                     del n.parent.children[n.tokens[0]]
-                    self._by_id.pop(n.node_id, None)
+                    self._unregister(n)
                     removed += 1
                     changed = True
         return removed

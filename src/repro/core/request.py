@@ -33,6 +33,8 @@ class Request:
     cached_len: int = 0                     # prefix tokens found cached
     device_cached_len: int = 0              # ... of which device-resident
     restored_len: int = 0                   # host-tier tokens restored
+    migrated_len: int = 0                   # tokens shipped host->host to
+                                            # the serving instance's tier
     prefill_done: int = 0                   # prompt tokens prefilled so far
     output_tokens: List[int] = field(default_factory=list)
     # timeline

@@ -22,6 +22,7 @@ from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from ..core.cost_model import CostModel, cost_model_for
+from ..core.e2 import MigrationPlan
 from ..core.global_scheduler import GlobalScheduler, GlobalSchedulerConfig
 from ..core.request import Request, RequestState
 from .engine import Engine, EngineConfig
@@ -45,18 +46,19 @@ class ClusterRuntime:
         for i in range(num_instances):
             ec = dataclasses.replace(base, instance_id=i)
             self.engines[i] = Engine(model_cfg, params, ec,
-                                     on_evict=self._notify_evictions,
-                                     on_evict_rich=True)
+                                     on_evict=self._notify_evictions)
         self._rr_next = 0
         self.finished: List[Request] = []
+        self.stats = {"migrations": 0, "migrated_tokens": 0,
+                      "drain_migrated_tokens": 0}
 
-    def _notify_evictions(self, inst: int, node_ids, demoted_ids=(),
-                          host_dropped_ids=()) -> None:
-        """Tiered eviction notification (4-arg rich protocol): the
-        engine reports which evicted nodes were demoted to its host
-        tier (still exploitable at restore cost) vs truly dropped."""
-        self.gs.on_evictions(inst, node_ids, demoted_ids=demoted_ids,
-                             host_dropped_ids=host_dropped_ids)
+    def _notify_evictions(self, inst: int, spans, *, demoted=(),
+                          host_dropped=()) -> None:
+        """Tiered eviction notification — protocol v2: content-addressed
+        PrefixSpans with keyword-only tier outcome (demoted spans are
+        still exploitable at restore cost; host-dropped are gone)."""
+        self.gs.on_evictions(inst, spans, demoted=demoted,
+                             host_dropped=host_dropped)
 
     # ---- request intake -------------------------------------------------
 
@@ -70,8 +72,40 @@ class ClusterRuntime:
         else:
             decision = self.gs.schedule(request, now)
             inst = decision.instance
+            if decision.migration is not None:
+                self._execute_migration(request, inst, decision.migration,
+                                        now)
         self.engines[inst].scheduler.enqueue(request, now)
         return inst
+
+    # ---- tier-to-tier migration (DESIGN.md §9) ---------------------------
+
+    def _execute_migration(self, request: Request, dst: int,
+                           plan: MigrationPlan, now: float) -> None:
+        """Real HostKVStore -> HostKVStore transfer: export the planned
+        span from the source's host tier (whole-node numpy pieces),
+        ingest on the target (re-aligned to ITS tree, host-marked, LRU
+        charged), and feed the executed ranges back to the global
+        forest. The target's §8 restore path then materializes the span
+        on device instead of recomputing the prefill. Degrades safely:
+        whatever part of the plan no longer exists just recomputes."""
+        src_e = self.engines.get(plan.src)
+        dst_e = self.engines.get(dst)
+        if (src_e is None or dst_e is None or src_e.failed
+                or dst_e.host_store is None):
+            return
+        spans = src_e.scheduler.export_host_span(request.tokens,
+                                                 plan.lo, plan.hi)
+        if not spans:
+            return
+        accepted = dst_e.scheduler.ingest_host_span(request.tokens, spans,
+                                                    now)
+        if accepted:
+            request.migrated_len = sum(hi - lo for lo, hi in accepted)
+            self.gs.on_migration(plan.src, dst, request.tokens, accepted,
+                                 now)
+            self.stats["migrations"] += 1
+            self.stats["migrated_tokens"] += request.migrated_len
 
     # ---- the loop ----------------------------------------------------------
 
@@ -136,6 +170,8 @@ class ClusterRuntime:
         for i, eng in self.engines.items():
             if eng.failed:
                 continue
+            if eng.host_store is not None:
+                eng._drain_demotes()   # land in-flight demote DMA first
             if eng.paged:
                 eng.pool.check_invariants()
                 live_reqs = {("req", rid) for rid in eng.live}
@@ -169,12 +205,64 @@ class ClusterRuntime:
     # ---- fault handling --------------------------------------------------------
 
     def fail_instance(self, inst: int, now: float) -> int:
-        """Hard-kill an instance; re-route its in-flight requests."""
+        """Hard-kill an instance; re-route its in-flight requests. Its
+        host tier dies with the host — nothing can migrate out."""
         reqs = self.engines[inst].fail()
         self.gs.on_instance_failure(inst)
         for r in reqs:
             self.submit(r, now)
         return len(reqs)
+
+    def drain_instance(self, inst: int, now: float) -> int:
+        """Graceful drain (planned failover / scale-down): MIGRATE the
+        instance's host-tier entries — hottest first — to the
+        least-loaded surviving instance with a host tier (a move: the
+        source markings transfer), then re-route its in-flight
+        requests. Unlike fail_instance, re-hits on the drained
+        instance's demoted prefixes keep costing a restore, not a
+        recompute. Returns tokens migrated out."""
+        src_e = self.engines[inst]
+        moved = 0
+        targets = [j for j, e in self.engines.items()
+                   if j != inst and not e.failed
+                   and e.host_store is not None
+                   and self.gs.instances[j].alive]
+        if targets and src_e.host_store is not None and not src_e.failed:
+            src_e._drain_demotes()
+            loads = self.gs.loads(now)
+            dst = min(targets, key=lambda j: loads.get(j, 0.0))
+            dst_ls = self.engines[dst].scheduler
+            src_ls = src_e.scheduler
+            # SHALLOW-first: a child span can only land on the target
+            # after its ancestor created the start boundary there
+            # (ingest re-aligns to the target tree); target-budget
+            # overflow still drops by hit-rate, not arrival order
+            for key in sorted(src_ls._host_lru,
+                              key=lambda k: k.depth):
+                nid = src_ls._host_nodes.get(key)
+                node = src_ls.tree.get_node(nid) if nid is not None else None
+                if node is None:
+                    continue
+                tokens = node.full_tokens()
+                end = node.depth_tokens()
+                start = end - len(node.tokens)
+                toks = src_ls._host_lru.get(key, 0)
+                if toks < end - start:
+                    continue   # partial entry: its tail edge is not a
+                               # node boundary anywhere — recompute it
+                spans = src_ls.export_host_span(tokens, start, end)
+                accepted = dst_ls.ingest_host_span(tokens, spans, now)
+                if accepted:
+                    got = sum(hi - lo for lo, hi in accepted)
+                    moved += got
+                    self.gs.on_migration(inst, dst, tokens, accepted, now,
+                                         move=True)
+            self.stats["drain_migrated_tokens"] += moved
+        reqs = src_e.fail()
+        self.gs.remove_instance(inst, now)
+        for r in reqs:
+            self.submit(r, now)
+        return moved
 
     def add_instance(self, model_cfg, params, now: float,
                      engine_cfg: Optional[EngineConfig] = None) -> int:
@@ -183,8 +271,7 @@ class ClusterRuntime:
         ec = dataclasses.replace(engine_cfg or EngineConfig(),
                                  instance_id=inst)
         self.engines[inst] = Engine(model_cfg, params, ec,
-                                    on_evict=self._notify_evictions,
-                                    on_evict_rich=True)
+                                    on_evict=self._notify_evictions)
         self.gs.add_instance(inst,
                              host_capacity_tokens=ec.host_capacity_tokens)
         return inst

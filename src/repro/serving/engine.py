@@ -52,7 +52,6 @@ pjit'd ones from launch/serve.py; the scheduling logic is shared.
 from __future__ import annotations
 
 import dataclasses
-import inspect
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -61,6 +60,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.local_scheduler import Batch, LocalScheduler, LocalSchedulerConfig
+from ..core.radix_tree import PathKey, PrefixSpan
 from ..core.request import Request, RequestState
 from ..models import zoo, transformer as T
 from .kv_cache import PagedKVPool
@@ -123,8 +123,7 @@ def _bucket(n: int) -> int:
 
 class Engine:
     def __init__(self, cfg, params, econf: EngineConfig,
-                 on_evict: Optional[Callable] = None,
-                 on_evict_rich: Optional[bool] = None):
+                 on_evict: Optional[Callable] = None):
         # the demo engine serves full attention; SWA only changes
         # semantics beyond max_context, which the demo never reaches
         self.model_cfg = dataclasses.replace(cfg, sliding_window=0)
@@ -156,25 +155,12 @@ class Engine:
                 fcfs=econf.fcfs,
                 host_capacity_tokens=econf.host_capacity_tokens),
             on_evict=self._on_evict)
+        # External eviction notification — protocol v2 only (DESIGN.md
+        # §9): called as cb(instance_id, evicted_spans, demoted=[...],
+        # host_dropped=[...]) with content-addressed PrefixSpans and
+        # KEYWORD-ONLY tier arguments; GlobalScheduler.on_evictions is
+        # wireable directly (its `now` stays at its default).
         self._ext_evict = on_evict
-        # rich notification protocol: the callback also accepts
-        # demoted_ids= / host_dropped_ids= KEYWORDS (passed by name, so
-        # GlobalScheduler.on_evictions — whose third positional is
-        # `now` — can be wired directly), letting the global scheduler
-        # tell demoted-not-dead nodes from dropped ones. Detection is
-        # by parameter NAME; pass on_evict_rich explicitly for wrapped
-        # callables signature() cannot see through (misclassifying one
-        # as legacy silently discards tier information).
-        self._ext_evict_rich = bool(on_evict_rich)
-        if on_evict is not None and on_evict_rich is None:
-            try:
-                params = inspect.signature(on_evict).parameters
-                self._ext_evict_rich = (
-                    "demoted_ids" in params
-                    or any(p.kind is inspect.Parameter.VAR_KEYWORD
-                           for p in params.values()))
-            except (TypeError, ValueError):
-                pass
         # per-request live state: next input token (+ cache pytree when dense)
         self.live: Dict[int, Dict[str, Any]] = {}
         self.stats = {"reused_tokens": 0, "prefilled_tokens": 0,
@@ -185,7 +171,9 @@ class Engine:
                       "fused_iterations": 0, "fused_padded_tokens": 0,
                       "demoted_tokens": 0, "restored_tokens": 0,
                       "restore_failures": 0, "demote_dispatches": 0,
-                      "restore_dispatches": 0}
+                      "restore_dispatches": 0, "demote_batches": 0,
+                      "demote_batches_overlapped": 0,
+                      "demote_overlap_frac": 0.0}
         self.failed = False
         self.host_store: Optional[HostKVStore] = None
         # restores staged by admissions, flushed once per step
@@ -242,8 +230,8 @@ class Engine:
         self.pool = PagedKVPool(
             self.econf.capacity_tokens // self.econf.page_size,
             self.econf.page_size)
-        # radix node_id -> attention-KV slab {p_j: {"k": [G,1,span,KH,D],..}}
-        self.kv_store: Dict[int, Pytree] = {}
+        # node path key -> attention-KV slab {p_j: {"k": [G,1,span,KH,D],..}}
+        self.kv_store: Dict[PathKey, Pytree] = {}
         # exact-prefix -> recurrent state snapshot (leaf granularity)
         self.state_store: Dict[Tuple[int, ...], Pytree] = {}
         self._cache_spec = self.api.cache_specs(1, self.econf.max_context)
@@ -287,18 +275,41 @@ class Engine:
         return jax.tree.map(lambda a, d: a.at[pidx, sidx].set(d),
                             pages, data)
 
-    def gather_pages_host(self, page_ids: List[int]) -> Any:
-        """Demote-side transfer: gather whole pages from the device
-        pool and land them on host as numpy — ONE bucketed device
-        gather + ONE device->host copy for an entire eviction plan.
-        Padding indices hit the scratch page and are sliced off."""
+    def gather_pages_device(self, page_ids: List[int]) -> Tuple[Any, int]:
+        """Demote-side snapshot: ONE bucketed device gather over an
+        entire eviction plan's pages, into FRESH device buffers — the
+        device->host copy is deferred (PagedHostTier.drain) so it
+        overlaps the step's model dispatch. Padding indices hit the
+        scratch page and are sliced off at drain. Safe against page
+        reuse: the gather is dispatched before any later scatter/step
+        donates the pool, and the device stream executes in dispatch
+        order."""
         n = len(page_ids)
         nb = _bucket(n)
         idx = np.zeros(nb, np.int32)
         idx[:n] = page_ids
         gathered = self._gather_pages_fn(self.pages, jnp.asarray(idx))
         self.stats["demote_dispatches"] += 1
-        return jax.tree.map(lambda a: np.asarray(a)[:n], gathered)
+        return gathered, n
+
+    def _drain_demotes(self) -> None:
+        """Land pending demote bytes host-side (end of step, or forced
+        by a read that needs the store complete)."""
+        ht = self.scheduler.host_tier
+        if ht is not None:
+            ht.drain()
+
+    def _host_entry(self, key):
+        """Store lookup that only forces the pending demote DMA to land
+        when THIS entry is still in flight — ordinary misses (never-
+        demoted nodes) must not break the demote/compute overlap."""
+        e = self.host_store.get(key)
+        if e is None:
+            ht = self.scheduler.host_tier
+            if ht is not None and ht.pending_has(key):
+                ht.drain()
+                e = self.host_store.get(key)
+        return e
 
     # ---- host-side page bookkeeping ----------------------------------------
 
@@ -331,7 +342,7 @@ class Engine:
                 jnp.int32(t.pages[tail_idx]))
             self.stats["seed_copied_pages"] += 1
 
-    def _ensure_free(self, tokens: int) -> None:
+    def _ensure_free(self, tokens: int, now: float = 0.0) -> None:
         """The scheduler's token accounting keeps the pool under
         capacity, but page-granularity fragmentation can briefly exceed
         it: reclaim LRU cached nodes (through the scheduler's own
@@ -346,50 +357,68 @@ class Engine:
                 raise MemoryError(
                     f"KV pool exhausted: need {tokens} tokens, "
                     f"free {self.pool.free_tokens()}, nothing evictable")
-            sch.apply_eviction(plan)
+            sch.apply_eviction(plan, now)
 
     def _on_split(self, head, tail) -> None:
-        """RadixTree split hook: ``head`` keeps its node id but now
-        covers fewer tokens; the new ``tail`` node inherits the deeper
-        page alias before the head's is trimmed — pure refcount moves,
-        no device traffic."""
-        key_h = ("node", head.node_id)
-        t = self.pool.tables.get(key_h)
+        """RadixTree split hook, path-keyed: the TAIL keeps the
+        pre-split key (its end boundary is unchanged), so the existing
+        ``("node", key)`` table — which covers the deeper alias —
+        already sits under the tail's key; the head gets a prefix fork
+        at its new boundary. Pure refcount moves, no device traffic."""
+        key_t = ("node", tail.path_key)        # the pre-split key
+        t = self.pool.tables.get(key_t)
         if t is None:
             return
         d_head = head.depth_tokens()
         d_tail = d_head + len(tail.tokens)
-        key_t = ("node", tail.node_id)
-        if key_t not in self.pool.tables and t.num_tokens >= d_tail:
-            self.pool.fork(key_h, key_t, d_tail)
-        self.pool.trim(key_h, min(d_head, t.num_tokens))
+        key_h = ("node", head.path_key)
+        if key_h in self.pool.tables:          # digest collision guard
+            return
+        if t.num_tokens >= d_tail:
+            # table serves the tail fully; head aliases its prefix
+            self.pool.fork(key_t, key_h, d_head)
+        else:
+            # coverage ends inside the head's span: the alias belongs
+            # to the head alone (same outcome as the pre-§9 head-keyed
+            # trim — tokens between d_head and coverage are dropped)
+            self.pool.fork(key_t, key_h, min(d_head, t.num_tokens))
+            self.pool.release(key_t)
 
     def _on_split_host(self, head, tail) -> None:
         """Split hook for the host tier: a demoted span crossing the
-        new node boundary is split between head and tail entries."""
+        new node boundary is split between head and tail entries. If
+        that span's demote DMA is still in flight, land it first —
+        otherwise the store would miss the split the scheduler's LRU
+        already applied and the two tiers diverge permanently (the
+        deferred drain would file the full span under the tail key)."""
         if self.host_store is not None:
+            ht = self.scheduler.host_tier
+            # at hook time tail.path_key IS the pre-split key
+            if ht is not None and ht.pending_has(tail.path_key):
+                ht.drain()
             self.host_store.on_split(head, tail)
 
     # ---- eviction hook ------------------------------------------------------
 
-    def _on_evict(self, instance_id: int, node_ids: List[int]) -> None:
-        if self.paged and self.host_store is None:
-            for nid in node_ids:
-                self.pool.release(("node", nid))
-        elif not self.paged:
-            for nid in node_ids:
-                self.kv_store.pop(nid, None)
-        # (offload engines: PagedHostTier.demote_many already released
-        # every node table — demoted KV went host-side, the rest died)
+    def _on_evict(self, instance_id: int, spans: List[PrefixSpan], *,
+                  demoted: List[PrefixSpan] = (),
+                  host_dropped: List[PrefixSpan] = ()) -> None:
+        if self.paged:
+            # offload engines: demote_many already released the tables
+            # of spans it SAW, but the scheduler's admission policy may
+            # skip spans entirely (one-shot under host pressure,
+            # ambiguous keys) — release unconditionally; releasing an
+            # already-released table is a no-op, a leaked one would pin
+            # its pages forever (scheduler accounting no longer counts
+            # them, so plan_eviction could never reclaim them)
+            for s in spans:
+                self.pool.release(("node", s.key))
+        else:
+            for s in spans:
+                self.kv_store.pop(s.key, None)
         if self._ext_evict is not None:
-            if self._ext_evict_rich:
-                self._ext_evict(
-                    instance_id, node_ids,
-                    demoted_ids=list(self.scheduler.last_demoted_ids),
-                    host_dropped_ids=list(
-                        self.scheduler.last_host_dropped_ids))
-            else:
-                self._ext_evict(instance_id, node_ids)
+            self._ext_evict(instance_id, spans, demoted=list(demoted),
+                            host_dropped=list(host_dropped))
 
     # ---- admission ----------------------------------------------------------
 
@@ -423,9 +452,9 @@ class Engine:
         best_key, best_len, off = None, 0, 0
         for node in m.path:
             off += len(node.tokens)
-            t = self.pool.tables.get(("node", node.node_id))
+            t = self.pool.tables.get(("node", node.path_key))
             if t is not None and t.num_tokens >= off:
-                best_key, best_len = ("node", node.node_id), off
+                best_key, best_len = ("node", node.path_key), off
         # a fully-cached prompt must still run its LAST token through
         # the model — that forward produces the first output token
         # (same rule as vLLM/SGLang: reuse cap = prompt_len - 1)
@@ -433,26 +462,29 @@ class Engine:
         # host-tier restore plan: demoted spans contiguously extending
         # the aliased prefix (planned BEFORE _ensure_free, revalidated
         # after — freeing room can cascade into host-capacity drops)
-        restore_plan: List[Tuple[int, int, int]] = []
+        restore_plan: List[Tuple[PathKey, int, int, int]] = []
         if self.host_store is not None and best_len == reuse:
             restore_plan, _ = self._host_restore_chain(
                 m, reuse, r.prompt_len - 1)
         rid = ("req", r.request_id)
         need = r.prompt_len - reuse + r.max_new_tokens
         # + one page of headroom for the CoW of a shared partial tail
-        self._ensure_free(need + self.pool.page_size)
+        self._ensure_free(need + self.pool.page_size, now)
         restore_end = reuse
-        for nid, lo, hi in restore_plan:
-            e = self.host_store.get(nid)
-            if e is None or e.start > lo or e.start + e.length < hi:
+        for key, nid, lo, hi in restore_plan:
+            e = self._host_entry(key)
+            if (e is None or e.node_id != nid
+                    or e.start > lo or e.start + e.length < hi):
                 # host entry evicted mid-flight (demote cascade of
-                # _ensure_free overflowed the host budget): fall back
-                # to recomputing the rest of the chain
+                # _ensure_free overflowed the host budget) or rekeyed
+                # under a collided digest: fall back to recomputing
+                # the rest of the chain
                 self.stats["restore_failures"] += 1
                 break
             restore_end = hi
-        restore_plan = [(nid, lo, min(hi, restore_end))
-                        for nid, lo, hi in restore_plan if lo < restore_end]
+        restore_plan = [(key, nid, lo, min(hi, restore_end))
+                        for key, nid, lo, hi in restore_plan
+                        if lo < restore_end]
         if best_key is not None and reuse > 0:
             self.pool.fork(best_key, rid, reuse)
             self.stats["seed_aliased_pages"] += len(
@@ -487,13 +519,16 @@ class Engine:
         self.stats["reused_tokens"] += restore_end
 
     def _host_restore_chain(self, m, boundary: int, limit: int
-                            ) -> Tuple[List[Tuple[int, int, int]], int]:
+                            ) -> Tuple[List[Tuple[PathKey, int, int, int]],
+                                       int]:
         """Walk the match path past the device-aliased ``boundary`` and
         chain host entries that contiguously extend it, stopping at the
         first hole or ``limit`` (= prompt_len - 1, the reuse cap).
-        Returns ([(node_id, lo, hi)], new_boundary) in absolute token
-        depths."""
-        plan: List[Tuple[int, int, int]] = []
+        Entries resolve by path key with node-ownership verification
+        (collision guard); an entry whose demote DMA is still in flight
+        forces a targeted drain. Returns ([(key, node_id, lo, hi)],
+        new_boundary) in absolute token depths."""
+        plan: List[Tuple[PathKey, int, int, int]] = []
         cum = 0
         for node in m.path:
             node_start = cum
@@ -502,20 +537,22 @@ class Engine:
                 continue
             if node_start != boundary or boundary >= limit:
                 break
-            e = self.host_store.get(node.node_id)
-            if e is None or e.start != node_start:
+            e = self._host_entry(node.path_key)
+            if e is None or e.node_id != node.node_id \
+                    or e.start != node_start:
                 break
             take = min(e.length, limit - boundary)
             if take <= 0:
                 break
-            plan.append((node.node_id, node_start, node_start + take))
+            plan.append((node.path_key, node.node_id, node_start,
+                         node_start + take))
             boundary = node_start + take
             if boundary < cum:        # partial span ends the chain
                 break
         return plan, boundary
 
     def _stage_restore(self, r: Request, rid, lo: int, hi: int,
-                       plan: List[Tuple[int, int, int]]) -> None:
+                       plan: List[Tuple[PathKey, int, int, int]]) -> None:
         """Stage the host->device scatter for tokens [lo, hi) of the
         request's sequence: map each restored token onto its (page,
         slot) in the request's freshly appended table and queue the
@@ -527,14 +564,14 @@ class Engine:
         pages_arr = np.asarray(table.pages, np.int32)
         pidx = pages_arr[toks // ps]
         sidx = (toks % ps).astype(np.int32)
-        chunks = [self.host_store.get(nid).slice(a, b)
-                  for nid, a, b in plan]
+        chunks = [self.host_store.get(key).slice(a, b)
+                  for key, _, a, b in plan]
         data = (chunks[0] if len(chunks) == 1
                 else jax.tree.map(lambda *xs: np.concatenate(xs, 0),
                                   *chunks))
         self._pending_restore.append((pidx, sidx, data))
-        for nid, _, _ in plan:
-            self.scheduler.touch_host(nid)
+        for key, _, _, _ in plan:
+            self.scheduler.touch_host(key)
         self.stats["restored_tokens"] += hi - lo
 
     def _flush_restores(self) -> None:
@@ -600,7 +637,7 @@ class Engine:
         into cache[:reuse] (the copies the paged plane exists to avoid)."""
         off = 0
         for node in m.path:
-            slab = self.kv_store.get(node.node_id)
+            slab = self.kv_store.get(node.path_key)
             if slab is None:
                 break
             span = len(node.tokens)
@@ -613,7 +650,7 @@ class Engine:
         # partial tail inside the next node
         if off < m.matched_len and m.last_node is not None \
                 and m.last_node_matched < len(m.last_node.tokens):
-            slab = self.kv_store.get(m.last_node.node_id)
+            slab = self.kv_store.get(m.last_node.path_key)
             if slab is not None:
                 take = m.last_node_matched
                 for pj, c in slab.items():
@@ -669,8 +706,13 @@ class Engine:
     # ---- post-prefill: publish the prompt's KV to the prefix store ----------
 
     def _store_prefix(self, r: Request, now: float) -> None:
+        # re-insert of the path _reserve already counted: mark + publish
+        # without recording a second window-H hit for the same serve
+        # (the hit rate feeds E2's n_j AND the host-tier admission
+        # weighting — double-counting would make every one-shot 'hot')
         path = self.scheduler.tree.insert(
-            r.tokens, instance=self.econf.instance_id, now=now)
+            r.tokens, instance=self.econf.instance_id, now=now,
+            record=False)
         if self.paged:
             # alias the request's pages per radix node: each node's
             # sequence covers the full root->node token path, so any
@@ -684,7 +726,7 @@ class Engine:
             off = 0
             for node in path:
                 off += len(node.tokens)
-                key = ("node", node.node_id)
+                key = ("node", node.path_key)
                 if key not in self.pool.tables:
                     self.pool.fork(rid, key, off)
                     self.scheduler.credit_stored(r.request_id,
@@ -695,7 +737,7 @@ class Engine:
             off = 0
             for node in path:
                 span = len(node.tokens)
-                if node.node_id not in self.kv_store:
+                if node.path_key not in self.kv_store:
                     slab = {}
                     for pj, c in cache.items():
                         slab[pj] = {
@@ -704,7 +746,7 @@ class Engine:
                                 (c[name].shape[0], 1, span,
                                  c[name].shape[3], c[name].shape[4]))
                             for name in ("k", "v") if name in c}
-                    self.kv_store[node.node_id] = slab
+                    self.kv_store[node.path_key] = slab
                     self.scheduler.credit_stored(r.request_id, span)
                 off += span
         # (recurrent archs snapshot mid-prefill at prompt_len - 1 —
@@ -764,6 +806,11 @@ class Engine:
             self.live.pop(r.request_id, None)
             self.pool.release(("req", r.request_id) if self.paged
                               else r.request_id)
+        # land any demote DMA issued this step — its gather was
+        # dispatched BEFORE the model work above, so by now the copy
+        # rode behind compute (demote_overlap_frac measures how often)
+        if self.host_store is not None:
+            self._drain_demotes()
         # aborted requests are terminal too (state FAILED) — surface
         # them so cluster runtimes can account/resubmit
         return finished + aborted

@@ -50,6 +50,10 @@ class SimConfig:
     enable_rebalance: bool = True       # ablation switches
     enable_autoscale: bool = True
     enable_pd_balance: bool = True
+    # tier-to-tier prefix migration (DESIGN.md §9): on rebalance /
+    # explore, ship demoted host spans to the target's host tier
+    # (accounting-only here; charged migrate_time + restore_time)
+    enable_migration: bool = True
     speed_factors: Optional[Dict[int, float]] = None  # stragglers
 
 
@@ -89,7 +93,8 @@ class Simulator:
             window=cfg.window, th_bal=cfg.th_bal,
             imbal_ratio=cfg.imbal_ratio,
             capacity_tokens=cfg.capacity_tokens,
-            host_capacity_tokens=cfg.host_capacity_tokens)
+            host_capacity_tokens=cfg.host_capacity_tokens,
+            enable_migration=cfg.enable_migration)
         if not cfg.enable_rebalance:
             gs_cfg.th_bal = 1e18
         if not cfg.enable_autoscale:
@@ -121,14 +126,34 @@ class Simulator:
         self._ctx_sum: Dict[int, float] = {i: 0.0 for i in self.locals}
         self._ctx_n: Dict[int, int] = {i: 0 for i in self.locals}
 
-    def _notify_evictions(self, inst: int, node_ids) -> None:
+    def _notify_evictions(self, inst: int, spans, *, demoted=(),
+                          host_dropped=()) -> None:
         """Forward local evictions WITH the tier outcome (demoted vs
         truly dropped), so E2 keeps pricing demoted prefixes as
-        restorable on that instance instead of writing them off."""
-        ls = self.locals[inst]
-        self.gs.on_evictions(inst, node_ids,
-                             demoted_ids=ls.last_demoted_ids,
-                             host_dropped_ids=ls.last_host_dropped_ids)
+        restorable on that instance instead of writing them off.
+        Protocol v2: content-addressed spans, keyword-only tiers."""
+        self.gs.on_evictions(inst, spans, demoted=demoted,
+                             host_dropped=host_dropped)
+
+    # ---- tier-to-tier migration (accounting path) ---------------------------
+
+    def _execute_migration(self, r: Request, dst: int, plan, now: float
+                           ) -> None:
+        """Accounting-only HostKVStore-to-HostKVStore move: the source
+        exports its demoted span coverage (no bytes under
+        AccountingHostTier), the target host-marks/charges it, and the
+        global forest learns the executed ranges. The request then pays
+        migrate_time once plus the usual restore_time."""
+        src_ls = self.locals.get(plan.src)
+        if src_ls is None:
+            return
+        spans = src_ls.export_host_span(r.tokens, plan.lo, plan.hi)
+        if not spans:
+            return
+        accepted = self.locals[dst].ingest_host_span(r.tokens, spans, now)
+        if accepted:
+            r.migrated_len = sum(hi - lo for lo, hi in accepted)
+            self.gs.on_migration(plan.src, dst, r.tokens, accepted, now)
 
     # ---- service-time model ------------------------------------------------
 
@@ -147,6 +172,12 @@ class Simulator:
                        if it.phase == "prefill")
         if restored:
             t += self.cm.restore_time(restored)
+        # one-time DCN charge for spans that migrated in for this
+        # request (the restore itself is in restored_len above)
+        migrated = sum(it.migrated_len for it in batch.items
+                       if it.phase == "prefill")
+        if migrated:
+            t += self.cm.migrate_time(migrated)
         sf = self.cfg.speed_factors or {}
         return t * sf.get(inst, 1.0)
 
@@ -185,7 +216,11 @@ class Simulator:
                     r.instance = inst
                     r.scheduled_time = now
                 else:
-                    inst = self.gs.schedule(r, now).instance
+                    decision = self.gs.schedule(r, now)
+                    inst = decision.instance
+                    if decision.migration is not None:
+                        self._execute_migration(r, inst,
+                                                decision.migration, now)
                 self.locals[inst].enqueue(r, now)
                 kick(inst, now)
             else:
@@ -213,11 +248,16 @@ class Simulator:
         # tier — the ablation signal for offload-on vs -off runs.
         for key in ("demoted_tokens", "restored_tokens",
                     "host_dropped_tokens", "restore_hits",
-                    "evicted_tokens"):
+                    "evicted_tokens", "migrated_in_tokens",
+                    "migrated_out_tokens"):
             stats[key] = float(sum(ls.stats[key] for ls
                                    in self.locals.values()))
         stats["restore_hit_frac"] = (stats["restored_tokens"] / total_prompt
                                      if total_prompt else 0.0)
+        stats["migrated_tokens"] = stats["migrated_in_tokens"]
+        stats["migration_hit_frac"] = (
+            stats["migrated_in_tokens"] / total_prompt
+            if total_prompt else 0.0)
         stats["host_used_tokens"] = float(sum(
             ls.host_used_tokens for ls in self.locals.values()))
         return SimResult(finished, makespan=now, stats=stats)

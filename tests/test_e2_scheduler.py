@@ -129,7 +129,7 @@ def test_eviction_notification_updates_tree():
     d = gs.schedule(req(list(range(800))), now=0.0)
     nodes = gs.tree.nodes_cached_on(d.instance)
     assert nodes
-    gs.on_evictions(d.instance, [n.node_id for n in nodes], now=0.1)
+    gs.on_evictions(d.instance, [n.span() for n in nodes], now=0.1)
     assert gs.tree.nodes_cached_on(d.instance) == []
 
 

@@ -12,7 +12,7 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCHS, reduced
-from repro.core import GlobalScheduler, GlobalSchedulerConfig
+from repro.core import GlobalScheduler, GlobalSchedulerConfig, path_key_of
 from repro.core.request import Request, RequestState
 from repro.models import zoo
 from repro.serving.cluster import ClusterRuntime
@@ -88,31 +88,35 @@ def test_host_store_roundtrip():
     st = HostKVStore()
     kv = {"p0": {"g0": {"k": np.arange(12, dtype=np.float32).reshape(3, 2, 2),
                         "v": np.ones((3, 2, 2), np.float32)}}}
-    st.put(7, start=16, kv=kv, length=3)
-    assert 7 in st and st.used_tokens == 3
-    e = st.get(7)
+    key = path_key_of(tuple(range(19)))
+    st.put(key, start=16, kv=kv, length=3, node_id=7)
+    assert key in st and st.used_tokens == 3
+    e = st.get(key)
     sl = e.slice(17, 19)
     np.testing.assert_array_equal(sl["p0"]["g0"]["k"],
                                   kv["p0"]["g0"]["k"][1:3])
     st.check_invariants()
-    assert st.drop(7) == 3
-    assert st.used_tokens == 0 and st.get(7) is None
+    assert st.drop(key) == 3
+    assert st.used_tokens == 0 and st.get(key) is None
     st.check_invariants()
 
 
 def test_host_store_split_follows_radix_split():
     """A node split must split the demoted span so each entry again
-    covers exactly its node's tokens — numpy slicing, bit-identical."""
+    covers exactly its node's tokens — numpy slicing, bit-identical.
+    Path-keyed: the TAIL keeps the pre-split key (same end boundary),
+    the head part lands under the head's new key."""
     from repro.core.radix_tree import RadixTree
     tree = RadixTree()
     st = HostKVStore()
     tree.split_hooks.append(st.on_split)
     node = tree.insert(range(10))[0]
     kv = {"p0": {"g0": {"k": np.arange(10, dtype=np.float32)[:, None, None]}}}
-    st.put(node.node_id, start=0, kv=kv, length=10)
+    st.put(node.path_key, start=0, kv=kv, length=10, node_id=node.node_id)
     tree.insert([0, 1, 2, 3, 99])           # splits node at 4
     tail = node.children[4]
-    head_e, tail_e = st.get(node.node_id), st.get(tail.node_id)
+    assert tail.path_key == path_key_of(tuple(range(10)))  # key unchanged
+    head_e, tail_e = st.get(node.path_key), st.get(tail.path_key)
     assert head_e.length == 4 and head_e.start == 0
     assert tail_e.length == 6 and tail_e.start == 4
     np.testing.assert_array_equal(
@@ -188,8 +192,8 @@ def test_restore_failure_falls_back_to_recompute(small_model):
                 # between restore planning and staging (_ensure_free
                 # runs in between and can host-drop in production)
                 plan, end = _orig(m, boundary, limit)
-                for nid, _, _ in plan:
-                    _eng.scheduler.drop_host(nid)
+                for key, _, _, _ in plan:
+                    _eng.scheduler.drop_host(key)
                 return plan, end
 
             eng._host_restore_chain = chain_then_lose
@@ -300,8 +304,8 @@ def test_e2_exploits_demoted_prefix_via_restore():
     prefix = list(range(4000))
     d0 = gs.schedule(Request(tokens=tuple(prefix + [1]),
                              max_new_tokens=4), now=0.0)
-    nids = [n.node_id for n in gs.tree.nodes_cached_on(d0.instance)]
-    gs.on_evictions(d0.instance, nids, now=0.1, demoted_ids=nids)
+    spans = [n.span() for n in gs.tree.nodes_cached_on(d0.instance)]
+    gs.on_evictions(d0.instance, spans, now=0.1, demoted=spans)
     inst = gs.instances[d0.instance]
     assert inst.host_cached_tokens > 0
     m = gs.tree.match(tuple(prefix + [2]), now=0.2)
@@ -322,9 +326,9 @@ def test_e2_host_dropped_prefix_is_gone():
     prefix = list(range(3000))
     d0 = gs.schedule(Request(tokens=tuple(prefix + [1]),
                              max_new_tokens=4), now=0.0)
-    nids = [n.node_id for n in gs.tree.nodes_cached_on(d0.instance)]
-    gs.on_evictions(d0.instance, nids, now=0.1, demoted_ids=nids)
-    gs.on_evictions(d0.instance, [], now=0.2, host_dropped_ids=nids)
+    spans = [n.span() for n in gs.tree.nodes_cached_on(d0.instance)]
+    gs.on_evictions(d0.instance, spans, now=0.1, demoted=spans)
+    gs.on_evictions(d0.instance, [], now=0.2, host_dropped=spans)
     assert gs.instances[d0.instance].host_cached_tokens == 0
     m = gs.tree.match(tuple(prefix + [2]), now=0.3)
     assert m.per_instance_host_len.get(d0.instance, 0) == 0
@@ -378,9 +382,9 @@ def test_demote_and_host_drop_same_notification_prunes():
     d0 = gs.schedule(Request(tokens=tuple(prefix), max_new_tokens=4),
                      now=0.0)
     gs.tree.window = 0.0            # age out window-H hits
-    nids = [n.node_id for n in gs.tree.nodes_cached_on(d0.instance)]
-    gs.on_evictions(d0.instance, nids, now=1e9, demoted_ids=nids,
-                    host_dropped_ids=nids)
+    spans = [n.span() for n in gs.tree.nodes_cached_on(d0.instance)]
+    gs.on_evictions(d0.instance, spans, now=1e9, demoted=spans,
+                    host_dropped=spans)
     assert gs.tree.total_nodes() == 0, "dead dual-tier node leaked"
     assert gs.instances[d0.instance].host_cached_tokens == 0
 
@@ -394,8 +398,8 @@ def test_host_gauge_survives_restore_redemote_cycle():
     d0 = gs.schedule(Request(tokens=tuple(prefix + [1]),
                              max_new_tokens=4), now=0.0)
     inst = gs.instances[d0.instance]
-    nids = [n.node_id for n in gs.tree.nodes_cached_on(d0.instance)]
-    gs.on_evictions(d0.instance, nids, now=0.1, demoted_ids=nids)
+    spans = [n.span() for n in gs.tree.nodes_cached_on(d0.instance)]
+    gs.on_evictions(d0.instance, spans, now=0.1, demoted=spans)
     first = inst.host_cached_tokens
     assert first > 0
     # restore (exploit re-hit) — entry stays resident host-side
@@ -403,13 +407,13 @@ def test_host_gauge_survives_restore_redemote_cycle():
                 now=0.2)
     assert inst.host_cached_tokens == first
     # re-demotion of the restored nodes: no double count
-    nids2 = [n.node_id for n in gs.tree.nodes_cached_on(d0.instance)]
-    gs.on_evictions(d0.instance, nids2, now=0.3, demoted_ids=nids2)
+    spans2 = [n.span() for n in gs.tree.nodes_cached_on(d0.instance)]
+    gs.on_evictions(d0.instance, spans2, now=0.3, demoted=spans2)
     assert inst.host_cached_tokens <= first + 10  # only new split tails
     # final host drop zeroes the gauge without relying on the clamp
-    all_host = [n.node_id for n in gs.tree.iter_nodes()
+    all_host = [n.span() for n in gs.tree.iter_nodes()
                 if d0.instance in n.host_instances]
-    gs.on_evictions(d0.instance, [], now=0.4, host_dropped_ids=all_host)
+    gs.on_evictions(d0.instance, [], now=0.4, host_dropped=all_host)
     assert inst.host_cached_tokens == 0
 
 
@@ -425,9 +429,9 @@ def test_global_cached_gauge_accounts_unclamped():
     # two 900-token explores: raw gauge 1800 (old code clamped at 1000)
     assert inst.cached_tokens == 1800
     assert inst.device_cached_est() == 1000
-    nids = [n.node_id for n in gs.tree.nodes_cached_on(0)
-            if n.tokens[0] == 0]
-    gs.on_evictions(0, nids, now=0.2)
+    spans = [n.span() for n in gs.tree.nodes_cached_on(0)
+             if n.tokens[0] == 0]
+    gs.on_evictions(0, spans, now=0.2)
     # subtracting the evicted 900 leaves the OTHER prompt's 900 intact
     # (the old clamped gauge would understate this as 100)
     assert inst.cached_tokens == 900

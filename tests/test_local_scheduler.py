@@ -118,7 +118,8 @@ def test_eviction_under_memory_pressure_notifies_global():
     evictions = []
     ls = LocalScheduler(cfg(capacity_tokens=600, chunk_size=512,
                             max_batch_tokens=2048),
-                        on_evict=lambda i, ids: evictions.append((i, ids)))
+                        on_evict=lambda i, spans, **tiers:
+                            evictions.append((i, spans)))
     r1 = req(range(0, 400), out=1)
     run_to_completion(ls, [r1])
     r2 = req(range(1000, 1400), out=1, t=1.0)   # doesn't fit next to r1

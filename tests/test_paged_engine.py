@@ -201,17 +201,18 @@ def test_radix_tree_node_index():
 
 
 def test_on_evictions_uses_index(small_model):
-    """Global scheduler eviction notifications resolve nodes through
-    the index and stay consistent with a full-tree walk."""
+    """Global scheduler eviction notifications resolve spans through
+    the content-addressed index and stay consistent with a full-tree
+    walk — even when the sender's node ids mean nothing here."""
     from repro.core.global_scheduler import GlobalScheduler
     gs = GlobalScheduler(num_instances=2)
     r = Request(tokens=(1, 2, 3, 4, 5, 6), max_new_tokens=2)
     gs.schedule(r, 0.0)
     inst = r.instance
-    nids = [n.node_id for n in gs.tree.iter_nodes()
-            if inst in n.instances]
-    assert nids
+    spans = [n.span() for n in gs.tree.iter_nodes()
+             if inst in n.instances]
+    assert spans
     before = gs.instances[inst].cached_tokens
-    gs.on_evictions(inst, nids, now=0.0)
+    gs.on_evictions(inst, spans, now=0.0)
     assert gs.instances[inst].cached_tokens < before
     assert all(inst not in n.instances for n in gs.tree.iter_nodes())

@@ -1,0 +1,583 @@
+"""Content-addressed prefix identity + tier-to-tier migration
+(DESIGN.md §9).
+
+Covers the acceptance criteria of the path-keyed refactor:
+
+  * path keys are maintained incrementally through inserts/splits and
+    name the same content in every tree;
+  * the global forest stays consistent with every local scheduler under
+    randomized evict/demote/split/host-drop/migrate schedules when the
+    local trees allocate node ids INDEPENDENTLY and overlapping (no
+    shared counter — ids are deliberately colliding across trees);
+  * a crafted digest collision degrades to recompute, never to another
+    prefix's KV;
+  * a migrated prefix restores on the TARGET instance token-exactly vs
+    the dense oracle (real HostKVStore -> HostKVStore bytes);
+  * drain migration moves a dying instance's host tier instead of
+    recomputing it;
+  * the demote DMA double-buffer overlaps compute and reports
+    demote_overlap_frac.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.core import (AccountingHostTier, GlobalScheduler,
+                        GlobalSchedulerConfig, LocalScheduler,
+                        LocalSchedulerConfig, PathKey, PrefixSpan,
+                        cost_model_for, path_key_of)
+from repro.core.radix_tree import _HASH_MOD, RadixTree
+from repro.core.request import Request
+from repro.models import zoo
+from repro.serving.cluster import ClusterRuntime
+from repro.serving.engine import Engine, EngineConfig
+
+
+# ---------------------------------------------------------------------------
+# path-key maintenance (unit)
+# ---------------------------------------------------------------------------
+
+def test_path_keys_incremental_through_splits():
+    t = RadixTree()
+    leaf = t.insert(range(10))[0]
+    assert leaf.path_key == path_key_of(tuple(range(10)))
+    t.insert([0, 1, 2, 3, 99])          # splits at depth 4
+    head = t.root.children[0]
+    tail = head.children[4]
+    # the head gets a fresh key at the new boundary; the TAIL keeps the
+    # original key — its end boundary (root->10) is unchanged
+    assert head.path_key == path_key_of((0, 1, 2, 3))
+    assert tail.path_key == path_key_of(tuple(range(10)))
+    assert t.node_by_key(head.path_key) is head
+    assert t.node_by_key(tail.path_key) is tail
+    assert head.full_tokens() == (0, 1, 2, 3)
+    assert tail.full_tokens() == tuple(range(10))
+
+
+def test_resolve_span_across_differently_split_trees():
+    """A span named by one tree's (coarse) node resolves to the chain
+    of finer nodes in another tree — the cross-tree protocol core."""
+    coarse = RadixTree()
+    n = coarse.insert(range(12))[0]
+    fine = RadixTree()
+    fine.insert(range(12), instance=0)
+    fine.insert([0, 1, 2, 7], instance=0)       # boundary at 3
+    fine.insert(list(range(8)) + [9], instance=0)  # boundary at 8
+    chain = fine.resolve_span(n.span())
+    assert sum(len(c.tokens) for c in chain) == 12
+    assert [c.path_key.depth for c in chain] == [12, 8, 3]
+
+
+def test_collision_is_ambiguous_and_verifiable():
+    """Two different paths with identical (digest, depth): index marks
+    the key ambiguous; only full-path verification resolves it."""
+    t = RadixTree()
+    a = t.insert([5, 1])[0]
+    b = t.insert([5 + _HASH_MOD, 1])[0]
+    assert a.path_key == b.path_key
+    assert t.key_ambiguous(a.path_key)
+    assert t.node_by_key(a.path_key) is None
+    assert t.node_by_key(a.path_key, tokens=(5, 1)) is a
+    assert t.node_by_key(a.path_key, tokens=(5 + _HASH_MOD, 1)) is b
+    assert t.resolve_span(a.span()) == []       # no-tokens resolution: no-op
+
+
+# ---------------------------------------------------------------------------
+# property: global/local consistency with randomized, colliding node ids
+# ---------------------------------------------------------------------------
+
+class _Harness:
+    """GlobalScheduler + N LocalSchedulers wired over protocol v2, with
+    deliberately overlapping per-instance node-id spaces."""
+
+    def __init__(self, n=3, rng=None, host_cap=4000, dev_cap=1200):
+        rng = rng or np.random.default_rng(0)
+        self.gs = GlobalScheduler(num_instances=n,
+                                  config=GlobalSchedulerConfig(
+                                      th_bal=1e9, capacity_tokens=dev_cap,
+                                      host_capacity_tokens=host_cap))
+        self.locals = {}
+        for i in range(n):
+            ls = LocalScheduler(
+                LocalSchedulerConfig(instance_id=i, capacity_tokens=dev_cap,
+                                     chunk_size=4096, max_batch_tokens=8192,
+                                     host_capacity_tokens=host_cap),
+                host_tier=AccountingHostTier(),
+                # ids collide across instances AND with the global tree
+                node_id_start=int(rng.integers(0, 5)))
+            ls.on_evict = self._notify(i)
+            self.locals[i] = ls
+
+    def _notify(self, inst):
+        def cb(i, spans, demoted=(), host_dropped=()):
+            self.gs.on_evictions(inst, spans, demoted=demoted,
+                                 host_dropped=host_dropped)
+        return cb
+
+    def serve(self, tokens, now, out=2):
+        r = Request(tokens=tuple(tokens), max_new_tokens=out)
+        d = self.gs.schedule(r, now)
+        if d.migration is not None:
+            src = self.locals[d.migration.src]
+            spans = src.export_host_span(r.tokens, d.migration.lo,
+                                         d.migration.hi)
+            acc = self.locals[d.instance].ingest_host_span(r.tokens, spans,
+                                                           now)
+            if acc:
+                self.gs.on_migration(d.migration.src, d.instance, r.tokens,
+                                     acc, now)
+        ls = self.locals[d.instance]
+        ls.enqueue(r, now)
+        done, t = [], now
+        for _ in range(500):
+            t += 0.01
+            done = ls.complete_iteration(ls.form_batch(t), t)
+            if done:
+                break
+        assert done, "request starved in property harness"
+        self.gs.on_request_complete(r, t)
+        return r, d
+
+    def migrate_random(self, rng, now):
+        srcs = [i for i, ls in self.locals.items() if ls._host_lru]
+        if not srcs:
+            return
+        si = int(rng.choice(srcs))
+        src = self.locals[si]
+        key = list(src._host_lru)[int(rng.integers(len(src._host_lru)))]
+        nid = src._host_nodes.get(key)
+        node = src.tree.get_node(nid) if nid is not None else None
+        if node is None:
+            return
+        end = node.depth_tokens()
+        start = end - len(node.tokens)
+        if src._host_lru[key] < end - start:
+            return                       # partial entries don't migrate
+        di = int(rng.choice([i for i in self.locals if i != si]))
+        tokens = node.full_tokens()
+        spans = src.export_host_span(tokens, start, end)
+        acc = self.locals[di].ingest_host_span(tokens, spans, now)
+        if acc:
+            self.gs.on_migration(si, di, tokens, acc, now)
+
+    def drop_random(self, rng):
+        cands = [i for i, ls in self.locals.items() if ls._host_lru]
+        if not cands:
+            return
+        i = int(rng.choice(cands))
+        ls = self.locals[i]
+        key = list(ls._host_lru)[int(rng.integers(len(ls._host_lru)))]
+        ls.drop_host(key)
+
+    def check_consistent(self, probes):
+        """The core §9 invariant: for every instance, the global forest
+        and the instance's own tree agree on the reusable device/host
+        coverage of any prompt — without any shared node-id space."""
+        for i, ls in self.locals.items():
+            for probe in probes:
+                _, gd, gh = self.gs.tree.tiered_match(probe, i)
+                _, ld, lh = ls.tree.tiered_match(probe, i)
+                assert (gd, gh) == (ld, lh), (
+                    f"instance {i}: global ({gd},{gh}) != local ({ld},{lh}) "
+                    f"for probe head {probe[:3]}")
+        for i, inst in self.gs.instances.items():
+            assert inst.cached_tokens >= 0
+            assert inst.host_cached_tokens >= 0
+
+
+@pytest.mark.parametrize("seed", [1, 7, 23])
+def test_global_forest_consistency_randomized(seed):
+    rng = np.random.default_rng(seed)
+    h = _Harness(n=3, rng=rng)
+    prefixes = [tuple(rng.integers(1, 1 << 20, int(rng.integers(120, 400)))
+                      .tolist()) for _ in range(4)]
+    now = 0.0
+    probes = []
+    for step in range(60):
+        now += float(rng.uniform(0.01, 0.2))
+        op = rng.random()
+        if op < 0.55:
+            # shared-prefix hit (splits trees at random suffix points)
+            pref = prefixes[int(rng.integers(len(prefixes)))]
+            cut = int(rng.integers(len(pref) // 2, len(pref)))
+            toks = pref[:cut] + tuple(
+                rng.integers(1, 1 << 20, int(rng.integers(1, 30))).tolist())
+        elif op < 0.85:
+            # unique prompt (drives eviction/demotion pressure)
+            toks = tuple(rng.integers(1, 1 << 20,
+                                      int(rng.integers(200, 700))).tolist())
+        elif op < 0.93:
+            h.migrate_random(rng, now)
+            continue
+        else:
+            h.drop_random(rng)
+            continue
+        r, _ = h.serve(toks, now)
+        probes.append(r.tokens)
+    probe_set = [probes[int(i)] for i in
+                 rng.integers(0, len(probes), 12)] + prefixes
+    h.check_consistent(probe_set)
+    # the schedule must actually have exercised the tier machinery
+    total = {k: sum(ls.stats[k] for ls in h.locals.values())
+             for k in ("demoted_tokens", "host_dropped_tokens",
+                       "evicted_tokens")}
+    assert total["evicted_tokens"] > 0 and total["demoted_tokens"] > 0
+
+
+def test_collision_degrades_to_recompute_not_corruption():
+    """Crafted digest collision: colliding spans are never demoted
+    under ambiguous keys, notifications no-op, serving completes, and
+    the two prefixes never alias each other's accounting."""
+    h = _Harness(n=2, dev_cap=900, host_cap=2000)
+    A = (5,) + tuple(range(100, 500))
+    B = (5 + _HASH_MOD,) + tuple(range(100, 500))   # collides node-by-node
+    now = 0.0
+    for _ in range(3):
+        for toks in (A + (1,), B + (1,), A + (2,), B + (2,)):
+            now += 0.05
+            h.serve(toks, now)
+        # unique pressure forces evict/demote of the colliding paths
+        for j in range(3):
+            now += 0.05
+            h.serve(tuple(np.random.default_rng(int(now * 100) + j)
+                          .integers(1, 1 << 20, 600).tolist()), now)
+    skipped = sum(ls.stats["demote_skipped_tokens"]
+                  for ls in h.locals.values())
+    assert skipped > 0, "collision never hit the demote path"
+    for ls in h.locals.values():
+        # no entry may sit under an ambiguous key it does not own
+        for key, nid in ls._host_nodes.items():
+            node = ls.tree.get_node(nid)
+            assert node is not None and node.path_key == key
+        assert ls.host_used_tokens == sum(ls._host_lru.values())
+    for inst in h.gs.instances.values():
+        assert inst.cached_tokens >= 0 and inst.host_cached_tokens >= 0
+
+
+def _mini_ls(host_cap=1000, inst=0):
+    return LocalScheduler(
+        LocalSchedulerConfig(instance_id=inst, capacity_tokens=4000,
+                             chunk_size=4096, max_batch_tokens=8192,
+                             host_capacity_tokens=host_cap),
+        host_tier=AccountingHostTier())
+
+
+def test_ingest_needs_shallow_first_and_clamps_partial_residency():
+    """Migration target side: a child span only lands after its
+    ancestor created the start boundary (the drain path ships
+    shallow-first), and an already-resident PARTIAL entry must clamp
+    the accepted range to what actually exists."""
+    src = _mini_ls()
+    T = tuple(range(40_000, 40_010))
+    # src: nodes [0,5) and [5,10) both host-resident
+    parent = src.tree.insert(T[:5])[-1]
+    child = src.tree.insert(T)[-1]
+    for n, ln in ((parent, 5), (child, 5)):
+        src._host_lru[n.path_key] = ln
+        src._host_nodes[n.path_key] = n.node_id
+        src.host_used_tokens += ln
+        n.host_instances.add(0)
+    # child-first is structurally rejected on a fresh target...
+    dst = _mini_ls(inst=1)
+    spans_child = src.export_host_span(T, 5, 10)
+    assert dst.ingest_host_span(T, spans_child, 0.0) == []
+    # ...shallow-first transfers everything
+    dst2 = _mini_ls(inst=1)
+    acc1 = dst2.ingest_host_span(T, src.export_host_span(T, 0, 5), 0.0)
+    acc2 = dst2.ingest_host_span(T, src.export_host_span(T, 5, 10), 0.0)
+    assert acc1 == [(0, 5)] and acc2 == [(5, 10)]
+    assert dst2.host_used_tokens == 10
+    # partial residency: target holds only 3 of the 5-token node —
+    # accepted must stop at token 3, not claim the full node
+    dst3 = _mini_ls(inst=1)
+    p3 = dst3.tree.insert(T[:5])[-1]
+    dst3._host_lru[p3.path_key] = 3
+    dst3._host_nodes[p3.path_key] = p3.node_id
+    dst3.host_used_tokens = 3
+    p3.host_instances.add(1)
+    acc = dst3.ingest_host_span(T, [(0, 5, None)], 0.0)
+    assert acc == [(0, 3)], acc
+
+
+def test_split_during_pending_demote_stays_consistent(small_model):
+    """A radix split landing while the span's demote DMA is still in
+    flight must force the bytes down first — otherwise the store files
+    the full span under the tail key after the scheduler's LRU already
+    split it, and the tiers diverge permanently."""
+    cfg, api, params = small_model
+    eng = Engine(cfg, params, _econf(capacity_tokens=640,
+                                     max_context=64))
+    ls = eng.scheduler
+    toks = tuple(np.random.default_rng(3)
+                 .integers(1, cfg.vocab_size, 24).tolist())
+    r = Request(tokens=toks, max_new_tokens=2)
+    _run_requests(lambda q, t: ls.enqueue(q, t), eng.step, [r])
+    node = ls.tree.match(toks).path[-1]
+    plan = ls.tree.plan_eviction(0, len(toks) + 2)
+    assert any(n is node for n in plan)
+    ls.apply_eviction(plan, 1.0)          # demote DISPATCHED, not drained
+    assert eng.scheduler.host_tier._pending, "demote landed too early"
+    # a diverging prompt splits the demoted node mid-span
+    ls.tree.insert(toks[:10] + (7,), now=1.1)
+    eng._drain_demotes()
+    assert set(ls._host_lru) == set(eng.host_store.entries), \
+        "host tiers diverged across a split during pending demote"
+    eng.host_store.check_invariants()
+    assert ls.host_used_tokens == eng.host_store.used_tokens
+
+
+def test_hot_prefix_outlives_one_shot_under_host_pressure():
+    """The hit-rate-weighted admission must see PRE-eviction heat
+    (tree.evict drops the instance's hit history): under host-budget
+    pressure a re-hit prefix demotes while a one-shot prompt is
+    dropped, not the other way around."""
+    ls = LocalScheduler(
+        LocalSchedulerConfig(instance_id=0, capacity_tokens=700,
+                             chunk_size=4096, max_batch_tokens=8192,
+                             host_capacity_tokens=350),
+        host_tier=AccountingHostTier())
+
+    def serve(tokens, now):
+        r = Request(tokens=tuple(tokens), max_new_tokens=2)
+        ls.enqueue(r, now)
+        done, t = [], now
+        while not done:
+            t += 0.01
+            done = ls.complete_iteration(ls.form_batch(t), t)
+        return r
+
+    hot = tuple(range(10_000, 10_300))
+    serve(tuple(range(20_000, 20_300)) + (3,), 0.0)   # one-shot (older)
+    serve(hot + (1,), 0.1)
+    serve(hot + (2,), 0.2)             # 2nd hit: window-H heat > 1
+    # force an eviction pass over everything unpinned. The one-shot is
+    # LRU-older, so it demotes first and fills the 350-token budget;
+    # the hot span then demotes ONLY because its pre-eviction heat
+    # overrides the budget-pressure skip, and the weighted overflow
+    # must drop the one-shot, not it.
+    serve(tuple(range(30_000, 30_600)) + (4,), 0.3)
+    resident_heads = {ls.tree.get_node(nid).full_tokens()[:3]
+                      for nid in ls._host_nodes.values()
+                      if ls.tree.get_node(nid) is not None
+                      and len(ls.tree.get_node(nid).full_tokens()) >= 3}
+    assert any(d == hot[:3] for d in resident_heads), \
+        "re-hit prefix was dropped instead of demoted"
+    assert ls.host_used_tokens <= 350
+
+
+def test_skipped_demotes_release_pool_pages(small_model):
+    """Spans the admission policy skips (one-shot under a tiny host
+    budget) must still release their pool tables — otherwise the pages
+    leak (unaccounted by the scheduler, unreachable by plan_eviction)
+    and the pool wedges."""
+    cfg, api, params = small_model
+    eng = Engine(cfg, params, _econf(host_capacity_tokens=16))
+    rng = np.random.default_rng(13)
+    reqs = [Request(tokens=tuple(rng.integers(1, cfg.vocab_size, 40)
+                                 .tolist()), max_new_tokens=2)
+            for _ in range(14)]
+    _run_requests(lambda r, t: eng.scheduler.enqueue(r, t), eng.step, reqs)
+    assert eng.scheduler.stats["demote_skipped_tokens"] > 0, \
+        "tiny host budget never skipped a demote"
+    eng.pool.check_invariants()
+    # every surviving node table must belong to a node the tree still
+    # device-marks — skipped spans may not pin pages from the grave
+    marked = {("node", n.path_key)
+              for n in eng.scheduler.tree.nodes_cached_on(0)}
+    node_tables = {k for k in eng.pool.tables
+                  if isinstance(k, tuple) and k[0] == "node"}
+    assert node_tables <= marked, (
+        f"leaked node tables: {node_tables - marked}")
+
+
+# ---------------------------------------------------------------------------
+# engine-level: migrated prefix is token-exact vs the dense oracle
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = dataclasses.replace(reduced(ARCHS["smollm-360m"]), n_layers=2,
+                              dtype="float32")
+    api = zoo.build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    return cfg, api, params
+
+
+def _econf(**kw):
+    base = dict(max_context=64, chunk_size=16, max_batch_tokens=64,
+                capacity_tokens=160, page_size=8, paged=True,
+                host_capacity_tokens=4096)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def _run_requests(submit, step, reqs, max_iters=4000):
+    now, done = 0.0, []
+    for r in reqs:
+        submit(r, now)
+    for _ in range(max_iters):
+        done += step(now)
+        now += 0.01
+        if len(done) >= len(reqs):
+            return done
+    raise RuntimeError("did not converge")
+
+
+def _dense_outputs(cfg, params, reqs):
+    eng = Engine(cfg, params, _econf(paged=False, host_capacity_tokens=0))
+    done = _run_requests(lambda r, t: eng.scheduler.enqueue(r, t),
+                         eng.step, reqs)
+    return {tuple(r.tokens): list(r.output_tokens) for r in done}
+
+
+def _clone(reqs):
+    return [Request(tokens=r.tokens, max_new_tokens=r.max_new_tokens)
+            for r in reqs]
+
+
+def _mk_cluster(cfg, params):
+    """2-instance offload cluster with organic rebalance OFF (tiny toy
+    loads trip th_bal instantly and scatter the warm set) and 70B cost
+    pricing, so the migrate-vs-recompute arbitration sees per-token
+    prefill dominate the per-transfer constants as it does at scale."""
+    econf = _econf()
+    return ClusterRuntime(
+        cfg, params, num_instances=2, engine_cfg=econf,
+        scheduler_cfg=GlobalSchedulerConfig(
+            th_bal=1e9, capacity_tokens=econf.capacity_tokens,
+            host_capacity_tokens=econf.host_capacity_tokens),
+        cost_model=cost_model_for("llama3-70b"))
+
+
+def _mk_workload(cfg, shared, seed):
+    """Warm the shared prefix, thrash it to the host tier with uniques,
+    then re-hit it — the re-hits are what migration must serve."""
+    rng = np.random.default_rng(seed)
+    warm = [Request(tokens=shared + tuple(rng.integers(
+                1, cfg.vocab_size, 6).tolist()), max_new_tokens=3)
+            for _ in range(2)]
+    # enough unique volume that EVERY instance's pool thrashes (E2
+    # spreads the flood across the cluster)
+    thrash = [Request(tokens=tuple(rng.integers(
+                  1, cfg.vocab_size, 44).tolist()), max_new_tokens=2)
+              for _ in range(10)]
+    rehits = [Request(tokens=shared + tuple(rng.integers(
+                  1, cfg.vocab_size, 7).tolist()), max_new_tokens=3)
+              for _ in range(3)]
+    return warm, thrash, rehits
+
+
+def test_migrated_prefix_token_exact_vs_dense_oracle(small_model):
+    """Rebalance-triggered migration on the REAL byte path: the demoted
+    span ships HostKVStore -> HostKVStore and restores on the target;
+    outputs must match the dense oracle token-for-token."""
+    cfg, api, params = small_model
+    shared = tuple(np.random.default_rng(31)
+                   .integers(1, cfg.vocab_size, 32).tolist())
+    warm, thrash, rehits = _mk_workload(cfg, shared, 31)
+    oracle = _dense_outputs(cfg, params,
+                            _clone(warm) + _clone(thrash) + _clone(rehits))
+
+    rt = _mk_cluster(cfg, params)
+    now, done = 0.0, []
+
+    def pump(reqs, target):
+        nonlocal now
+        for r in reqs:
+            rt.submit(r, now)
+        for _ in range(4000):
+            done.extend(rt.step(now))
+            rt.check_invariants()
+            now += 0.01
+            if len(done) >= target:
+                return
+        raise RuntimeError("cluster did not converge")
+
+    # 1. warm, THEN thrash: the warm pair exploits onto one instance
+    #    and finishes (unpinning its path) before the unique flood
+    #    makes the shared prefix the LRU eviction victim -> demoted
+    pump(warm, len(warm))
+    pump(thrash, len(warm) + len(thrash))
+    srcs = [i for i, e in rt.engines.items()
+            if any(k.depth == len(shared)
+                   for k in e.scheduler._host_lru)]
+    assert srcs, "pressure never demoted the shared prefix"
+    i0 = srcs[0]
+    # 2. flag i0 heavy: exploit traffic redirects (rebalance) and the
+    #    redirect target pulls the demoted span via migration
+    rt.gs._redirects = {i0: 1 - i0}
+    pump(rehits, len(warm) + len(thrash) + len(rehits))
+    assert rt.stats["migrated_tokens"] > 0, "rebalance never migrated"
+    tgt = rt.engines[1 - i0]
+    assert tgt.stats["restored_tokens"] > 0, \
+        "migrated span never restored on the target"
+    got = {tuple(r.tokens): list(r.output_tokens) for r in done}
+    assert got == oracle, "migrated-prefix outputs diverged from dense"
+
+
+def test_drain_migrates_host_tier(small_model):
+    """Graceful drain ships the dying instance's host entries to a
+    survivor; re-hits restore there instead of recomputing, and stay
+    token-exact."""
+    cfg, api, params = small_model
+    shared = tuple(np.random.default_rng(41)
+                   .integers(1, cfg.vocab_size, 32).tolist())
+    warm, thrash, rehits = _mk_workload(cfg, shared, 41)
+    oracle = _dense_outputs(cfg, params,
+                            _clone(warm) + _clone(thrash) + _clone(rehits))
+    rt = _mk_cluster(cfg, params)
+    now, done = 0.0, []
+
+    def pump(reqs, target):
+        nonlocal now
+        for r in reqs:
+            rt.submit(r, now)
+        for _ in range(4000):
+            done.extend(rt.step(now))
+            rt.check_invariants()
+            now += 0.01
+            if len(done) >= target:
+                return
+        raise RuntimeError("cluster did not converge")
+
+    pump(warm, len(warm))
+    pump(thrash, len(warm) + len(thrash))
+    srcs = [i for i, e in rt.engines.items()
+            if any(k.depth == len(shared)
+                   for k in e.scheduler._host_lru)]
+    assert srcs, "pressure never demoted the shared prefix"
+    i0 = srcs[0]
+    moved = rt.drain_instance(i0, now)
+    assert moved > 0, "drain shipped nothing"
+    survivor = rt.engines[1 - i0]
+    assert survivor.scheduler._host_lru, "survivor host tier empty"
+    rt.check_invariants()
+    pump(rehits, len(warm) + len(thrash) + len(rehits))
+    assert survivor.stats["restored_tokens"] > 0, \
+        "drained span never restored on the survivor"
+    got = {tuple(r.tokens): list(r.output_tokens) for r in done}
+    assert got == oracle, "post-drain outputs diverged from dense"
+
+
+def test_demote_overlap_stat(small_model):
+    """The demote DMA double-buffer: gathers issued before the step's
+    model dispatch, bytes landed after — demote_overlap_frac reports
+    the overlapped fraction and the store stays exact."""
+    cfg, api, params = small_model
+    eng = Engine(cfg, params, _econf())
+    rng = np.random.default_rng(9)
+    reqs = [Request(tokens=tuple(rng.integers(1, cfg.vocab_size, 40)
+                                 .tolist()), max_new_tokens=2)
+            for _ in range(8)]
+    _run_requests(lambda r, t: eng.scheduler.enqueue(r, t), eng.step, reqs)
+    assert eng.stats["demote_batches"] > 0, "no demote batches ran"
+    assert 0.0 <= eng.stats["demote_overlap_frac"] <= 1.0
+    assert eng.stats["demote_batches_overlapped"] > 0, \
+        "end-of-step drain never overlapped a model dispatch"
+    assert eng.scheduler.host_tier._pending == []
+    eng.host_store.check_invariants()
+    assert eng.scheduler.host_used_tokens == eng.host_store.used_tokens
