@@ -22,11 +22,15 @@ test:
 bench-engine:
 	PYTHONPATH=src $(PY) -m benchmarks.bench_engine
 
-# tiny capacity-pressure + rebalance-under-load benches (DESIGN.md
-# §8/§9): assert the host tier restores under thrash and improves p99,
-# and that tier-to-tier migration beats drop-and-recompute when Th_bal
-# redirects a hot prefix — run in seconds, results land in
-# results/bench/bench_offload.{csv,json} + bench_migration.{csv,json}
+# tiny capacity-pressure + rebalance-under-load + prefetch benches
+# (DESIGN.md §8/§9/§10): assert the host tier restores under thrash
+# and improves p99, that tier-to-tier migration beats
+# drop-and-recompute when Th_bal redirects a hot prefix, and that
+# speculative restore overlaps the restore DMA with queue wait
+# (fails if prefetch_overlap_frac is 0 with the feature on) — run in
+# seconds, results land in results/bench/bench_offload.{csv,json} +
+# bench_migration.{csv,json} + bench_prefetch.{csv,json}
 bench-smoke:
 	PYTHONPATH=src $(PY) -m benchmarks.bench_offload
 	PYTHONPATH=src $(PY) -m benchmarks.bench_migration
+	PYTHONPATH=src $(PY) -m benchmarks.bench_prefetch

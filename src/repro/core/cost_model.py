@@ -148,6 +148,19 @@ class CostModel:
             return 0.0
         return self.migrate_a * tokens + self.migrate_b
 
+    def prefetch_time(self, restore_tokens: float,
+                      migrate_tokens: float = 0.0) -> float:
+        """Seconds of DMA a speculative-restore prefetch spends OFF the
+        TTFT critical path: the host->device restore of every
+        prefetched token plus the host->host DCN leg for the part that
+        arrives via migration (DESIGN.md §10). E2 prices a
+        PrefetchPlan with this; the simulator uses the same number as
+        the prefetch pipeline's completion latency — schedule-time
+        prefetch hides exactly this much restore work behind queue
+        wait."""
+        return (self.restore_time(restore_tokens + migrate_tokens)
+                + self.migrate_time(migrate_tokens))
+
     # ---- iteration-level batch time (simulator / engine pacing) -------------
 
     def batch_time(self, prefill_tokens: float, n_decode: int,

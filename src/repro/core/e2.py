@@ -7,11 +7,12 @@ view of the world.  ``GlobalScheduler`` wires these to live state.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from collections import deque
+from collections import OrderedDict, deque
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 from .cost_model import CostModel
-from .radix_tree import MatchResult, RadixNode, RadixTree
+from .radix_tree import (MatchResult, PathKey, PrefixSpan, RadixNode,
+                         RadixTree)
 
 
 @dataclass
@@ -45,12 +46,94 @@ class InstanceState:
     # running average of observed output lengths (paper: avg output len in H)
     out_len_events: deque = field(default_factory=deque)  # (time, out_len)
     out_len_sum: float = 0.0
+    # Path-keyed aged markings (Alg. 2's M term): every span this
+    # instance was marked as caching, keyed by content with the time of
+    # its last confirmation (a _commit mark or a v2 notification move).
+    # OrderedDicts stay time-sorted because re-marking moves to the
+    # end, so aging trims from the front in O(1) amortized. A marking
+    # not re-confirmed within window H is presumed gone (local LRU
+    # would have cycled it under any pressure), so the eviction-
+    # pressure estimate converges after storms instead of trusting the
+    # clamped full-capacity gauge forever. Stale keys left behind by
+    # global-tree splits simply age out — the estimate self-heals.
+    device_marks: "OrderedDict[PathKey, Tuple[float, int]]" = field(
+        default_factory=OrderedDict)
+    host_marks: "OrderedDict[PathKey, Tuple[float, int]]" = field(
+        default_factory=OrderedDict)
+    device_marked_sum: int = 0
+    host_marked_sum: int = 0
+    _marks_seen: bool = False
 
     def device_cached_est(self) -> int:
         """Clamped read of the device-cache gauge: occupancy can never
         physically exceed capacity, but the raw gauge must keep the
         overshoot so later evictions subtract from the right base."""
         return min(self.cached_tokens, self.capacity_tokens)
+
+    # ---- path-keyed mark aging ----------------------------------------------
+
+    def mark_device(self, key: PathKey, length: int, now: float) -> None:
+        prev = self.device_marks.pop(key, None)
+        if prev is not None:
+            self.device_marked_sum -= prev[1]
+        self.device_marks[key] = (now, length)
+        self.device_marked_sum += length
+        self._marks_seen = True
+
+    def unmark_device(self, key: PathKey) -> int:
+        prev = self.device_marks.pop(key, None)
+        if prev is None:
+            return 0
+        self.device_marked_sum -= prev[1]
+        return prev[1]
+
+    def mark_host(self, key: PathKey, length: int, now: float) -> None:
+        prev = self.host_marks.pop(key, None)
+        if prev is not None:
+            self.host_marked_sum -= prev[1]
+        self.host_marks[key] = (now, length)
+        self.host_marked_sum += length
+        self._marks_seen = True
+
+    def unmark_host(self, key: PathKey) -> int:
+        prev = self.host_marks.pop(key, None)
+        if prev is None:
+            return 0
+        self.host_marked_sum -= prev[1]
+        return prev[1]
+
+    def _age_marks(self, now: float) -> None:
+        cutoff = now - self.window
+        for od in (self.device_marks, self.host_marks):
+            dead: List[PathKey] = []
+            for key, (t, _) in od.items():
+                if t >= cutoff:
+                    break
+                dead.append(key)
+            for key in dead:
+                _, length = od.pop(key)
+                if od is self.device_marks:
+                    self.device_marked_sum -= length
+                else:
+                    self.host_marked_sum -= length
+
+    def device_pressure_est(self, now: float) -> int:
+        """Device occupancy for Alg. 2's M term: the clamped gauge,
+        further bounded by the window-H aged sum of path-keyed
+        markings. Instances that never reported marks (tests driving
+        InstanceState directly) fall back to the raw gauge."""
+        if not self._marks_seen:
+            return self.device_cached_est()
+        self._age_marks(now)
+        return min(self.device_cached_est(), self.device_marked_sum)
+
+    def host_pressure_est(self, now: float) -> int:
+        """Host-tier occupancy estimate, aged the same way."""
+        base = min(self.host_cached_tokens, self.host_capacity_tokens)
+        if not self._marks_seen:
+            return base
+        self._age_marks(now)
+        return min(base, self.host_marked_sum)
 
     # ---- window maintenance --------------------------------------------------
 
@@ -118,6 +201,25 @@ class MigrationPlan:
         return self.hi - self.lo
 
 
+@dataclass(frozen=True)
+class PrefetchPlan:
+    """Speculative-restore rider on a schedule decision (DESIGN.md
+    §10): E2 already knows at decision time that this request will
+    restore host-tier spans (or receive a migrated span) on its target
+    instance, so it names the prefetch set — path-keyed, hence portable
+    and resolvable by the target's local tree — and prices the DMA the
+    pipeline can hide behind queue wait. Advisory: the LocalScheduler
+    re-derives the authoritative span set from its own tree when it
+    actually reserves pages (the global view may be stale)."""
+    spans: Tuple[PrefixSpan, ...]   # host spans in chain order from the
+                                    # target's device boundary
+    tokens: int                     # total prefetchable tokens
+    restore_time: float             # priced host->device DMA (seconds)
+    migrate_tokens: int = 0         # ... of tokens arriving via the
+                                    # migration rider (inbound DCN leg)
+    migrate_time: float = 0.0
+
+
 @dataclass
 class ScheduleDecision:
     instance: int
@@ -129,6 +231,10 @@ class ScheduleDecision:
     # set when the cheapest way to serve on ``instance`` includes
     # pulling a remote host-tier span (the runtime executes it)
     migration: Optional[MigrationPlan] = None
+    # set when the target holds restorable host spans (or receives a
+    # migrated one): the local scheduler's prefetch queue can start the
+    # host->device DMA while the request waits (DESIGN.md §10)
+    prefetch: Optional[PrefetchPlan] = None
 
 
 # ---------------------------------------------------------------------------
@@ -236,6 +342,54 @@ def attach_migration(inst: InstanceState, match: MatchResult,
     return plan if used else None
 
 
+def build_prefetch_plan(inst: InstanceState, match: MatchResult,
+                        prompt_len: int,
+                        migration: Optional[MigrationPlan] = None
+                        ) -> Optional[PrefetchPlan]:
+    """Name the restore set E2 just priced for ``inst``: whole matched
+    nodes the instance holds only in its host tier, contiguously
+    extending its device coverage (the §8 restore-chain shape), plus —
+    when a migration rider is attached — the inbound span, which will
+    be host-resident on the target by the time the request queues.
+    Whole nodes only (span boundaries stay node-aligned in every tree),
+    capped at prompt_len - 1 like every reuse path. Returns None when
+    there is nothing to prefetch."""
+    inst_id = inst.instance_id
+    limit = prompt_len - 1
+    spans: List[PrefixSpan] = []
+    host_tokens = 0
+    mig_tokens = 0
+    b = 0
+    phase = "device"
+    mig_lo = migration.lo if migration is not None else None
+    mig_hi = migration.hi if migration is not None else None
+    for node in match.path:
+        start = b
+        b += len(node.tokens)
+        if phase == "device" and inst_id in node.instances:
+            continue
+        phase = "host"
+        if b > limit:
+            break
+        if inst_id in node.host_instances:
+            spans.append(node.span())
+            host_tokens += len(node.tokens)
+        elif (mig_lo is not None and mig_lo <= start
+              and b <= mig_hi):
+            spans.append(node.span())
+            mig_tokens += len(node.tokens)
+        else:
+            break
+    if not spans:
+        return None
+    cm = inst.cost_model
+    return PrefetchPlan(
+        spans=tuple(spans), tokens=host_tokens + mig_tokens,
+        restore_time=cm.restore_time(host_tokens + mig_tokens),
+        migrate_tokens=mig_tokens,
+        migrate_time=cm.migrate_time(mig_tokens))
+
+
 def load_cost(inst: InstanceState, tree: RadixTree, match: MatchResult,
               prompt_len: int, now: float,
               migration: Optional[MigrationPlan] = None) -> float:
@@ -263,14 +417,22 @@ def load_cost(inst: InstanceState, tree: RadixTree, match: MatchResult,
     # evicted nodes. With a host tier, eviction demotes (loss = restore
     # on re-hit); without one it drops (loss = full recompute).
     M = 0.0
-    tokens_needed = (inst.device_cached_est() + missed + inst_host
+    # occupancy via the path-keyed AGED estimate (device_pressure_est):
+    # markings not re-confirmed within window H no longer count toward
+    # eviction pressure, so M converges after eviction storms instead
+    # of pinning at the clamped full-capacity gauge
+    tokens_needed = (inst.device_pressure_est(now) + missed + inst_host
                      - inst.capacity_tokens)
     if tokens_needed > 0:
         protected: Set[int] = {n.node_id for n in match.path}
         plan = tree.plan_eviction(inst.instance_id, tokens_needed, protected)
         total_req = max(inst.requests_in_window(now), 1)
-        loss = (cm.restore_time if inst.host_capacity_tokens > 0
-                else cm.prefill_time)
+        # eviction loses a restore only while the host tier has room;
+        # a full (aged) host tier drops on demote-overflow -> recompute
+        host_room = (inst.host_capacity_tokens > 0
+                     and inst.host_pressure_est(now)
+                     < inst.host_capacity_tokens)
+        loss = cm.restore_time if host_room else cm.prefill_time
         for node in plan:
             n_j = tree.hits_in_window(node, now, inst.instance_id) / total_req
             M += loss(len(node.tokens)) * n_j
@@ -323,6 +485,15 @@ def e2_schedule(instances: Dict[int, InstanceState], tree: RadixTree,
         return attach_migration(alive[pick], match, mig_plan(pick),
                                 prompt_len)
 
+    def decide(pick: int, mode: str, cost: float,
+               cands: Dict[int, float]) -> ScheduleDecision:
+        mig = attach(pick)
+        return ScheduleDecision(
+            pick, mode, cached_len, missed_len, cost, cands,
+            migration=mig,
+            prefetch=build_prefetch_plan(alive[pick], match, prompt_len,
+                                         migration=mig))
+
     if missed_len < cached_len and (match.per_instance_len
                                     or match.per_instance_host_len):
         # ---- EXPLOIT: instances holding the longest part of the match ----
@@ -344,9 +515,7 @@ def e2_schedule(instances: Dict[int, InstanceState], tree: RadixTree,
                                   migration=mig_plan(i))
                      for i in K}
             pick = min(costs, key=costs.get)
-            return ScheduleDecision(pick, "exploit", cached_len, missed_len,
-                                    costs[pick], costs,
-                                    migration=attach(pick))
+            return decide(pick, "exploit", costs[pick], costs)
         # matched prefix exists in tree but no alive instance caches it —
         # fall through to explore.
 
@@ -361,16 +530,13 @@ def e2_schedule(instances: Dict[int, InstanceState], tree: RadixTree,
         ratios = {i: s.decode_ratio(now) for i, s in alive.items()}
         max_i = max(ratios, key=ratios.get)
         if ratios[max_i] > imbal_ratio:
-            return ScheduleDecision(max_i, "pd_balance", cached_len,
-                                    missed_len, 0.0, ratios,
-                                    migration=attach(max_i))
+            return decide(max_i, "pd_balance", 0.0, ratios)
 
     costs = {i: load_cost(s, tree, match, prompt_len, now,
                           migration=mig_plan(i))
              for i, s in alive.items()}
     pick = min(costs, key=costs.get)
-    return ScheduleDecision(pick, "explore", cached_len, missed_len,
-                            costs[pick], costs, migration=attach(pick))
+    return decide(pick, "explore", costs[pick], costs)
 
 
 def subtree_load(tree: RadixTree, node: RadixNode, cm: CostModel,

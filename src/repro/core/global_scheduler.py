@@ -16,9 +16,9 @@ from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 from .cost_model import CostModel, cost_model_for
-from .e2 import (InstanceState, MigrationPlan, ScheduleDecision,
-                 attach_migration, e2_schedule, load_cost, plan_migration,
-                 subtree_load)
+from .e2 import (InstanceState, MigrationPlan, PrefetchPlan,
+                 ScheduleDecision, attach_migration, build_prefetch_plan,
+                 e2_schedule, load_cost, plan_migration, subtree_load)
 from .radix_tree import MatchResult, PrefixSpan, RadixNode, RadixTree
 from .request import Request
 
@@ -127,25 +127,35 @@ class GlobalScheduler:
         if decision.mode == "exploit":
             tgt = self._redirects.get(decision.instance)
             if tgt is not None and self.instances[tgt].alive:
+                mig = self._maybe_migration(match, tgt,
+                                            request.prompt_len, now)
                 decision = ScheduleDecision(
                     tgt, "rebalance", decision.cached_len,
-                    decision.missed_len,
-                    migration=self._maybe_migration(match, tgt,
-                                                    request.prompt_len, now))
+                    decision.missed_len, migration=mig,
+                    prefetch=build_prefetch_plan(
+                        self.instances[tgt], match, request.prompt_len,
+                        migration=mig))
         # Post-assignment adjustment 2 — autoscaling: a hot prefix seeds a
         # replica on its designated target; once cached both copies are
         # load-balanced by plain E2 exploit. Seeding too prefers pulling
         # the span over recomputing it when a host copy exists anywhere.
+        # Autoscale seeding rides the §9 migrate + §10 prefetch path:
+        # the replica's first redirected hit pulls the hot span from a
+        # host tier (one DCN ship + one restore, prefetched while the
+        # request queues) instead of recomputing the whole prefill.
         if decision.mode == "exploit" and match.path:
             for node in match.path:
                 tgt = self._hot_nodes.pop(node.node_id, None)
                 if tgt is not None and self.instances[tgt].alive \
                         and tgt != decision.instance:
+                    mig = self._maybe_migration(match, tgt,
+                                                request.prompt_len, now)
                     decision = ScheduleDecision(
                         tgt, "autoscale", decision.cached_len,
-                        decision.missed_len,
-                        migration=self._maybe_migration(
-                            match, tgt, request.prompt_len, now))
+                        decision.missed_len, migration=mig,
+                        prefetch=build_prefetch_plan(
+                            self.instances[tgt], match,
+                            request.prompt_len, migration=mig))
                     break
 
         self._commit(request, decision, match, now)
@@ -178,7 +188,13 @@ class GlobalScheduler:
         missed = max(request.prompt_len - inst_cached - inst_host, 0)
 
         # Insert/extend prompt path; mark the chosen instance on every node.
-        self.tree.insert(request.tokens, instance=decision.instance, now=now)
+        path = self.tree.insert(request.tokens, instance=decision.instance,
+                                now=now)
+        # Path-keyed mark confirmation (Alg. 2 aging): every serve
+        # re-stamps the path's markings, so device_pressure_est only
+        # counts spans confirmed within window H.
+        for node in path:
+            inst.mark_device(node.path_key, len(node.tokens), now)
 
         # window-H load accounting (Alg. 2's L term source). Host-tier
         # hits charge the restore DMA, not a recompute (folded into the
@@ -253,6 +269,8 @@ class GlobalScheduler:
                 if instance_id not in node.instances:
                     continue
                 freed += len(node.tokens)
+                if inst is not None:
+                    inst.unmark_device(node.path_key)
                 if span.key in dem_keys:
                     node.instances.discard(instance_id)
                     # the host gauge follows the host_instances marking
@@ -262,6 +280,9 @@ class GlobalScheduler:
                     if instance_id not in node.host_instances:
                         node.host_instances.add(instance_id)
                         demoted_toks += len(node.tokens)
+                    if inst is not None:
+                        inst.mark_host(node.path_key, len(node.tokens),
+                                       now)
                 else:
                     self.tree.remove_instance(node, instance_id)
         host_freed = 0
@@ -270,6 +291,8 @@ class GlobalScheduler:
                 if instance_id in node.host_instances:
                     node.host_instances.discard(instance_id)
                     host_freed += len(node.tokens)
+                if inst is not None:
+                    inst.unmark_host(node.path_key)
         if inst is not None:
             inst.cached_tokens = max(inst.cached_tokens - freed, 0)
             inst.host_cached_tokens = max(
@@ -306,12 +329,14 @@ class GlobalScheduler:
             if dst_inst is not None and dst not in node.host_instances:
                 node.host_instances.add(dst)
                 dst_inst.host_cached_tokens += len(node.tokens)
+                dst_inst.mark_host(node.path_key, len(node.tokens), now)
                 moved += len(node.tokens)
             if move and src in node.host_instances:
                 node.host_instances.discard(src)
                 if src_inst is not None:
                     src_inst.host_cached_tokens = max(
                         src_inst.host_cached_tokens - len(node.tokens), 0)
+                    src_inst.unmark_host(node.path_key)
         self.stats["migrated_tokens"] += moved
 
     # ---- post-assignment load management ----------------------------------------
@@ -346,12 +371,17 @@ class GlobalScheduler:
         scaled: List[int] = []
         loads = {i: s.window_load(now) for i, s in alive.items()}
         for node in self.tree.iter_nodes():
-            if not node.instances or len(node.instances) >= len(alive):
+            # host-resident-only subtrees qualify too: a hot prefix that
+            # thrash-demoted everywhere still deserves a replica — and
+            # its first redirected hit seeds through the §9 migrate +
+            # §10 prefetch path (one DCN ship + restore, no recompute)
+            holders = node.instances | node.host_instances
+            if not holders or len(holders) >= len(alive):
                 continue
             sload = subtree_load(self.tree, node, self.cost_model, now)
             if sload <= threshold:
                 continue
-            candidates = [i for i in alive if i not in node.instances]
+            candidates = [i for i in alive if i not in holders]
             if not candidates:
                 continue
             target = min(candidates, key=lambda i: loads[i])

@@ -41,6 +41,13 @@ class LocalSchedulerConfig:
     # host tier (via the attached host_tier data mover) and a later hit
     # restores it instead of recomputing.
     host_capacity_tokens: int = 0
+    # Speculative-restore budget (tokens; DESIGN.md §10). 0 disables
+    # prefetch. >0: while a request waits, the scheduler reserves
+    # device pages for its restorable host spans (charged to the token
+    # gauge, capped by this budget) and the engine/simulator moves the
+    # bytes host->device OFF the TTFT critical path; admission then
+    # aliases the prefetched pages and restores nothing.
+    prefetch_budget_tokens: int = 0
 
 
 class AccountingHostTier:
@@ -152,6 +159,34 @@ class LocalScheduler:
         self._host_nodes: Dict[PathKey, int] = {}
         self.host_used_tokens = 0
         self._pinned: Dict[int, List[RadixNode]] = {}  # req id -> pinned path
+        # ---- speculative restore (DESIGN.md §10) ----
+        # The scheduler owns prefetch POLICY: which waiting requests'
+        # host chains are worth moving early, the token budget, page
+        # reservations charged to the token gauge, host-LRU pinning of
+        # in-flight spans, and cancel/refund. The engine (real scatter
+        # DMA) or simulator (restore_time timer) is the MECHANISM that
+        # calls back complete_prefetch / cancel_prefetch.
+        self._prefetch_ids = itertools.count()
+        self._prefetch_recs: Dict[int, dict] = {}      # rec id -> record
+        self._prefetch_keys: Dict[PathKey, int] = {}   # pinned key -> rec
+        self._prefetch_hints: Dict[int, object] = {}   # req id -> E2 plan
+        # landed-but-unclaimed prefetched spans: key -> tokens; claimed
+        # by the first admission whose device prefix covers them (hit)
+        # or written off when eviction takes them first (wasted)
+        self._prefetch_landed: Dict[PathKey, int] = {}
+        self.prefetch_reserved_tokens = 0              # in-flight gauge
+        # negative-verdict memo: request ids whose last plan walk found
+        # nothing host-restorable — skipped on later pumps until host
+        # residency can have changed (a demotion or a migration ingest
+        # clears the memo). Keeps the per-pump cost O(new work), not
+        # O(waiting x prompt_len).
+        self._prefetch_noop: Set[int] = set()
+        # monotone clock of the latest observed event time: cancel
+        # paths reached from no-``now`` contexts (split hooks, forced
+        # drops) use it so host-victim heat is still scored against
+        # the CURRENT window, not t=0 (which would never trim hit
+        # deques and rank victims by lifetime hits)
+        self._clock = 0.0
         # per-request token account: the part of a request's reservation
         # that dies WITH the request (outputs + private prompt copies
         # not published to the prefix store) and must be refunded at
@@ -167,7 +202,10 @@ class LocalScheduler:
                       "starved_max_wait": 0.0, "demoted_tokens": 0,
                       "restored_tokens": 0, "host_dropped_tokens": 0,
                       "restore_hits": 0, "migrated_in_tokens": 0,
-                      "migrated_out_tokens": 0, "demote_skipped_tokens": 0}
+                      "migrated_out_tokens": 0, "demote_skipped_tokens": 0,
+                      "prefetch_issued": 0, "prefetch_landed": 0,
+                      "prefetch_hit": 0, "prefetch_wasted": 0,
+                      "prefetch_cancelled": 0}
 
     @property
     def host_enabled(self) -> bool:
@@ -193,11 +231,22 @@ class LocalScheduler:
         request.device_cached_len = dev
         return m, dev, host
 
-    def enqueue(self, request: Request, now: float) -> None:
+    def enqueue(self, request: Request, now: float,
+                prefetch=None) -> None:
+        """``prefetch``: the E2 ``PrefetchPlan`` rider (advisory — the
+        authoritative span set is re-derived from THIS tree when
+        ``plan_prefetch`` reserves pages; the hint only prioritizes)."""
+        self._clock = max(self._clock, now)
         self._tiered_cached(request, now, update_stats=True)
         request.state = RequestState.QUEUED_LOCAL
         self.waiting.append(request)
+        if prefetch is not None:
+            self._prefetch_hints[request.request_id] = prefetch
         self.stats["admitted"] += 1
+
+    @property
+    def prefetch_enabled(self) -> bool:
+        return self.host_enabled and self.config.prefetch_budget_tokens > 0
 
     # ---- priority-group wait-queue policy (§3.3) ----------------------------------
 
@@ -240,6 +289,7 @@ class LocalScheduler:
         prefills under the token budget (chunked prefill piggybacks
         decodes, Sarathi-style)."""
         cfg = self.config
+        self._clock = max(self._clock, now)
         batch = Batch()
         budget = cfg.max_batch_tokens
 
@@ -331,15 +381,39 @@ class LocalScheduler:
             plan = self.tree.plan_eviction(self.config.instance_id, need,
                                            protected)
             freed = sum(len(n.tokens) for n in plan)
+            if freed < need and self._prefetch_recs:
+                # demand preempts speculation: in-flight prefetch
+                # reservations are the one thing an admission may
+                # always reclaim. Cancel LIFO (the youngest record is
+                # furthest from landing) and ONLY until the admission
+                # fits — wholesale preemption would cascade through
+                # the queue and kill the pipeline it rides on.
+                for rid in sorted(self._prefetch_recs, reverse=True):
+                    self.cancel_prefetch(rid, now)
+                    need = (new_tokens + self.used_tokens
+                            - self.config.capacity_tokens)
+                    plan = (self.tree.plan_eviction(
+                        self.config.instance_id, need, protected)
+                        if need > 0 else [])
+                    freed = sum(len(n.tokens) for n in plan)
+                    if freed >= need:
+                        break
             if freed < need:
                 return False
-            self.apply_eviction(plan, now)
+            if plan:
+                self.apply_eviction(plan, now)
             # the eviction's demote cascade can overflow the host
             # budget and drop the very entries this request matched:
             # re-walk so restored_len only books KV that still exists
             # (the device prefix is protected and cannot shrink; the
             # engine additionally revalidates at staging time)
             m, dev, host = self._tiered_cached(request, now)
+        # prefetched spans the device prefix now covers were moved off
+        # this request's TTFT: claim them. In-flight prefetches this
+        # request wanted are superseded — its own reservation (below)
+        # covers the restore, so cancel and refund before charging.
+        self._claim_prefetched(request, m, dev)
+        self._cancel_prefetch_for(request.request_id)
         request.restored_len = max(
             min(dev + host, request.prompt_len - 1) - dev, 0)
         if request.restored_len > 0:
@@ -401,9 +475,14 @@ class LocalScheduler:
         rate first (hot prefixes outlive one-shot prompts), recency
         (LRU position) breaking ties; ``protected`` (just-ingested /
         just-demoted under an incoming restore) lose only when nothing
-        else is left. O(entries) per drop — fine at host-LRU scale."""
+        else is left. Entries pinned by an in-flight prefetch are HARD
+        skipped — the DMA reads them — so overflow can transiently
+        exceed the budget until the prefetch drains and re-enforces.
+        O(entries) per drop — fine at host-LRU scale."""
         best_key, best_score = None, None
         for pos, key in enumerate(self._host_lru):
+            if key in self._prefetch_keys:
+                continue
             score = (key in protected, self._host_hits(key, now), pos)
             if best_score is None or score < best_score:
                 best_key, best_score = key, score
@@ -419,6 +498,8 @@ class LocalScheduler:
         while (self.host_used_tokens > self.config.host_capacity_tokens
                and self._host_lru):
             key = self._host_victim(now, protected)
+            if key is None:
+                break               # everything left is prefetch-pinned
             toks = self._host_lru.pop(key)
             nid = self._host_nodes.pop(key, None)
             self.host_used_tokens -= toks
@@ -453,6 +534,9 @@ class LocalScheduler:
         The v2 notification ships (evicted, demoted, host_dropped)
         PrefixSpans in ONE keyword-only message."""
         inst = self.config.instance_id
+        self._clock = max(self._clock, now)
+        # demotions change host residency: cleared no-prefetch verdicts
+        self._prefetch_noop.clear()
         # window-H hit counts BEFORE evict: tree.evict drops this
         # instance's hit history with its marking, and the demote
         # admission weighting below needs the pre-eviction heat
@@ -462,6 +546,12 @@ class LocalScheduler:
         freed = sum(len(n.tokens) for n in plan)
         self.used_tokens = max(self.used_tokens - freed, 0)
         self.stats["evicted_tokens"] += freed
+        for n in plan:
+            # prefetched pages evicted before any admission aliased
+            # them: the speculative DMA bought nothing
+            toks = self._prefetch_landed.pop(n.path_key, None)
+            if toks:
+                self.stats["prefetch_wasted"] += toks
         spans = [n.span() for n in plan]
         demoted_spans: List[PrefixSpan] = []
         dropped_spans: List[PrefixSpan] = []
@@ -519,6 +609,11 @@ class LocalScheduler:
         toks = self._host_lru.pop(key, None)
         if toks is None:
             return 0
+        # a force-drop yanks the bytes an in-flight prefetch is
+        # reading: cancel it (refund, unpin) before the entry dies
+        rec_id = self._prefetch_keys.get(key)
+        if rec_id is not None:
+            self.cancel_prefetch(rec_id)
         nid = self._host_nodes.pop(key, None)
         self.host_used_tokens -= toks
         if self.host_tier is not None:
@@ -590,6 +685,7 @@ class LocalScheduler:
         if not self.host_enabled:
             return accepted
         inst = self.config.instance_id
+        self._prefetch_noop.clear()     # inbound spans: re-plan everyone
         fresh: Set[PathKey] = set()
         for lo, hi, payload in spans:
             if hi <= lo:
@@ -637,6 +733,270 @@ class LocalScheduler:
         if dropped and self.on_evict is not None:
             self.on_evict(inst, [], demoted=[], host_dropped=dropped)
         return accepted
+
+    # ---- speculative restore: prefetch policy (DESIGN.md §10) -----------------
+
+    def plan_prefetch(self, now: float) -> List[dict]:
+        """Budgeted prefetch queue over ``waiting``: walk requests in
+        priority order (E2-hinted requests first) and reserve device
+        pages for host-resident span chains that contiguously extend
+        each request's device coverage. Whole nodes only — the landed
+        pages publish as node aliases, so charge/refund stays aligned
+        with eviction accounting. Reservations are charged to the
+        token gauge immediately (admission gating sees them) and capped
+        by ``prefetch_budget_tokens``; under pressure prefetch evicts
+        exactly like ``_reserve`` would at admission (the queued
+        request needs those pages then anyway — prefetch only moves
+        the eviction earlier, protected by the request's match path).
+        In-flight host entries are pinned against host-drop and
+        demote-overflow — including drops cascading from prefetch's
+        own evictions.
+
+        Prefetch reads are NOT hits: the tree walk records no window-H
+        hit and the host LRU is not touched — a speculative read must
+        not inflate hit-rate-weighted retention heat.
+
+        Returns the new records; the mechanism (engine scatter stream /
+        simulator timer) later calls ``complete_prefetch`` or
+        ``cancel_prefetch`` with each record's id."""
+        if not self.prefetch_enabled or not self.waiting:
+            return []
+        cfg = self.config
+        self._clock = max(self._clock, now)
+        budget = cfg.prefetch_budget_tokens
+        out: List[dict] = []
+        hinted = [r for r in self.waiting
+                  if r.request_id in self._prefetch_hints]
+        rest = [r for r in self.waiting
+                if r.request_id not in self._prefetch_hints]
+        # requests already riding an in-flight record (their own plan,
+        # or shared fate with another prompt's chain) are skipped
+        # outright — no point re-walking their prompts every pump
+        riding: Set[int] = set()
+        for rec in self._prefetch_recs.values():
+            riding |= rec["want"]
+        for r in hinted + rest:
+            if self.prefetch_reserved_tokens >= budget:
+                break
+            if r.request_id in riding or r.request_id in self._prefetch_noop:
+                continue
+            # no update_stats: a speculative read is not a hit
+            m, dev, host = self.tree.tiered_match(
+                r.tokens, cfg.instance_id, now=now, update_stats=False)
+            if host <= 0:
+                self._prefetch_noop.add(r.request_id)
+                continue
+            if (m.last_node is not None
+                    and m.last_node_matched < len(m.last_node.tokens)
+                    and m.last_node.path_key in self._prefetch_keys):
+                # this prompt's boundary split would land inside a node
+                # ANOTHER record is reading — cancel-on-split would
+                # kill that in-flight DMA. Defer; re-plan next pump
+                # once it lands (speculation never displaces
+                # speculation).
+                continue
+            if (m.last_node is not None
+                    and m.last_node_matched < len(m.last_node.tokens)):
+                # split the tree at this prompt's boundary exactly like
+                # admission's insert will (splits are the only boundary
+                # edits) so the host chain ends on whole nodes; no
+                # instance marking, no hit recording, and NO LRU touch
+                # — pure structure until the request is served. Skipped
+                # when the boundary is already node-aligned.
+                self.tree.insert(r.tokens, now=now, touch=False)
+                m, dev, host = self.tree.tiered_match(
+                    r.tokens, cfg.instance_id, now=now,
+                    update_stats=False)
+            limit = r.prompt_len - 1
+            spans: List[Tuple[PathKey, int, int, int]] = []
+            b = 0
+            lo = None
+            hi = None
+            for node in m.path:
+                start = b
+                b += len(node.tokens)
+                if b <= dev:
+                    continue
+                if start < dev or b > limit:
+                    break           # mid-node device tail / reuse cap
+                key = node.path_key
+                if key in self._prefetch_keys:
+                    # already being prefetched (for someone else):
+                    # share the record's fate instead of duplicating it
+                    other = self._prefetch_recs.get(
+                        self._prefetch_keys[key])
+                    if other is not None and lo is None:
+                        other["want"].add(r.request_id)
+                    break
+                if (self._host_nodes.get(key) != node.node_id
+                        or self._host_lru.get(key, 0) < len(node.tokens)):
+                    break           # not (fully) host-resident here
+                if lo is None:
+                    lo = start
+                if self.prefetch_reserved_tokens + (b - lo) > budget:
+                    break
+                spans.append((key, node.node_id, start, b))
+                hi = b
+            if lo is None or hi is None or hi <= lo:
+                continue
+            rec = {"id": next(self._prefetch_ids), "tokens": r.tokens[:hi],
+                   "lo": lo, "hi": hi, "spans": spans, "reserved": hi - lo,
+                   "want": {r.request_id}, "cancelled": False,
+                   "landed": False}
+            # pin the chain BEFORE making room: the eviction below can
+            # cascade into host-capacity drops, which must not pick the
+            # very entries this prefetch reads
+            self._prefetch_recs[rec["id"]] = rec
+            for key, _, _, _ in spans:
+                self._prefetch_keys[key] = rec["id"]
+            need = (self.used_tokens + rec["reserved"]
+                    - cfg.capacity_tokens)
+            if need > 0:
+                # never let speculative work displace OTHER speculative
+                # work: landed-but-unclaimed prefetch pages and every
+                # in-flight record's spans are protected — otherwise a
+                # wave of prefetches thrashes itself (admission-time
+                # eviction may still take them; that is real demand)
+                protected = {n.node_id for n in m.path}
+                for key in self._prefetch_landed:
+                    node = self.tree.node_by_key(key)
+                    if node is not None:
+                        protected.add(node.node_id)
+                for other in self._prefetch_recs.values():
+                    protected.update(nid for _, nid, _, _
+                                     in other["spans"])
+                plan = self.tree.plan_eviction(cfg.instance_id, need,
+                                               protected)
+                if sum(len(n.tokens) for n in plan) < need:
+                    for key, _, _, _ in spans:
+                        self._prefetch_keys.pop(key, None)
+                    self._prefetch_recs.pop(rec["id"])
+                    continue        # cannot make room: stays un-prefetched
+                self.apply_eviction(plan, now)
+            self.used_tokens += rec["reserved"]
+            self.prefetch_reserved_tokens += rec["reserved"]
+            self.stats["prefetch_issued"] += rec["reserved"]
+            out.append(rec)
+        return out
+
+    def trim_prefetch(self, rec_id: int, hi_eff: int) -> None:
+        """Mechanism revalidated the record against the byte store and
+        can only move [lo, hi_eff): refund the unmovable tail now."""
+        rec = self._prefetch_recs.get(rec_id)
+        if rec is None or rec["cancelled"] or hi_eff >= rec["hi"]:
+            return
+        if hi_eff <= rec["lo"]:
+            self.cancel_prefetch(rec_id)
+            return
+        diff = rec["hi"] - hi_eff
+        keep = [s for s in rec["spans"] if s[3] <= hi_eff]
+        for key, _, _, _ in rec["spans"]:
+            if all(key != k for k, _, _, _ in keep):
+                self._prefetch_keys.pop(key, None)
+        rec["spans"] = keep
+        rec["hi"] = hi_eff
+        rec["tokens"] = rec["tokens"][:hi_eff]
+        rec["reserved"] -= diff
+        self.used_tokens = max(self.used_tokens - diff, 0)
+        self.prefetch_reserved_tokens -= diff
+        self.stats["prefetch_cancelled"] += diff
+        self.stats["prefetch_issued"] -= diff
+
+    def cancel_prefetch(self, rec_id: int,
+                        now: Optional[float] = None) -> int:
+        """Cancel an in-flight prefetch (split under it, host entry
+        force-dropped, every wanting request gone, mechanism could not
+        stage it): unpin its keys and refund the whole reservation.
+        Landed records cannot be cancelled (their pages are cache now).
+        Returns tokens refunded."""
+        if now is None:
+            now = self._clock
+        rec = self._prefetch_recs.get(rec_id)
+        if rec is None or rec["landed"] or rec["cancelled"]:
+            return 0
+        rec["cancelled"] = True
+        for key, _, _, _ in rec["spans"]:
+            if self._prefetch_keys.get(key) == rec_id:
+                self._prefetch_keys.pop(key, None)
+        self.used_tokens = max(self.used_tokens - rec["reserved"], 0)
+        self.prefetch_reserved_tokens -= rec["reserved"]
+        self.stats["prefetch_cancelled"] += rec["reserved"]
+        self._prefetch_recs.pop(rec_id, None)
+        # unpinning may unblock an overdue host-capacity enforcement
+        dropped = self._enforce_host_capacity(now)
+        if dropped and self.on_evict is not None:
+            self.on_evict(self.config.instance_id, [], demoted=[],
+                          host_dropped=dropped)
+        return rec["reserved"]
+
+    def complete_prefetch(self, rec_id: int, now: float) -> dict:
+        """The mechanism finished moving a record's bytes into device
+        pages (and, engine-side, published the node aliases): mark the
+        spans device-resident on this instance — WITHOUT recording a
+        window-H hit (speculative, not a serve) — convert the
+        reservation into ordinary cache occupancy (a later eviction
+        refunds it through ``apply_eviction``), and unpin the host
+        entries (their copies stay resident, like any restore).
+        Returns ``{"landed": tokens, "want": request_ids}``; landed is
+        0 for a record cancelled mid-flight."""
+        self._clock = max(self._clock, now)
+        rec = self._prefetch_recs.pop(rec_id, None)
+        if rec is None or rec["cancelled"]:
+            return {"landed": 0, "want": set()}
+        inst = self.config.instance_id
+        landed = 0
+        for key, nid, a, b in rec["spans"]:
+            if self._prefetch_keys.get(key) == rec_id:
+                self._prefetch_keys.pop(key, None)
+            node = self.tree.get_node(nid)
+            toks = b - a
+            if node is None or node.path_key != key \
+                    or inst in node.instances:
+                # node vanished/rekeyed under us, or someone else
+                # (an admission's restore) already promoted it —
+                # refund the duplicate reservation
+                self.used_tokens = max(self.used_tokens - toks, 0)
+                self.prefetch_reserved_tokens -= toks
+                self.stats["prefetch_cancelled"] += toks
+                continue
+            node.instances.add(inst)        # no record_hit: not a serve
+            node.last_access = now          # recency, not heat
+            self.prefetch_reserved_tokens -= toks
+            self._prefetch_landed[key] = (
+                self._prefetch_landed.get(key, 0) + toks)
+            landed += toks
+            self.stats["prefetch_landed"] += toks
+        rec["landed"] = True
+        dropped = self._enforce_host_capacity(now)
+        if dropped and self.on_evict is not None:
+            self.on_evict(inst, [], demoted=[], host_dropped=dropped)
+        return {"landed": landed, "want": set(rec["want"])}
+
+    def _cancel_prefetch_for(self, request_id: int) -> None:
+        """A wanting request left the queue (admitted — its own
+        reservation now covers the restore — or aborted): drop it from
+        every record's want-set and cancel records nobody wants."""
+        self._prefetch_hints.pop(request_id, None)
+        self._prefetch_noop.discard(request_id)
+        for rec_id, rec in list(self._prefetch_recs.items()):
+            if request_id in rec["want"]:
+                rec["want"].discard(request_id)
+                if not rec["want"] and not rec["landed"]:
+                    self.cancel_prefetch(rec_id)
+
+    def _claim_prefetched(self, request: Request, m, dev: int) -> None:
+        """Admission reached spans a prefetch landed: count the hit
+        (the pages it aliases were moved off this request's TTFT) and
+        retire the landed marker."""
+        b = 0
+        for node in m.path:
+            b += len(node.tokens)
+            if b > dev:
+                break
+            toks = self._prefetch_landed.pop(node.path_key, None)
+            if toks:
+                self.stats["prefetch_hit"] += toks
+                request.prefetched_len += toks
 
     # ---- iteration completion -----------------------------------------------------------
 
@@ -696,6 +1056,24 @@ class LocalScheduler:
         # splits the actual KV arrays through its own split hook, under
         # the same key moves.)
         old_key = tail.path_key
+        # cancel-on-split: an in-flight prefetch pinned to the pre-split
+        # key would land under boundaries that no longer exist — refund
+        # it rather than re-deriving spans mid-flight (conservative but
+        # always correct; the next plan_prefetch re-plans post-split).
+        # Landed markers re-home to the tail (which keeps the key and
+        # the deeper boundary); the head's share is written off when
+        # its own eviction lands.
+        rec_id = self._prefetch_keys.get(old_key)
+        if rec_id is not None:
+            self.cancel_prefetch(rec_id)
+        landed = self._prefetch_landed.get(old_key)
+        if landed is not None:
+            tail_part = min(landed, len(tail.tokens))
+            if tail_part < landed:
+                self._prefetch_landed[head.path_key] = (
+                    self._prefetch_landed.get(head.path_key, 0)
+                    + landed - tail_part)
+            self._prefetch_landed[old_key] = tail_part
         toks = self._host_lru.get(old_key)
         if toks is None or self._host_nodes.get(old_key) != head.node_id:
             return          # no entry, or a collided key we don't own
@@ -737,8 +1115,17 @@ class LocalScheduler:
         for q in (self.prefilling, self.running, self.waiting):
             if request in q:
                 q.remove(request)
+        self._cancel_prefetch_for(request.request_id)
         self._release(request)
         request.state = RequestState.FAILED
+        # a queued abort may leave a purely structural path behind
+        # (plan_prefetch's boundary split, _reserve's insert): prune
+        # the dead leaf chain so aborted prompts cannot grow the local
+        # tree unboundedly. prune_upward only removes leaves with no
+        # markings, pins, or window-H hits — shared prefixes survive.
+        m = self.tree.match(request.tokens)
+        if m.last_node is not None:
+            self.tree.prune_upward(m.last_node, self._clock)
 
     # ---- failure handling -----------------------------------------------------------------
 
@@ -757,6 +1144,14 @@ class LocalScheduler:
         self._host_lru.clear()
         self._host_nodes.clear()
         self.host_used_tokens = 0
+        for rec in self._prefetch_recs.values():
+            rec["cancelled"] = True     # mechanism drops them on drain
+        self._prefetch_recs.clear()
+        self._prefetch_keys.clear()
+        self._prefetch_hints.clear()
+        self._prefetch_landed.clear()
+        self._prefetch_noop.clear()
+        self.prefetch_reserved_tokens = 0
         self.tree = RadixTree(window=self.config.window,
                               id_source=self._node_ids())
         self.tree.split_hooks.append(self._on_split)

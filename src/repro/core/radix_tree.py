@@ -379,13 +379,17 @@ class RadixTree:
     # ---- insertion ---------------------------------------------------------
 
     def insert(self, tokens: Sequence[int], instance: Optional[int] = None,
-               now: float = 0.0, record: bool = True) -> List[RadixNode]:
+               now: float = 0.0, record: bool = True,
+               touch: bool = True) -> List[RadixNode]:
         """Insert ``tokens``; splits partially-matched nodes (paper §3.2).
 
         Returns the full node path covering the sequence. If ``instance`` is
         given, marks every node on the path as cached there and (unless
         ``record=False`` — for re-inserts of an already-counted serve,
         e.g. the engine's post-prefill publish) records a window-H hit.
+        ``touch=False`` skips the LRU last_access refresh — for purely
+        STRUCTURAL inserts (a prefetch splitting a boundary ahead of
+        admission) that must not count as a read of the path.
         """
         tokens = tuple(tokens)
         node = self.root
@@ -417,7 +421,8 @@ class RadixTree:
             i += j
             # loop continues: either insert remainder as new leaf or done
         for n in path:
-            n.last_access = now
+            if touch:
+                n.last_access = now
             if instance is not None:
                 n.instances.add(instance)
                 if record:

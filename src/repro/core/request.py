@@ -33,6 +33,9 @@ class Request:
     cached_len: int = 0                     # prefix tokens found cached
     device_cached_len: int = 0              # ... of which device-resident
     restored_len: int = 0                   # host-tier tokens restored
+    prefetched_len: int = 0                 # host-tier tokens whose restore
+                                            # a schedule-time prefetch moved
+                                            # OFF this request's TTFT path
     migrated_len: int = 0                   # tokens shipped host->host to
                                             # the serving instance's tier
     prefill_done: int = 0                   # prompt tokens prefilled so far

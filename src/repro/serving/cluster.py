@@ -63,6 +63,7 @@ class ClusterRuntime:
     # ---- request intake -------------------------------------------------
 
     def submit(self, request: Request, now: float) -> int:
+        prefetch = None
         if self.policy == "rr":
             alive = self.gs.alive_instances()
             inst = alive[self._rr_next % len(alive)]
@@ -75,7 +76,13 @@ class ClusterRuntime:
             if decision.migration is not None:
                 self._execute_migration(request, inst, decision.migration,
                                         now)
-        self.engines[inst].scheduler.enqueue(request, now)
+            # the §10 prefetch rider: the migrated span just landed in
+            # the target's host tier, so the local prefetch queue can
+            # start moving it (and any other host chain) to device
+            # while the request waits
+            prefetch = decision.prefetch
+        self.engines[inst].scheduler.enqueue(request, now,
+                                             prefetch=prefetch)
         return inst
 
     # ---- tier-to-tier migration (DESIGN.md §9) ---------------------------
@@ -165,7 +172,13 @@ class ClusterRuntime:
         * BOTH tiers reconcile: the host store's byte accounting equals
           the scheduler's host-LRU token accounting entry-for-entry (no
           KV leaked between the device pool and the host store), and
-          the host tier respects its capacity.
+          the host tier respects its capacity;
+        * the speculative-restore pipeline is quiescent between steps:
+          no prefetch staging table survives a drain, and every
+          reserved-but-unclaimed prefetch page was refunded (the
+          in-flight gauge reconciles to the live records — zero at a
+          step boundary on engines, since records never outlive their
+          issuing step).
         """
         for i, eng in self.engines.items():
             if eng.failed:
@@ -196,6 +209,22 @@ class ClusterRuntime:
                     f"instance {i}: host tier over capacity")
                 assert not eng._pending_restore, (
                     f"instance {i}: unflushed restore stage")
+                assert not eng._prefetch_inflight, (
+                    f"instance {i}: undrained prefetch records")
+                # engine records never outlive their issuing step, so
+                # at a step boundary no record may exist and every
+                # reserved-but-unclaimed prefetch page was refunded
+                assert not sch._prefetch_recs, (
+                    f"instance {i}: prefetch records survived their "
+                    f"step")
+                assert sch.prefetch_reserved_tokens == 0, (
+                    f"instance {i}: reserved-but-unclaimed prefetch "
+                    f"pages not refunded at drain")
+                pf_tables = [k for k in eng.pool.tables
+                             if isinstance(k, tuple) and k[0] == "pf"]
+                assert not pf_tables, (
+                    f"instance {i}: leaked prefetch staging tables "
+                    f"{pf_tables}")
         for i, inst in self.gs.instances.items():
             assert inst.cached_tokens >= 0, (
                 f"global gauge for instance {i} went negative")

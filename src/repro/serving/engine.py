@@ -101,6 +101,12 @@ class EngineConfig:
     # only — eviction demotes node KV device->host and a later prefix
     # hit restores it into fresh pages instead of recomputing.
     host_capacity_tokens: int = 0
+    # Speculative-restore budget (DESIGN.md §10; requires the host
+    # tier). >0: waiting requests' host chains are scattered into node
+    # pages by a second double-buffered DMA stream — issued before the
+    # step's model dispatch, drained after it — so admission aliases
+    # the prefetched pages and restores nothing on the TTFT path.
+    prefetch_budget_tokens: int = 0
 
 
 def _cache_zeros(specs: Pytree) -> Pytree:
@@ -144,6 +150,10 @@ class Engine:
         if econf.host_capacity_tokens > 0 and not self.paged:
             raise ValueError("the host-offload KV tier requires the paged "
                              "data plane (dense state is not pageable)")
+        if econf.prefetch_budget_tokens > 0 \
+                and econf.host_capacity_tokens <= 0:
+            raise ValueError("speculative restore prefetches HOST-tier "
+                             "spans: set host_capacity_tokens > 0")
         self.scheduler = LocalScheduler(
             LocalSchedulerConfig(
                 instance_id=econf.instance_id,
@@ -153,7 +163,8 @@ class Engine:
                 max_batch_requests=econf.max_batch_requests,
                 priority_groups=econf.priority_groups,
                 fcfs=econf.fcfs,
-                host_capacity_tokens=econf.host_capacity_tokens),
+                host_capacity_tokens=econf.host_capacity_tokens,
+                prefetch_budget_tokens=econf.prefetch_budget_tokens),
             on_evict=self._on_evict)
         # External eviction notification — protocol v2 only (DESIGN.md
         # §9): called as cb(instance_id, evicted_spans, demoted=[...],
@@ -173,11 +184,20 @@ class Engine:
                       "restore_failures": 0, "demote_dispatches": 0,
                       "restore_dispatches": 0, "demote_batches": 0,
                       "demote_batches_overlapped": 0,
-                      "demote_overlap_frac": 0.0}
+                      "demote_overlap_frac": 0.0,
+                      "prefetch_issued": 0, "prefetch_hit": 0,
+                      "prefetch_wasted": 0, "prefetch_dispatches": 0,
+                      "prefetch_batches": 0,
+                      "prefetch_batches_overlapped": 0,
+                      "prefetch_overlap_frac": 0.0}
         self.failed = False
         self.host_store: Optional[HostKVStore] = None
         # restores staged by admissions, flushed once per step
         self._pending_restore: List[Tuple[np.ndarray, np.ndarray, Any]] = []
+        # speculative restores in flight this step: (record,
+        # model_dispatches at issue) — scatter already dispatched,
+        # bookkeeping lands at _drain_prefetches after the model runs
+        self._prefetch_inflight: List[Tuple[dict, int]] = []
         if self.paged:
             self._init_paged()
         else:
@@ -215,6 +235,7 @@ class Engine:
         # holds them; restores staged at admission are flushed as ONE
         # scatter dispatch per step (batched into the fused iteration).
         self._pending_restore = []
+        self._prefetch_inflight = []
         if self.econf.host_capacity_tokens > 0:
             self.host_store = HostKVStore()
             self.scheduler.host_tier = PagedHostTier(self, self.host_store)
@@ -558,14 +579,10 @@ class Engine:
         slot) in the request's freshly appended table and queue the
         host KV; ``_flush_restores`` runs ONE scatter dispatch per step
         for all admissions (batched into the fused iteration)."""
-        table = self.pool.tables[rid]
-        ps = self.pool.page_size
-        toks = np.arange(lo, hi)
-        pages_arr = np.asarray(table.pages, np.int32)
-        pidx = pages_arr[toks // ps]
-        sidx = (toks % ps).astype(np.int32)
-        chunks = [self.host_store.get(key).slice(a, b)
-                  for key, _, a, b in plan]
+        pidx, sidx = self._token_page_slots(self.pool.tables[rid],
+                                            self.pool.page_size, lo, hi)
+        chunks = [self.host_store.read_span(key, nid, a, b)
+                  for key, nid, a, b in plan]
         data = (chunks[0] if len(chunks) == 1
                 else jax.tree.map(lambda *xs: np.concatenate(xs, 0),
                                   *chunks))
@@ -574,13 +591,12 @@ class Engine:
             self.scheduler.touch_host(key)
         self.stats["restored_tokens"] += hi - lo
 
-    def _flush_restores(self) -> None:
-        """Apply every restore staged by this step's admissions as ONE
-        donated, bucketed scatter dispatch; padding lanes target the
-        reserved scratch page."""
-        staged, self._pending_restore = self._pending_restore, []
-        if not staged:
-            return
+    def _scatter_staged(self, staged: List[Tuple]) -> None:
+        """ONE donated, bucketed (page, slot) scatter for a list of
+        staged (pidx, sidx, data) triples — shared by the admission
+        restore flush and the speculative-restore stream so padding
+        (zero indices target the reserved scratch page) and bucketing
+        can never diverge between the two DMA paths."""
         pidx = np.concatenate([s[0] for s in staged])
         sidx = np.concatenate([s[1] for s in staged])
         n = len(pidx)
@@ -602,7 +618,141 @@ class Engine:
         self.pages = self._scatter_tokens_fn(
             self.pages, jnp.asarray(pp), jnp.asarray(ss),
             jax.tree.map(jnp.asarray, data))
+
+    @staticmethod
+    def _token_page_slots(table, page_size: int, lo: int, hi: int
+                          ) -> Tuple[np.ndarray, np.ndarray]:
+        """(page, slot) coordinates of tokens [lo, hi) in a table."""
+        toks = np.arange(lo, hi)
+        pages_arr = np.asarray(table.pages, np.int32)
+        return pages_arr[toks // page_size], (toks % page_size).astype(
+            np.int32)
+
+    def _flush_restores(self) -> None:
+        """Apply every restore staged by this step's admissions as ONE
+        donated, bucketed scatter dispatch; padding lanes target the
+        reserved scratch page."""
+        staged, self._pending_restore = self._pending_restore, []
+        if not staged:
+            return
+        self._scatter_staged(staged)
         self.stats["restore_dispatches"] += 1
+
+    # ---- speculative restore: the second DMA stream (DESIGN.md §10) ---------
+
+    def _issue_prefetches(self, now: float) -> None:
+        """Ask the scheduler's prefetch queue for work, stage each
+        record's host bytes onto fresh pages, and issue ONE batched
+        (page, slot) scatter for all of them — dispatched BEFORE the
+        step's fused model dispatch, so the DMA rides ahead of compute
+        on the device stream exactly like the admission-restore flush;
+        the bookkeeping drains after the model runs (overlap). Runs
+        after this step's admissions, so no record is ever in flight
+        while ``_admit_paged`` walks the tables."""
+        if self.host_store is None or not self.scheduler.prefetch_enabled:
+            return
+        staged: List[Tuple[dict, Tuple]] = []
+        for rec in self.scheduler.plan_prefetch(now):
+            got = self._stage_prefetch(rec)
+            if got is None:
+                self.scheduler.cancel_prefetch(rec["id"], now)
+            else:
+                staged.append((rec, got))
+        if not staged:
+            return
+        self._scatter_staged([s for _, s in staged])
+        self.stats["prefetch_dispatches"] += 1
+        self._prefetch_inflight = [
+            (rec, self.stats["model_dispatches"]) for rec, _ in staged]
+
+    def _stage_prefetch(self, rec: dict) -> Optional[Tuple]:
+        """Build one record's device-side staging: fork the deepest
+        node table covering the record's device boundary into a
+        ``("pf", id)`` table, append fresh pages for [lo, hi), and map
+        every prefetched token onto its (page, slot). Revalidates the
+        host entries against the byte store (an entry mid-demote forces
+        a targeted drain, exactly like admission restore) and trims the
+        record to what actually exists. Returns (pidx, sidx, data) or
+        None when the chain cannot be staged."""
+        sch = self.scheduler
+        tokens, lo = rec["tokens"], rec["lo"]
+        m = sch.tree.match(tokens)
+        best_key, best_len, off = None, 0, 0
+        for node in m.path:
+            off += len(node.tokens)
+            if off > lo:
+                break
+            t = self.pool.tables.get(("node", node.path_key))
+            if t is not None and t.num_tokens >= off:
+                best_key, best_len = ("node", node.path_key), off
+        if lo > 0 and best_len < lo:
+            return None     # device base never materialized: the
+                            # landed span could not be reached anyway
+        hi_eff = lo
+        chunks = []
+        for key, nid, a, b in rec["spans"]:
+            self._host_entry(key)   # land an in-flight demote first
+            piece = self.host_store.read_span(key, nid, a, b,
+                                              speculative=True)
+            if piece is None:
+                break
+            chunks.append(piece)
+            hi_eff = b
+        if hi_eff <= lo:
+            return None
+        if hi_eff < rec["hi"]:
+            sch.trim_prefetch(rec["id"], hi_eff)
+            if rec["cancelled"]:
+                return None
+        pfid = ("pf", rec["id"])
+        if best_key is not None and lo > 0:
+            self.pool.fork(best_key, pfid, lo)
+        else:
+            self.pool.create(pfid)
+        try:
+            self._append_with_cow(pfid, hi_eff - lo)
+        except MemoryError:
+            self.pool.release(pfid)
+            return None     # fragmentation squeeze: never evict for
+                            # speculative work at staging time
+        pidx, sidx = self._token_page_slots(self.pool.tables[pfid],
+                                            self.pool.page_size, lo, hi_eff)
+        data = (chunks[0] if len(chunks) == 1
+                else jax.tree.map(lambda *xs: np.concatenate(xs, 0),
+                                  *chunks))
+        rec["pfid"] = pfid
+        self.stats["prefetch_issued"] += hi_eff - lo
+        return pidx, sidx, data
+
+    def _drain_prefetches(self, now: float) -> None:
+        """Land this step's speculative restores: publish each record's
+        pages as node aliases (zero-copy forks at the issue-time
+        boundaries — cancel-on-split guarantees they still hold), hand
+        the policy bookkeeping back to the scheduler, and record
+        whether the DMA actually overlapped a model dispatch."""
+        inflight, self._prefetch_inflight = self._prefetch_inflight, []
+        for rec, disp_at in inflight:
+            pfid = rec.get("pfid")
+            if rec["cancelled"]:
+                # cancelled mid-flight (split under it, abort): the
+                # scatter already ran — release the staging pages, the
+                # bytes are wasted
+                if pfid is not None and pfid in self.pool.tables:
+                    self.pool.release(pfid)
+                continue
+            for key, _, _, b in rec["spans"]:
+                nkey = ("node", key)
+                if nkey not in self.pool.tables:
+                    self.pool.fork(pfid, nkey, b)
+            self.pool.release(pfid)
+            self.scheduler.complete_prefetch(rec["id"], now)
+            self.stats["prefetch_batches"] += 1
+            if self.stats["model_dispatches"] > disp_at:
+                self.stats["prefetch_batches_overlapped"] += 1
+        if self.stats["prefetch_batches"]:
+            self.stats["prefetch_overlap_frac"] = (
+                self.stats["prefetch_batches_overlapped"]
+                / self.stats["prefetch_batches"])
 
     def _admit_dense(self, r: Request, now: float) -> None:
         cache = _cache_zeros(self._cache_spec)
@@ -766,51 +916,67 @@ class Engine:
         per-request prefills before the decode batch (reference
         behavior)."""
         batch = self.scheduler.form_batch(now)
-        if not batch.items:
+        if not batch.items and not self.scheduler.prefetch_enabled:
             return []
-        self.stats["iterations"] += 1
+        finished: List[Request] = []
+        aborted: List[Request] = []
+        newly_prefilled: List[Request] = []
+        if batch.items:
+            self.stats["iterations"] += 1
+            aborted = self._admit_new(batch, now)
+            if aborted:
+                batch.items = [it for it in batch.items
+                               if it.request not in aborted]
+            # host-tier restores staged by this step's admissions land
+            # as one batched scatter BEFORE the model reads any lane KV
+            if self._pending_restore:
+                self._flush_restores()
 
-        aborted = self._admit_new(batch, now)
-        if aborted:
-            batch.items = [it for it in batch.items
-                           if it.request not in aborted]
+        # speculative restores issue AFTER admission (no record is in
+        # flight while _admit_paged walks tables) and BEFORE the model
+        # dispatch: the scatter rides ahead of compute on the device
+        # stream, and the host-side bookkeeping drains after it
+        self._issue_prefetches(now)
 
-        # host-tier restores staged by this step's admissions land as
-        # one batched scatter BEFORE the model reads any lane KV
-        if self._pending_restore:
-            self._flush_restores()
+        if batch.items:
+            has_prefill = any(it.chunk_tokens > 0
+                              for it in batch.prefill_items())
+            if self.fused and has_prefill:
+                newly_prefilled = self._run_mixed(batch)
+            else:
+                # -- prefill items (each runs alone: variable chunk/position)
+                newly_prefilled = self._run_prefills(batch)
+                # -- decode items (one batched step) --
+                dec = [it.request for it in batch.decode_items()]
+                if dec and self.paged:
+                    self._decode_batch_paged(dec)
+                elif dec:
+                    self._decode_batch_dense(dec)
 
-        has_prefill = any(it.chunk_tokens > 0
-                          for it in batch.prefill_items())
-        if self.fused and has_prefill:
-            newly_prefilled = self._run_mixed(batch)
-        else:
-            # -- prefill items (each runs alone: variable chunk/position)
-            newly_prefilled = self._run_prefills(batch)
-            # -- decode items (one batched step) --
-            dec = [it.request for it in batch.decode_items()]
-            if dec and self.paged:
-                self._decode_batch_paged(dec)
-            elif dec:
-                self._decode_batch_dense(dec)
-
-        # -- advance scheduler state --
-        finished = self.scheduler.complete_iteration(batch, now)
-        for r in newly_prefilled:
-            self._store_prefix(r, now)
-        for item in batch.items:
-            r = item.request
-            if item.phase == "decode" and r.output_tokens:
-                r.output_tokens[-1] = self.live[r.request_id]["next"]
-        for r in finished:
-            self.live.pop(r.request_id, None)
-            self.pool.release(("req", r.request_id) if self.paged
-                              else r.request_id)
-        # land any demote DMA issued this step — its gather was
-        # dispatched BEFORE the model work above, so by now the copy
-        # rode behind compute (demote_overlap_frac measures how often)
+            # -- advance scheduler state --
+            finished = self.scheduler.complete_iteration(batch, now)
+            for r in newly_prefilled:
+                self._store_prefix(r, now)
+            for item in batch.items:
+                r = item.request
+                if item.phase == "decode" and r.output_tokens:
+                    r.output_tokens[-1] = self.live[r.request_id]["next"]
+            for r in finished:
+                self.live.pop(r.request_id, None)
+                self.pool.release(("req", r.request_id) if self.paged
+                                  else r.request_id)
+        # land this step's speculative restores (the publish runs after
+        # _store_prefix so a same-step split cancels cleanly first),
+        # then any demote DMA — both gathers/scatters were dispatched
+        # before the model work above, so the copies rode behind
+        # compute (the *_overlap_frac stats measure how often)
+        self._drain_prefetches(now)
         if self.host_store is not None:
             self._drain_demotes()
+            self.stats["prefetch_hit"] = self.scheduler.stats[
+                "prefetch_hit"]
+            self.stats["prefetch_wasted"] = self.scheduler.stats[
+                "prefetch_wasted"]
         # aborted requests are terminal too (state FAILED) — surface
         # them so cluster runtimes can account/resubmit
         return finished + aborted

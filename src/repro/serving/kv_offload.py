@@ -107,7 +107,8 @@ class HostKVStore:
     def __init__(self):
         self.entries: Dict[PathKey, HostEntry] = {}
         self.used_tokens = 0
-        self.stats = {"puts": 0, "drops": 0, "splits": 0, "ingests": 0}
+        self.stats = {"puts": 0, "drops": 0, "splits": 0, "ingests": 0,
+                      "reads": 0, "prefetch_reads": 0}
 
     def __contains__(self, key) -> bool:
         return key in self.entries
@@ -124,6 +125,22 @@ class HostKVStore:
 
     def get(self, key) -> Optional[HostEntry]:
         return self.entries.get(key)
+
+    def read_span(self, key, node_id: int, lo: int, hi: int, *,
+                  speculative: bool = False) -> Optional[Pytree]:
+        """Verified read of tokens [lo, hi) under ``key``: None when
+        the entry is missing, owned by a different node (digest
+        collision — never hand out another prefix's KV), or does not
+        cover the range. Reads are POLICY-NEUTRAL: no recency or heat
+        update happens here — the scheduler decides what counts as a
+        hit, and a ``speculative`` prefetch read never does (it only
+        shows up in its own counter)."""
+        e = self.entries.get(key)
+        if (e is None or (node_id >= 0 and e.node_id != node_id)
+                or e.start > lo or e.start + e.length < hi):
+            return None
+        self.stats["prefetch_reads" if speculative else "reads"] += 1
+        return e.slice(lo, hi)
 
     def drop(self, key) -> int:
         e = self.entries.pop(key, None)

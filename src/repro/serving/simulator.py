@@ -54,6 +54,14 @@ class SimConfig:
     # explore, ship demoted host spans to the target's host tier
     # (accounting-only here; charged migrate_time + restore_time)
     enable_migration: bool = True
+    # speculative restore (DESIGN.md §10): >0 enables the schedule-time
+    # prefetch pipeline with this in-flight reservation budget (tokens)
+    # per instance. Prefetched spans complete after
+    # CostModel.prefetch_time seconds of modeled DMA — overlapping the
+    # request's queue wait — and admission then restores only the
+    # un-prefetched remainder, the same physics the engine's second
+    # DMA stream realizes with real bytes.
+    prefetch_budget_tokens: int = 0
     speed_factors: Optional[Dict[int, float]] = None  # stragglers
 
 
@@ -117,7 +125,8 @@ class Simulator:
                     priority_groups=cfg.priority_groups,
                     fcfs=cfg.fcfs_local,
                     window=cfg.window,
-                    host_capacity_tokens=cfg.host_capacity_tokens),
+                    host_capacity_tokens=cfg.host_capacity_tokens,
+                    prefetch_budget_tokens=cfg.prefetch_budget_tokens),
                 on_evict=self._notify_evictions,
                 host_tier=(AccountingHostTier()
                            if cfg.host_capacity_tokens > 0 else None))
@@ -153,6 +162,10 @@ class Simulator:
         accepted = self.locals[dst].ingest_host_span(r.tokens, spans, now)
         if accepted:
             r.migrated_len = sum(hi - lo for lo, hi in accepted)
+            # sim-private: lets the prefetch pump verify a record
+            # actually covers the migrated span before folding its
+            # DCN leg into the pipeline latency
+            r._migrated_ranges = list(accepted)
             self.gs.on_migration(plan.src, dst, r.tokens, accepted, now)
 
     # ---- service-time model ------------------------------------------------
@@ -207,10 +220,43 @@ class Simulator:
             heapq.heappush(events,
                            (t + dt, next(seq), "iter_done", (inst, batch)))
 
+        def pump_prefetch(inst: int, t: float) -> None:
+            """Schedule-time prefetch: reserve pages for waiting
+            requests' host chains NOW and model each DMA landing after
+            prefetch_time seconds — overlapping queue wait. Pumped at
+            every arrival, iteration completion, and prefetch landing
+            (the budget frees up), mirroring the engine's per-step
+            issue loop. An inbound migrated span prefetches the same
+            way: its DCN leg is folded into the pipeline's latency and
+            no longer charged at admission."""
+            ls = self.locals[inst]
+            for rec in ls.plan_prefetch(t):
+                mig, mig_rid = 0, None
+                for q in ls.waiting:
+                    if q.request_id not in rec["want"] or not q.migrated_len:
+                        continue
+                    # fold ONE wanting request's DCN leg into this
+                    # record's latency — only for the part the record
+                    # actually covers (the chain may have broken or
+                    # hit budget before reaching the migrated span);
+                    # only that request stops owing it at admission
+                    cover = sum(
+                        max(min(rec["hi"], b) - max(rec["lo"], a), 0)
+                        for a, b in getattr(q, "_migrated_ranges", ()))
+                    mig = min(q.migrated_len, cover)
+                    if mig:
+                        mig_rid = q.request_id
+                        break
+                dt = self.cm.prefetch_time(rec["reserved"] - mig, mig)
+                heapq.heappush(events,
+                               (t + dt, next(seq), "prefetch_done",
+                                (inst, rec["id"], mig, mig_rid)))
+
         while events:
             now, _, kind, payload = heapq.heappop(events)
             if kind == "arrival":
                 r: Request = payload
+                prefetch = None
                 if cfg.policy == "rr":
                     inst = next(self._rr)
                     r.instance = inst
@@ -221,8 +267,30 @@ class Simulator:
                     if decision.migration is not None:
                         self._execute_migration(r, inst,
                                                 decision.migration, now)
-                self.locals[inst].enqueue(r, now)
+                    prefetch = decision.prefetch
+                self.locals[inst].enqueue(r, now, prefetch=prefetch)
+                # admission first, then plan prefetch for what still
+                # waits — the engine's per-step order (issue after
+                # _admit_new), so fresh records are never preempted by
+                # the admissions of the same event
                 kick(inst, now)
+                pump_prefetch(inst, now)
+            elif kind == "prefetch_done":
+                inst, rec_id, mig, mig_rid = payload
+                ls = self.locals[inst]
+                done = ls.complete_prefetch(rec_id, now)
+                if done["landed"] and mig:
+                    # the DCN leg rode inside the prefetch pipeline:
+                    # the one request it was charged to stops owing it
+                    # at admission (approximation: whole-record landed;
+                    # a request admitted mid-flight left `waiting` and
+                    # keeps paying migrate_time at admission instead —
+                    # the conservative side)
+                    for q in ls.waiting:
+                        if q.request_id == mig_rid:
+                            q.migrated_len = max(q.migrated_len - mig, 0)
+                kick(inst, now)
+                pump_prefetch(inst, now)
             else:
                 inst, batch = payload
                 self._busy[inst] = False
@@ -236,6 +304,8 @@ class Simulator:
                     self.gs.on_request_complete(r, now)
                     finished.append(r)
                 kick(inst, now)
+                if self.locals[inst].prefetch_enabled:
+                    pump_prefetch(inst, now)
 
         stats = {f"gs_{k}": float(v) for k, v in self.gs.stats.items()}
         reused = sum(r.cached_len for r in finished)
@@ -249,11 +319,25 @@ class Simulator:
         for key in ("demoted_tokens", "restored_tokens",
                     "host_dropped_tokens", "restore_hits",
                     "evicted_tokens", "migrated_in_tokens",
-                    "migrated_out_tokens"):
+                    "migrated_out_tokens", "prefetch_issued",
+                    "prefetch_landed", "prefetch_hit", "prefetch_wasted",
+                    "prefetch_cancelled"):
             stats[key] = float(sum(ls.stats[key] for ls
                                    in self.locals.values()))
         stats["restore_hit_frac"] = (stats["restored_tokens"] / total_prompt
                                      if total_prompt else 0.0)
+        # fraction of speculative DMA that actually came off a TTFT
+        # path: issued tokens an admission later aliased. Cancelled
+        # records deliberately stay in the denominator — speculation
+        # that did not pay off is the signal. NOTE: the engine's stat
+        # of the same name measures dispatch ordering (batches whose
+        # drain saw a model dispatch after issue), not token payoff;
+        # the two planes' fractions are not directly comparable.
+        stats["prefetch_overlap_frac"] = (
+            stats["prefetch_hit"] / stats["prefetch_issued"]
+            if stats["prefetch_issued"] else 0.0)
+        stats["prefetched_tokens"] = float(
+            sum(r.prefetched_len for r in finished))
         stats["migrated_tokens"] = stats["migrated_in_tokens"]
         stats["migration_hit_frac"] = (
             stats["migrated_in_tokens"] / total_prompt
