@@ -1,6 +1,6 @@
 PY ?= python
 
-.PHONY: ci ci-fast test bench-engine bench-smoke install
+.PHONY: ci ci-fast test bench-engine bench-smoke chaos-smoke install
 
 install:
 	$(PY) -m pip install -e .[test]
@@ -15,6 +15,7 @@ ci:
 ci-fast:
 	PYTHONPATH=src $(PY) -m pytest -q -m "not slow" tests
 	$(MAKE) bench-smoke
+	$(MAKE) chaos-smoke
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -q
@@ -34,3 +35,12 @@ bench-smoke:
 	PYTHONPATH=src $(PY) -m benchmarks.bench_offload
 	PYTHONPATH=src $(PY) -m benchmarks.bench_migration
 	PYTHONPATH=src $(PY) -m benchmarks.bench_prefetch
+
+# fault-injection gate (DESIGN.md §11): the sim-plane chaos harness
+# (one crash + 5% DMA loss + 2% notification drop over a seed matrix;
+# fails on hung requests, invariant violations, inexact post-anti-
+# entropy gauges, or >5x p99 TTFT degradation) plus the real-engine
+# crash-mid-wave recovery test on the fused+tiered+prefetch plane
+chaos-smoke:
+	PYTHONPATH=src $(PY) -m benchmarks.bench_chaos
+	PYTHONPATH=src $(PY) -m pytest -q tests/test_faults.py -k "crash_mid_wave"

@@ -1,0 +1,172 @@
+"""Chaos harness for the tiered cluster (DESIGN.md §11).
+
+A bursty shared-prefix workload runs through the REAL schedulers (via
+the discrete-event simulator) twice per seed:
+
+  * clean — no faults (the baseline the degradation is judged against);
+  * chaos — one instance crashes mid-run, 5% of DMA transfers (demote /
+    restore / prefetch / migrate) are lost, 2% of eviction
+    notifications drop, heartbeat detection replaces oracle failure
+    knowledge, retries back off exponentially, and periodic
+    anti-entropy reconciles the cached-token gauges.
+
+GATES (process exits non-zero on violation — wired into `make
+chaos-smoke` / `ci-fast`):
+
+  1. liveness:   every request reaches FINISHED or terminal FAILED
+                 within the retry budget — nothing hangs;
+  2. integrity:  cross-layer invariants hold at end of run;
+  3. exactness:  after a final anti-entropy round the global gauges
+                 equal per-instance scheduler truth EXACTLY;
+  4. gracefulness: chaos p99 TTFT <= GRACE_P99 x clean p99 TTFT and
+                 terminal failures stay under MAX_FAIL_FRAC.
+
+Results land in results/bench/bench_chaos.csv.
+"""
+
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+from repro.core.request import Request
+from repro.serving.faults import FaultConfig
+from repro.serving.simulator import SimConfig, Simulator
+
+from .common import emit
+
+SEEDS = (0, 1, 2)
+NUM_INSTANCES = 4
+CAPACITY = 3_000
+HOST_CAPACITY = 30_000
+PREFETCH_BUDGET = 1_024
+CRASH_INSTANCE, CRASH_TIME = 1, 1.0
+DMA_FAILURE_RATE = 0.05
+NOTIFY_DROP_RATE = 0.02
+GRACE_P99 = 5.0          # chaos p99 TTFT may degrade at most this much
+MAX_FAIL_FRAC = 0.05     # terminal failures allowed under chaos
+
+
+def _burst_workload(seed: int, n_groups: int = 5, prefix_len: int = 600,
+                    tail_len: int = 100, out: int = 16, bursts: int = 8,
+                    per_burst: int = 25, burst_gap: float = 0.4):
+    """Bursty traffic over a handful of hot shared prefixes — enough
+    pressure to demote into the host tier and keep prefetch + migration
+    busy while the faults land."""
+    rng = np.random.default_rng(seed)
+    prefixes = [tuple(rng.integers(1, 1 << 20, prefix_len).tolist())
+                for _ in range(n_groups)]
+    reqs, t = [], 0.0
+    for b in range(bursts):
+        for k in range(per_burst):
+            pref = prefixes[int(rng.integers(0, n_groups))]
+            reqs.append(Request(
+                tokens=pref + tuple(rng.integers(1, 1 << 20,
+                                                 tail_len).tolist()),
+                max_new_tokens=out, arrival_time=t + k * 0.005))
+        t += burst_gap
+    return reqs
+
+
+def _run(seed: int, chaos: bool):
+    cfg = SimConfig(num_instances=NUM_INSTANCES, capacity_tokens=CAPACITY,
+                    host_capacity_tokens=HOST_CAPACITY,
+                    prefetch_budget_tokens=PREFETCH_BUDGET)
+    if chaos:
+        cfg.faults = FaultConfig(seed=seed,
+                                 crash_at={CRASH_INSTANCE: CRASH_TIME},
+                                 dma_failure_rate=DMA_FAILURE_RATE,
+                                 notify_drop_rate=NOTIFY_DROP_RATE)
+        cfg.heartbeat_interval = 0.05
+        cfg.suspect_misses = 2
+        cfg.dead_misses = 5
+        cfg.reconcile_every = 0.5
+        cfg.retry_budget = 3
+        cfg.retry_backoff = 0.1
+    sim = Simulator(cfg)
+    res = sim.run(_burst_workload(seed))
+    return sim, res
+
+
+def main() -> int:
+    rows, violations = [], []
+    for seed in SEEDS:
+        reqs = _burst_workload(seed)
+        n = len(reqs)
+        clean_sim, clean = _run(seed, chaos=False)
+        chaos_sim, chz = _run(seed, chaos=True)
+
+        # gate 1: liveness — every request terminal, none hung
+        hung = n - len(chz.finished) - len(chz.failed)
+        if hung:
+            violations.append(f"seed {seed}: {hung} requests hung")
+        if len(clean.finished) != n:
+            violations.append(f"seed {seed}: clean run lost requests")
+
+        # gate 2: integrity
+        try:
+            chaos_sim.check_invariants()
+        except AssertionError as e:
+            violations.append(f"seed {seed}: invariant violated: {e}")
+
+        # gate 3: post-anti-entropy gauge exactness
+        chaos_sim.reconcile_all(chz.makespan)
+        for i, ls in chaos_sim.locals.items():
+            if i in chaos_sim._crashed:
+                continue
+            d = ls.residency_digest()
+            dev = sum(x for _, x in d["device"])
+            host = sum(x for _, x in d["host"])
+            gi = chaos_sim.gs.instances[i]
+            if gi.cached_tokens != dev or gi.host_cached_tokens != host:
+                violations.append(
+                    f"seed {seed}: instance {i} gauges inexact after "
+                    f"anti-entropy ({gi.cached_tokens}/{dev} device, "
+                    f"{gi.host_cached_tokens}/{host} host)")
+
+        # gate 4: graceful degradation
+        p99_clean = clean.summary()["p99_ttft"]
+        p99_chaos = (chz.summary() or {}).get("p99_ttft", float("inf"))
+        if p99_chaos > GRACE_P99 * p99_clean:
+            violations.append(
+                f"seed {seed}: p99 TTFT degraded {p99_chaos / p99_clean:.1f}x"
+                f" (> {GRACE_P99}x)")
+        if len(chz.failed) > MAX_FAIL_FRAC * n:
+            violations.append(
+                f"seed {seed}: {len(chz.failed)}/{n} terminal failures "
+                f"(> {MAX_FAIL_FRAC:.0%})")
+
+        for mode, res in (("clean", clean), ("chaos", chz)):
+            s = res.summary()
+            rows.append({
+                "seed": seed, "mode": mode, "n": n,
+                "finished": len(res.finished),
+                "failed": len(res.failed),
+                "p99_ttft": s["p99_ttft"],
+                "p99_latency": s["p99_latency"],
+                "throughput_rps": s["throughput_rps"],
+                "crashes": res.stats.get("crashes", 0.0),
+                "dma_failures": sum(
+                    res.stats.get(f"dma_{k}_failures", 0.0)
+                    for k in ("demote", "restore", "prefetch", "migrate")),
+                "notify_dropped": res.stats.get("notify_dropped", 0.0),
+                "retries": res.stats.get("retries", 0.0),
+                "detected_dead": res.stats.get("gs_detected_dead", 0.0),
+                "reconcile_repairs": res.stats.get(
+                    "gs_reconcile_repairs", 0.0),
+            })
+
+    emit("bench_chaos", rows)
+    if violations:
+        for v in violations:
+            print(f"GATE VIOLATION: {v}", file=sys.stderr)
+        return 1
+    print(f"chaos gates passed over seeds {list(SEEDS)}: no hung "
+          f"requests, invariants hold, gauges exact after anti-entropy, "
+          f"p99 TTFT within {GRACE_P99}x of fault-free")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -30,6 +30,11 @@ class InstanceState:
     # instance demote KV to host memory instead of dropping it, so its
     # eviction cost M is a restore, not a recompute.
     host_capacity_tokens: int = 0
+    # failure-detector state machine: "alive" -> "suspect" -> "dead".
+    # SUSPECT is soft-avoided in load_cost; only DEAD re-routes.
+    health: str = "alive"
+    last_heartbeat: float = -1.0          # -1 = never heard from
+    registered_at: float = 0.0            # detection baseline pre-heartbeat
 
     # window-H event log: (time, prefill_sec, decode_sec)
     events: deque = field(default_factory=deque)
@@ -241,6 +246,13 @@ class ScheduleDecision:
 # Algorithm 2: LOADCOST(i, R_k)
 # ---------------------------------------------------------------------------
 
+# SUSPECT soft-avoid (DESIGN.md §11): multiplicative penalty plus a
+# constant bias applied to a suspect instance's load cost. Soft — a
+# suspect with a much longer cached prefix can still win — but strong
+# enough that near-tied candidates route around it.
+SUSPECT_COST_FACTOR = 4.0
+SUSPECT_COST_BIAS = 0.5
+
 def _phase_cost(cm: CostModel, missed: int, inst_host: int,
                 mig_tokens: int) -> Tuple[float, bool]:
     """Prefill-phase cost of serving (missed, host-restorable) tokens,
@@ -442,7 +454,15 @@ def load_cost(inst: InstanceState, tree: RadixTree, match: MatchResult,
     P, _ = _phase_cost(cm, missed, inst_host,
                        migration.tokens if migration is not None else 0)
 
-    return L + (M + P) * inst.speed_factor
+    cost = L + (M + P) * inst.speed_factor
+    if inst.health == "suspect":
+        # Soft-avoid: a suspect may just be straggling or losing
+        # heartbeats, so it stays schedulable (a strictly-longer cached
+        # prefix can still win the exploit rank), but among otherwise
+        # comparable candidates the penalty routes work elsewhere. The
+        # bias breaks the idle-cluster tie (all costs ~0).
+        cost = cost * SUSPECT_COST_FACTOR + SUSPECT_COST_BIAS
+    return cost
 
 
 # ---------------------------------------------------------------------------

@@ -19,7 +19,8 @@ from .cost_model import CostModel, cost_model_for
 from .e2 import (InstanceState, MigrationPlan, PrefetchPlan,
                  ScheduleDecision, attach_migration, build_prefetch_plan,
                  e2_schedule, load_cost, plan_migration, subtree_load)
-from .radix_tree import MatchResult, PrefixSpan, RadixNode, RadixTree
+from .radix_tree import (MatchResult, PathKey, PrefixSpan, RadixNode,
+                         RadixTree)
 from .request import Request
 
 
@@ -38,6 +39,17 @@ class GlobalSchedulerConfig:
     # span to the chosen instance (migrate + restore) against
     # recomputing it, and attach the winning plan to the decision.
     enable_migration: bool = True
+    # Failure detection (0 = oracle mode: failures only known when
+    # reported explicitly). Engines heartbeat every step; an instance
+    # silent for suspect_misses * heartbeat_interval turns SUSPECT
+    # (soft-avoided by E2), for dead_misses * heartbeat_interval turns
+    # DEAD (re-routed like an explicit failure).
+    heartbeat_interval: float = 0.0
+    suspect_misses: int = 3
+    dead_misses: int = 10
+    # Gauge anti-entropy period (0 = off): how often the runtime ships
+    # per-instance residency digests through ``reconcile``.
+    reconcile_every: float = 0.0
 
 
 class GlobalScheduler:
@@ -56,7 +68,9 @@ class GlobalScheduler:
         self.stats = {"exploit": 0, "explore": 0, "pd_balance": 0,
                       "rebalance": 0, "autoscale": 0, "scheduled": 0,
                       "failures": 0, "migrations_planned": 0,
-                      "migrated_tokens": 0}
+                      "migrated_tokens": 0, "suspected": 0,
+                      "detected_dead": 0, "reconciles": 0,
+                      "reconcile_repairs": 0}
         for i in range(num_instances):
             self.add_instance(i)
 
@@ -65,7 +79,8 @@ class GlobalScheduler:
     def add_instance(self, instance_id: int,
                      capacity_tokens: Optional[int] = None,
                      speed_factor: float = 1.0,
-                     host_capacity_tokens: Optional[int] = None) -> None:
+                     host_capacity_tokens: Optional[int] = None,
+                     now: float = 0.0) -> None:
         self.instances[instance_id] = InstanceState(
             instance_id=instance_id,
             capacity_tokens=capacity_tokens or self.config.capacity_tokens,
@@ -75,6 +90,7 @@ class GlobalScheduler:
             host_capacity_tokens=(
                 self.config.host_capacity_tokens
                 if host_capacity_tokens is None else host_capacity_tokens),
+            registered_at=now,
         )
 
     def remove_instance(self, instance_id: int, now: float = 0.0) -> None:
@@ -85,6 +101,7 @@ class GlobalScheduler:
         if inst is None:
             return
         inst.alive = False
+        inst.health = "dead"
         self.tree.drop_instance_everywhere(instance_id)
         self.tree.prune_dead(now)
         self._redirects.pop(instance_id, None)
@@ -107,6 +124,112 @@ class GlobalScheduler:
 
     def alive_instances(self) -> List[int]:
         return [i for i, s in self.instances.items() if s.alive]
+
+    # ---- failure detection (DESIGN.md §11) ------------------------------------
+
+    def heartbeat(self, instance_id: int, now: float) -> None:
+        """Per-step liveness beacon from an engine. A heartbeat from a
+        SUSPECT instance revives it to ALIVE (slow or lossy, not dead)."""
+        inst = self.instances.get(instance_id)
+        if inst is None or not inst.alive:
+            return
+        inst.last_heartbeat = now
+        if inst.health == "suspect":
+            inst.health = "alive"
+
+    def check_health(self, now: float) -> List[int]:
+        """ALIVE -> SUSPECT -> DEAD state machine over heartbeat gaps.
+        An instance that never heartbeated is judged from its
+        registration time (so a crash before the first beat is still
+        detected). Returns instances newly declared DEAD this call —
+        the runtime recovers their in-flight requests. No-op unless
+        heartbeat_interval > 0 (oracle mode stays byte-identical)."""
+        itv = self.config.heartbeat_interval
+        if itv <= 0.0:
+            return []
+        newly_dead: List[int] = []
+        for i, inst in list(self.instances.items()):
+            if not inst.alive:
+                continue
+            base = (inst.last_heartbeat if inst.last_heartbeat >= 0.0
+                    else inst.registered_at)
+            gap = now - base
+            if gap >= self.config.dead_misses * itv:
+                self.stats["detected_dead"] += 1
+                self.on_instance_failure(i, now)   # sets health="dead"
+                newly_dead.append(i)
+            elif (gap >= self.config.suspect_misses * itv
+                  and inst.health == "alive"):
+                inst.health = "suspect"
+                self.stats["suspected"] += 1
+        return newly_dead
+
+    # ---- gauge anti-entropy (DESIGN.md §11) -----------------------------------
+
+    def reconcile(self, instance_id: int,
+                  digest: Dict[str, Sequence[Tuple["PathKey", int]]],
+                  now: float = 0.0) -> int:
+        """Repair this instance's view of the forest from a path-keyed
+        residency digest — the instance's TRUE device/host markings as
+        ``(path_key, length)`` spans (LocalScheduler.residency_digest).
+        Once eviction notifications can drop, the global markings and
+        cached-token gauges drift; this is the anti-entropy half that
+        re-converges them. Spans are content-addressed, so they resolve
+        across tree-split granularity via ``resolve_span`` exactly like
+        protocol-v2 notifications; the gauges are set to the digest
+        totals verbatim (exact even for unresolvable spans). Returns
+        the number of repaired markings/gauges."""
+        inst = self.instances.get(instance_id)
+        if inst is None or not inst.alive:
+            return 0
+        self.stats["reconciles"] += 1
+        cover: Dict[str, Dict[int, RadixNode]] = {"device": {}, "host": {}}
+        for tier in ("device", "host"):
+            for key, toks in digest.get(tier, ()):
+                for node in self.tree.resolve_span(PrefixSpan(key, toks)):
+                    cover[tier][node.node_id] = node
+        repairs = 0
+        touched: List[RadixNode] = []
+        for node in self.tree.iter_nodes():
+            if (instance_id in node.instances
+                    and node.node_id not in cover["device"]):
+                self.tree.remove_instance(node, instance_id)
+                repairs += 1
+                touched.append(node)
+            if (instance_id in node.host_instances
+                    and node.node_id not in cover["host"]):
+                node.host_instances.discard(instance_id)
+                repairs += 1
+                touched.append(node)
+        for node in cover["device"].values():
+            if instance_id not in node.instances:
+                node.instances.add(instance_id)
+                repairs += 1
+        for node in cover["host"].values():
+            if instance_id not in node.host_instances:
+                node.host_instances.add(instance_id)
+                repairs += 1
+        # gauges + aged marks rebuilt from the digest verbatim
+        dev_total = sum(t for _, t in digest.get("device", ()))
+        host_total = sum(t for _, t in digest.get("host", ()))
+        if inst.cached_tokens != dev_total:
+            inst.cached_tokens = dev_total
+            repairs += 1
+        if inst.host_cached_tokens != host_total:
+            inst.host_cached_tokens = host_total
+            repairs += 1
+        inst.device_marks = OrderedDict()
+        inst.host_marks = OrderedDict()
+        inst.device_marked_sum = 0
+        inst.host_marked_sum = 0
+        for key, toks in digest.get("device", ()):
+            inst.mark_device(key, toks, now)
+        for key, toks in digest.get("host", ()):
+            inst.mark_host(key, toks, now)
+        for node in touched:
+            self.tree.prune_upward(node, now)
+        self.stats["reconcile_repairs"] += repairs
+        return repairs
 
     # ---- the scheduling entry point -------------------------------------------
 

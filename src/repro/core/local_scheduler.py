@@ -60,8 +60,19 @@ class AccountingHostTier:
 
     carries_bytes = False    # migration payloads are accounting-only
 
+    def __init__(self, faults=None):
+        # duck-typed fault injector (serving.faults.FaultInjector) so
+        # simulator runs can lose demote "DMA" like the engine tier does;
+        # core stays import-free of serving.
+        self.faults = faults
+
     def demote_many(self, nodes: Sequence[RadixNode]) -> Dict[PathKey, int]:
-        return {n.path_key: len(n.tokens) for n in nodes}
+        out: Dict[PathKey, int] = {}
+        for n in nodes:
+            if self.faults is not None and self.faults.dma_fails("demote"):
+                continue             # transfer lost: span drops, not demotes
+            out[n.path_key] = len(n.tokens)
+        return out
 
     def drop(self, key: PathKey) -> None:
         pass
@@ -1129,14 +1140,27 @@ class LocalScheduler:
 
     # ---- failure handling -----------------------------------------------------------------
 
+    def residency_digest(self) -> Dict[str, List[Tuple[PathKey, int]]]:
+        """Compact path-keyed truth of what this instance actually
+        holds, for the global scheduler's anti-entropy reconcile
+        (DESIGN.md §11): per-node ``(path_key, length)`` spans for the
+        device tier (this scheduler's own tree markings — the exact
+        state eviction notifications are emitted from) and the host
+        tier (the demote LRU). Content-addressed, so the global forest
+        resolves them across split granularity like v2 notifications."""
+        inst = self.config.instance_id
+        dev = [(n.path_key, len(n.tokens))
+               for n in self.tree.iter_nodes() if inst in n.instances]
+        return {"device": dev, "host": list(self._host_lru.items())}
+
     def drain(self) -> List[Request]:
-        """Pull every queued/in-flight request (instance dying/restarting)."""
+        """Pull every queued/in-flight request (instance dying/restarting).
+        Requests come back scrubbed of every placement-scoped field
+        (``reset_for_retry``): stale ``migrated_len``/``prefetched_len``/
+        partial outputs from this placement would corrupt the next one."""
         out = self.waiting + self.prefilling + self.running
         for r in out:
-            r.state = RequestState.QUEUED_GLOBAL
-            r.instance = None
-            r.prefill_done = 0
-            r.output_tokens = []
+            r.reset_for_retry()
         self.waiting, self.prefilling, self.running = [], [], []
         self._pinned.clear()
         self._acct.clear()

@@ -40,6 +40,7 @@ class Request:
                                             # the serving instance's tier
     prefill_done: int = 0                   # prompt tokens prefilled so far
     output_tokens: List[int] = field(default_factory=list)
+    retries: int = 0                        # re-route attempts consumed
     # timeline
     scheduled_time: float = 0.0             # global scheduler decision
     first_run_time: float = 0.0             # first iteration on an engine
@@ -53,6 +54,25 @@ class Request:
     @property
     def missed_len(self) -> int:
         return max(self.prompt_len - self.cached_len, 0)
+
+    def reset_for_retry(self) -> None:
+        """Scrub every placement-scoped field before re-routing to a
+        new instance. A retried request must look freshly arrived to
+        the global scheduler: stale `migrated_len` / `prefetched_len` /
+        partial outputs from a dead placement would corrupt both the
+        E2 cost model and the accounting invariants."""
+        self.state = RequestState.QUEUED_GLOBAL
+        self.instance = None
+        self.cached_len = 0
+        self.device_cached_len = 0
+        self.restored_len = 0
+        self.prefetched_len = 0
+        self.migrated_len = 0
+        self.prefill_done = 0
+        self.output_tokens = []
+        self.scheduled_time = 0.0
+        self.first_run_time = 0.0
+        self.first_token_time = 0.0
 
     def latency(self) -> float:
         return self.finish_time - self.arrival_time

@@ -13,11 +13,23 @@ against fused ragged iterations (DESIGN.md §7) unless a caller forces
 the dense or unfused reference planes. ``check_invariants`` reconciles
 the layers after any amount of rebalancing: pool refcounts, scheduler
 token accounting, and the global scheduler's cached-token gauges.
+
+Fault tolerance (DESIGN.md §11): built with a ``FaultConfig`` the
+runtime injects crashes / DMA failures / notification loss through a
+shared ``FaultInjector`` and survives them — heartbeat-driven
+ALIVE→SUSPECT→DEAD detection replaces the oracle failure path, stranded
+requests retry with budget + exponential backoff into a terminal FAILED
+state, delayed notifications queue for later delivery, and a periodic
+anti-entropy reconcile repairs the global gauges from per-instance
+residency digests. With no FaultConfig every hook is inert and the loop
+is byte-identical to the fault-free runtime.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import heapq
+import itertools
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -26,6 +38,7 @@ from ..core.e2 import MigrationPlan
 from ..core.global_scheduler import GlobalScheduler, GlobalSchedulerConfig
 from ..core.request import Request, RequestState
 from .engine import Engine, EngineConfig
+from .faults import FaultConfig, FaultInjector, InstanceCrashed
 
 
 class ClusterRuntime:
@@ -33,7 +46,10 @@ class ClusterRuntime:
                  engine_cfg: Optional[EngineConfig] = None,
                  scheduler_cfg: Optional[GlobalSchedulerConfig] = None,
                  cost_model: Optional[CostModel] = None,
-                 policy: str = "e2"):
+                 policy: str = "e2",
+                 fault_config: Optional[FaultConfig] = None,
+                 retry_budget: int = 3,
+                 retry_backoff: float = 0.0):
         self.policy = policy
         base = engine_cfg or EngineConfig()
         self.gs = GlobalScheduler(
@@ -42,30 +58,72 @@ class ClusterRuntime:
             config=scheduler_cfg or GlobalSchedulerConfig(
                 capacity_tokens=base.capacity_tokens,
                 host_capacity_tokens=base.host_capacity_tokens))
+        self.faults = (FaultInjector(fault_config)
+                       if fault_config is not None else None)
         self.engines: Dict[int, Engine] = {}
         for i in range(num_instances):
             ec = dataclasses.replace(base, instance_id=i)
             self.engines[i] = Engine(model_cfg, params, ec,
                                      on_evict=self._notify_evictions)
+            if self.faults is not None:
+                self.engines[i].attach_faults(self.faults)
         self._rr_next = 0
         self.finished: List[Request] = []
+        # terminal failures (retry budget exhausted / zero survivors):
+        # surfaced here instead of hanging run()
+        self.failed_requests: List[Request] = []
+        self.retry_budget = retry_budget
+        self.retry_backoff = retry_backoff
+        self._retry_q: List[Tuple[float, int, Request]] = []
+        self._retry_seq = itertools.count()
+        # delayed eviction notifications: (due, inst, spans, demoted,
+        # host_dropped)
+        self._pending_notify: List[Tuple[float, int, list, list, list]] = []
+        self._straggle_credit: Dict[int, float] = {}
+        self._now = 0.0
+        self._last_reconcile = 0.0
+        self._detection = self.gs.config.heartbeat_interval > 0.0
         self.stats = {"migrations": 0, "migrated_tokens": 0,
-                      "drain_migrated_tokens": 0}
+                      "drain_migrated_tokens": 0, "retries": 0,
+                      "failed_terminal": 0, "failed_no_survivors": 0,
+                      "recovered_requests": 0,
+                      "crash_with_inflight_dma": 0}
 
     def _notify_evictions(self, inst: int, spans, *, demoted=(),
                           host_dropped=()) -> None:
         """Tiered eviction notification — protocol v2: content-addressed
         PrefixSpans with keyword-only tier outcome (demoted spans are
-        still exploitable at restore cost; host-dropped are gone)."""
+        still exploitable at restore cost; host-dropped are gone). With
+        faults attached the notification can be dropped (anti-entropy
+        repairs the drift later) or delayed (queued for delivery at a
+        later step)."""
+        if self.faults is not None:
+            if self.faults.drop_notify():
+                return
+            d = self.faults.notify_delay()
+            if d > 0.0:
+                self._pending_notify.append(
+                    (self._now + d, inst, list(spans), list(demoted),
+                     list(host_dropped)))
+                return
         self.gs.on_evictions(inst, spans, demoted=demoted,
                              host_dropped=host_dropped)
 
     # ---- request intake -------------------------------------------------
 
     def submit(self, request: Request, now: float) -> int:
+        alive = self.gs.alive_instances()
+        if not alive:
+            # zero survivors: park the request as terminally failed
+            # (with a clear stat) instead of raising from inside the
+            # rr index / e2 schedule
+            request.state = RequestState.FAILED
+            request.finish_time = now
+            self.stats["failed_no_survivors"] += 1
+            self.failed_requests.append(request)
+            return -1
         prefetch = None
         if self.policy == "rr":
-            alive = self.gs.alive_instances()
             inst = alive[self._rr_next % len(alive)]
             self._rr_next += 1
             request.instance = inst
@@ -95,7 +153,9 @@ class ClusterRuntime:
         charged), and feed the executed ranges back to the global
         forest. The target's §8 restore path then materializes the span
         on device instead of recomputing the prefill. Degrades safely:
-        whatever part of the plan no longer exists just recomputes."""
+        whatever part of the plan no longer exists just recomputes —
+        the same path an injected migration-DMA failure (whole or
+        partial transfer loss) degrades through."""
         src_e = self.engines.get(plan.src)
         dst_e = self.engines.get(dst)
         if (src_e is None or dst_e is None or src_e.failed
@@ -105,6 +165,13 @@ class ClusterRuntime:
                                                  plan.lo, plan.hi)
         if not spans:
             return
+        if self.faults is not None and self.faults.dma_fails("migrate"):
+            # inter-host DCN transfer failed; a partial failure keeps a
+            # leading prefix of the whole-node pieces (still contiguous
+            # from plan.lo, hence still ingestible)
+            spans = spans[:self.faults.partial_keep(len(spans))]
+            if not spans:
+                return
         accepted = dst_e.scheduler.ingest_host_span(request.tokens, spans,
                                                     now)
         if accepted:
@@ -117,24 +184,52 @@ class ClusterRuntime:
     # ---- the loop ----------------------------------------------------------
 
     def step(self, now: float) -> List[Request]:
+        self._now = max(self._now, now)
+        if self.faults is not None:
+            self._deliver_notifications(now)
+            for inst in self.faults.crashes_due(now):
+                self._crash_instance(inst, now)
+        if self._retry_q:
+            self._drain_retries(now)
         done: List[Request] = []
         for inst, eng in self.engines.items():
             if eng.failed or not self.gs.instances[inst].alive:
                 continue
-            for r in eng.step(now):
+            if self.faults is not None and not self._straggle_tick(inst):
+                # straggling, not dead: skip the iteration but keep
+                # heartbeating so the detector soft-avoids instead of
+                # re-routing
+                self._heartbeat(inst, now)
+                continue
+            try:
+                out = eng.step(now)
+            except InstanceCrashed:
+                self._crashed_mid_step(inst, now)
+                continue
+            for r in out:
                 self.gs.on_request_complete(r, now)
                 done.append(r)
+            self._heartbeat(inst, now)
+        if self._detection:
+            for inst in self.gs.check_health(now):
+                self._recover_instance(inst, now)
+        re = self.gs.config.reconcile_every
+        if re > 0.0 and now - self._last_reconcile >= re:
+            self.reconcile_all(now)
         self.finished.extend(done)
         return done
 
     def run(self, requests: Sequence[Request], *, dt: float = 0.05,
             max_iters: int = 100_000) -> List[Request]:
         """Drive arrivals (by request.arrival_time) + engine iterations
-        in virtual time until everything finishes."""
+        in virtual time until every request FINISHED or terminally
+        FAILED (each counted exactly once: aborts surface through
+        ``finished`` with state FAILED, retry exhaustion through
+        ``failed_requests``)."""
         pending = sorted(requests, key=lambda r: r.arrival_time)
         now, i, n_total = 0.0, 0, len(pending)
         it = 0
-        while len(self.finished) < n_total:
+        while len(self.finished) + len(self.failed_requests) < n_total:
             it += 1
             if it > max_iters:
                 raise RuntimeError("cluster run did not converge")
@@ -143,12 +238,146 @@ class ClusterRuntime:
                 i += 1
             self.step(now)
             now += dt
-            # idle fast-forward to the next arrival
-            if i < len(pending) and all(e.depth == 0
-                                        for e in self.engines.values()
-                                        if not e.failed):
-                now = max(now, pending[i].arrival_time)
+            # idle fast-forward to the next externally-scheduled event
+            # (arrival, retry due, delayed notification, injected crash)
+            if all(e.depth == 0 for e in self.engines.values()
+                   if not e.failed):
+                nxt: List[float] = []
+                if i < len(pending):
+                    nxt.append(pending[i].arrival_time)
+                if self._retry_q:
+                    nxt.append(self._retry_q[0][0])
+                if self._pending_notify:
+                    nxt.append(min(p[0] for p in self._pending_notify))
+                if self.faults is not None:
+                    t = self.faults.next_crash_time()
+                    if t is not None:
+                        nxt.append(t)
+                if nxt:
+                    now = max(now, min(nxt))
         return self.finished
+
+    # ---- fault machinery (DESIGN.md §11) ----------------------------------
+
+    def _heartbeat(self, inst: int, now: float) -> None:
+        if not self._detection:
+            return
+        if self.faults is not None and self.faults.drop_heartbeat():
+            return
+        self.gs.heartbeat(inst, now)
+
+    def _straggle_tick(self, inst: int) -> bool:
+        """Straggler pacing: a factor-f instance runs one real step per
+        f cluster steps (credit accumulator — non-integer factors pace
+        correctly on average)."""
+        f = self.faults.straggle_factor(inst)
+        if f <= 1.0:
+            return True
+        c = self._straggle_credit.get(inst, 0.0) + 1.0 / f
+        if c >= 1.0:
+            self._straggle_credit[inst] = c - 1.0
+            return True
+        self._straggle_credit[inst] = c
+        return False
+
+    def _crash_instance(self, inst: int, now: float) -> None:
+        """A scheduled crash came due. Mid-step mode arms the engine's
+        in-step fault point (it dies on its next step with admissions
+        taken and DMA in flight); otherwise the data plane dies right
+        here between steps."""
+        eng = self.engines.get(inst)
+        if eng is None or eng.failed:
+            return
+        if self.faults.cfg.crash_mid_step:
+            self.faults.arm_crash(inst)
+            return
+        self.faults.record_crash(inst)
+        eng.crash()
+        if not self._detection:
+            self._recover_instance(inst, now)   # oracle fallback
+
+    def _crashed_mid_step(self, inst: int, now: float) -> None:
+        """``InstanceCrashed`` escaped ``eng.step``: the engine died
+        with (possibly) prefetch scatters and demote DMA in flight."""
+        eng = self.engines[inst]
+        tier = eng.scheduler.host_tier
+        if eng._prefetch_inflight or (tier is not None
+                                      and getattr(tier, "_pending", None)):
+            self.stats["crash_with_inflight_dma"] += 1
+        eng.crash()
+        if not self._detection:
+            self._recover_instance(inst, now)   # oracle fallback
+
+    def _recover_instance(self, inst: int, now: float) -> None:
+        """The control plane now knows ``inst`` is dead (heartbeat
+        detector, oracle fallback, or explicit fail_instance): repair
+        the global forest if the detector hasn't already, drain the
+        stranded requests, and re-route them with retry accounting."""
+        if self.gs.instances[inst].alive:
+            self.gs.on_instance_failure(inst)
+        reqs = self.engines[inst].fail()
+        self.stats["recovered_requests"] += len(reqs)
+        for r in reqs:
+            self._reroute(r, now)
+
+    def _reroute(self, r: Request, now: float) -> None:
+        """Retry with budget + exponential backoff. The request re-
+        enters scheduling scrubbed of every placement-scoped field
+        (``reset_for_retry``); past the budget it terminally FAILs
+        (surfaced in ``failed_requests`` / stats) instead of cycling."""
+        if r.state == RequestState.FINISHED:
+            return
+        r.reset_for_retry()
+        r.retries += 1
+        if r.retries > self.retry_budget:
+            r.state = RequestState.FAILED
+            r.finish_time = now
+            self.stats["failed_terminal"] += 1
+            self.failed_requests.append(r)
+            return
+        self.stats["retries"] += 1
+        if self.retry_backoff > 0.0:
+            delay = self.retry_backoff * (2.0 ** (r.retries - 1))
+            heapq.heappush(self._retry_q,
+                           (now + delay, next(self._retry_seq), r))
+        else:
+            self.submit(r, now)
+
+    def _drain_retries(self, now: float) -> None:
+        while self._retry_q and self._retry_q[0][0] <= now:
+            _, _, r = heapq.heappop(self._retry_q)
+            self.submit(r, now)
+
+    def _deliver_notifications(self, now: float) -> None:
+        due = [p for p in self._pending_notify if p[0] <= now]
+        if not due:
+            return
+        self._pending_notify = [p for p in self._pending_notify
+                                if p[0] > now]
+        for _, inst, spans, demoted, hdrop in due:
+            # late delivery degrades safely: spans that no longer
+            # resolve (or instances since removed) are no-ops in
+            # on_evictions, and anti-entropy repairs any residue
+            self.gs.on_evictions(inst, spans, demoted=demoted,
+                                 host_dropped=hdrop)
+
+    def reconcile_all(self, now: float) -> int:
+        """Gauge anti-entropy pump: every alive instance ships its
+        path-keyed residency digest and the global scheduler repairs
+        markings + cached-token gauges (exact afterwards). Returns the
+        number of repairs."""
+        self._last_reconcile = now
+        repairs = 0
+        for inst, eng in self.engines.items():
+            if eng.failed or not self.gs.instances[inst].alive:
+                continue
+            repairs += self.gs.reconcile(
+                inst, eng.scheduler.residency_digest(), now)
+        return repairs
+
+    def fault_stats(self) -> Dict[str, int]:
+        """The injector's own counters (empty dict on fault-free runs)."""
+        return dict(self.faults.stats) if self.faults is not None else {}
 
     # ---- observability / reconciliation ---------------------------------------
 
@@ -234,12 +463,20 @@ class ClusterRuntime:
     # ---- fault handling --------------------------------------------------------
 
     def fail_instance(self, inst: int, now: float) -> int:
-        """Hard-kill an instance; re-route its in-flight requests. Its
-        host tier dies with the host — nothing can migrate out."""
-        reqs = self.engines[inst].fail()
-        self.gs.on_instance_failure(inst)
+        """Hard-kill an instance through the ORACLE path (tests /
+        operator action: the control plane knows instantly); injected
+        crashes go through the heartbeat detector instead. Its host
+        tier dies with the host — nothing can migrate out. Re-routed
+        requests are scrubbed (``reset_for_retry``) and retry-budgeted."""
+        eng = self.engines[inst]
+        if eng.failed and not self.gs.instances[inst].alive:
+            return 0
+        reqs = eng.fail()
+        if self.gs.instances[inst].alive:
+            self.gs.on_instance_failure(inst)
+        self.stats["recovered_requests"] += len(reqs)
         for r in reqs:
-            self.submit(r, now)
+            self._reroute(r, now)
         return len(reqs)
 
     def drain_instance(self, inst: int, now: float) -> int:
@@ -290,7 +527,7 @@ class ClusterRuntime:
         reqs = src_e.fail()
         self.gs.remove_instance(inst, now)
         for r in reqs:
-            self.submit(r, now)
+            self._reroute(r, now)
         return moved
 
     def add_instance(self, model_cfg, params, now: float,
@@ -301,6 +538,9 @@ class ClusterRuntime:
                                  instance_id=inst)
         self.engines[inst] = Engine(model_cfg, params, ec,
                                     on_evict=self._notify_evictions)
+        if self.faults is not None:
+            self.engines[inst].attach_faults(self.faults)
         self.gs.add_instance(inst,
-                             host_capacity_tokens=ec.host_capacity_tokens)
+                             host_capacity_tokens=ec.host_capacity_tokens,
+                             now=now)
         return inst

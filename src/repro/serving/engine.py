@@ -63,6 +63,7 @@ from ..core.local_scheduler import Batch, LocalScheduler, LocalSchedulerConfig
 from ..core.radix_tree import PathKey, PrefixSpan
 from ..core.request import Request, RequestState
 from ..models import zoo, transformer as T
+from .faults import CircuitBreaker, InstanceCrashed
 from .kv_cache import PagedKVPool
 from .kv_offload import HostKVStore, PagedHostTier
 
@@ -191,6 +192,11 @@ class Engine:
                       "prefetch_batches_overlapped": 0,
                       "prefetch_overlap_frac": 0.0}
         self.failed = False
+        # fault injection (DESIGN.md §11): None on fault-free runs —
+        # every hook below is behind an `is not None` check, so the
+        # normal data plane stays byte-identical
+        self.faults = None
+        self._cb: Optional[CircuitBreaker] = None
         self.host_store: Optional[HostKVStore] = None
         # restores staged by admissions, flushed once per step
         self._pending_restore: List[Tuple[np.ndarray, np.ndarray, Any]] = []
@@ -484,7 +490,11 @@ class Engine:
         # the aliased prefix (planned BEFORE _ensure_free, revalidated
         # after — freeing room can cascade into host-capacity drops)
         restore_plan: List[Tuple[PathKey, int, int, int]] = []
-        if self.host_store is not None and best_len == reuse:
+        # an OPEN circuit breaker (repeated restore-DMA failures)
+        # disables restore planning for its cooldown: the request
+        # recomputes the demoted span instead of thrashing a bad path
+        if self.host_store is not None and best_len == reuse \
+                and (self._cb is None or self._cb.allow(now)):
             restore_plan, _ = self._host_restore_chain(
                 m, reuse, r.prompt_len - 1)
         rid = ("req", r.request_id)
@@ -493,6 +503,14 @@ class Engine:
         self._ensure_free(need + self.pool.page_size, now)
         restore_end = reuse
         for key, nid, lo, hi in restore_plan:
+            if self.faults is not None and self.faults.dma_fails("restore"):
+                # injected host->device DMA failure: degrade to
+                # recomputing the rest of the chain; the breaker opens
+                # the whole restore path after repeated hits
+                self.stats["restore_failures"] += 1
+                if self._cb is not None:
+                    self._cb.record_failure(now)
+                break
             e = self._host_entry(key)
             if (e is None or e.node_id != nid
                     or e.start > lo or e.start + e.length < hi):
@@ -503,6 +521,8 @@ class Engine:
                 self.stats["restore_failures"] += 1
                 break
             restore_end = hi
+        if self._cb is not None and restore_end > reuse:
+            self._cb.record_success()
         restore_plan = [(key, nid, lo, min(hi, restore_end))
                         for key, nid, lo, hi in restore_plan
                         if lo < restore_end]
@@ -651,12 +671,24 @@ class Engine:
         while ``_admit_paged`` walks the tables."""
         if self.host_store is None or not self.scheduler.prefetch_enabled:
             return
+        if self._cb is not None and not self._cb.allow(now):
+            return              # breaker open: no speculative DMA either
         staged: List[Tuple[dict, Tuple]] = []
         for rec in self.scheduler.plan_prefetch(now):
+            if self.faults is not None and self.faults.dma_fails("prefetch"):
+                # injected speculative-restore DMA failure: cancel the
+                # record (reservation refunds, admission will restore
+                # or recompute on the critical path instead)
+                if self._cb is not None:
+                    self._cb.record_failure(now)
+                self.scheduler.cancel_prefetch(rec["id"], now)
+                continue
             got = self._stage_prefetch(rec)
             if got is None:
                 self.scheduler.cancel_prefetch(rec["id"], now)
             else:
+                if self._cb is not None:
+                    self._cb.record_success()
                 staged.append((rec, got))
         if not staged:
             return
@@ -917,6 +949,9 @@ class Engine:
         behavior)."""
         batch = self.scheduler.form_batch(now)
         if not batch.items and not self.scheduler.prefetch_enabled:
+            if self.faults is not None \
+                    and self.faults.take_crash(self.econf.instance_id):
+                raise InstanceCrashed(self.econf.instance_id)
             return []
         finished: List[Request] = []
         aborted: List[Request] = []
@@ -937,6 +972,13 @@ class Engine:
         # dispatch: the scatter rides ahead of compute on the device
         # stream, and the host-side bookkeeping drains after it
         self._issue_prefetches(now)
+
+        # armed mid-step crash fires HERE — after admissions took pool
+        # pages and prefetch scatters went in flight, before the model
+        # runs: the worst spot, with DMA and reservations stranded
+        if self.faults is not None \
+                and self.faults.take_crash(self.econf.instance_id):
+            raise InstanceCrashed(self.econf.instance_id)
 
         if batch.items:
             has_prefill = any(it.chunk_tokens > 0
@@ -1152,6 +1194,26 @@ class Engine:
         self.stats["model_dispatches"] += 1
 
     # ---- failure ---------------------------------------------------------------
+
+    def attach_faults(self, faults,
+                      breaker: Optional[CircuitBreaker] = None) -> None:
+        """Wire the cluster's shared fault injector into this engine's
+        fault points, plus a per-instance circuit breaker over the
+        host-tier restore/prefetch path (only meaningful when the tier
+        exists). Fault-free runs never call this, so every hook stays
+        behind ``self.faults is not None``."""
+        self.faults = faults
+        if self.econf.host_capacity_tokens > 0:
+            self._cb = breaker if breaker is not None else CircuitBreaker()
+
+    def crash(self) -> None:
+        """SILENT death (vs ``fail``, the oracle path): the data plane
+        stops — live state gone, no more steps — but the scheduler's
+        queues and the global scheduler's view are left stranded until
+        the heartbeat detector declares this instance DEAD and the
+        runtime recovers it through ``fail``."""
+        self.failed = True
+        self.live.clear()
 
     def fail(self) -> List[Request]:
         """Simulate instance death: drop all device state, return the

@@ -270,6 +270,14 @@ class PagedHostTier:
                 pool.release(key)
                 continue
             if cov > start:
+                faults = getattr(eng, "faults", None)
+                if faults is not None and faults.dma_fails("demote"):
+                    # injected device->host DMA failure: the transfer is
+                    # lost, so the span DROPS instead of demoting — the
+                    # scheduler sees no demotion and the eviction
+                    # notification reports the span as gone
+                    pool.release(key)
+                    continue
                 p0, p1 = start // ps, -(-cov // ps)
                 jobs.append((node.path_key, node.node_id, start, cov,
                              len(all_pages), p1 - p0))

@@ -11,6 +11,12 @@ Baselines:
   policy="e2"  — Preble (this paper)
   policy="rr"  — round-robin data parallelism + per-instance prefix
                  caching (the paper's SGLang/vLLM baseline setup)
+
+Fault parity (DESIGN.md §11): the same fault hooks the real cluster
+runtime exposes — instance crashes, demote-DMA loss (through the
+AccountingHostTier), dropped/delayed eviction notifications, heartbeat
+detection, retry/backoff, gauge anti-entropy — so scheduler-level
+benches can chaos-test placement quality without real engines.
 """
 
 from __future__ import annotations
@@ -19,13 +25,14 @@ import heapq
 import itertools
 import statistics
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 from ..core.cost_model import CostModel, cost_model_for
 from ..core.global_scheduler import GlobalScheduler, GlobalSchedulerConfig
 from ..core.local_scheduler import (AccountingHostTier, LocalScheduler,
                                     LocalSchedulerConfig)
 from ..core.request import Request, RequestState
+from .faults import FaultConfig, FaultInjector
 
 
 @dataclass
@@ -63,6 +70,14 @@ class SimConfig:
     # DMA stream realizes with real bytes.
     prefetch_budget_tokens: int = 0
     speed_factors: Optional[Dict[int, float]] = None  # stragglers
+    # ---- fault model (DESIGN.md §11; None = fault-free, zero-cost) ----
+    faults: Optional[FaultConfig] = None
+    heartbeat_interval: float = 0.0     # 0 = oracle failure knowledge
+    suspect_misses: int = 3
+    dead_misses: int = 10
+    reconcile_every: float = 0.0        # gauge anti-entropy period
+    retry_budget: int = 3
+    retry_backoff: float = 0.25         # exponential backoff base (s)
 
 
 @dataclass
@@ -70,6 +85,7 @@ class SimResult:
     finished: List[Request]
     makespan: float
     stats: Dict[str, float] = field(default_factory=dict)
+    failed: List[Request] = field(default_factory=list)
 
     def latencies(self) -> List[float]:
         return [r.latency() for r in self.finished]
@@ -102,7 +118,11 @@ class Simulator:
             imbal_ratio=cfg.imbal_ratio,
             capacity_tokens=cfg.capacity_tokens,
             host_capacity_tokens=cfg.host_capacity_tokens,
-            enable_migration=cfg.enable_migration)
+            enable_migration=cfg.enable_migration,
+            heartbeat_interval=cfg.heartbeat_interval,
+            suspect_misses=cfg.suspect_misses,
+            dead_misses=cfg.dead_misses,
+            reconcile_every=cfg.reconcile_every)
         if not cfg.enable_rebalance:
             gs_cfg.th_bal = 1e18
         if not cfg.enable_autoscale:
@@ -114,6 +134,8 @@ class Simulator:
         if cfg.speed_factors:
             for i, f in cfg.speed_factors.items():
                 self.gs.set_speed_factor(i, f)
+        self.faults = (FaultInjector(cfg.faults)
+                       if cfg.faults is not None else None)
         self.locals: Dict[int, LocalScheduler] = {}
         for i in range(cfg.num_instances):
             self.locals[i] = LocalScheduler(
@@ -128,19 +150,40 @@ class Simulator:
                     host_capacity_tokens=cfg.host_capacity_tokens,
                     prefetch_budget_tokens=cfg.prefetch_budget_tokens),
                 on_evict=self._notify_evictions,
-                host_tier=(AccountingHostTier()
+                host_tier=(AccountingHostTier(faults=self.faults)
                            if cfg.host_capacity_tokens > 0 else None))
         self._busy: Dict[int, bool] = {i: False for i in self.locals}
         self._rr = itertools.cycle(range(cfg.num_instances))
         self._ctx_sum: Dict[int, float] = {i: 0.0 for i in self.locals}
         self._ctx_n: Dict[int, int] = {i: 0 for i in self.locals}
+        # instances whose data plane died (silent until detection)
+        self._crashed: Set[int] = set()
+        # delayed eviction notifications, delivered by the event loop
+        self._pending_notify: List[Tuple[float, int, list, list, list]] = []
+        self._now = 0.0
+        self.finished: List[Request] = []
+        self.failed: List[Request] = []
+        self.fault_counters = {"retries": 0, "failed_terminal": 0,
+                               "failed_no_survivors": 0,
+                               "recovered_requests": 0}
 
     def _notify_evictions(self, inst: int, spans, *, demoted=(),
                           host_dropped=()) -> None:
         """Forward local evictions WITH the tier outcome (demoted vs
         truly dropped), so E2 keeps pricing demoted prefixes as
         restorable on that instance instead of writing them off.
-        Protocol v2: content-addressed spans, keyword-only tiers."""
+        Protocol v2: content-addressed spans, keyword-only tiers. With
+        faults: the notification can drop (anti-entropy repairs later)
+        or queue for delayed delivery."""
+        if self.faults is not None:
+            if self.faults.drop_notify():
+                return
+            d = self.faults.notify_delay()
+            if d > 0.0:
+                self._pending_notify.append(
+                    (self._now + d, inst, list(spans), list(demoted),
+                     list(host_dropped)))
+                return
         self.gs.on_evictions(inst, spans, demoted=demoted,
                              host_dropped=host_dropped)
 
@@ -159,6 +202,12 @@ class Simulator:
         spans = src_ls.export_host_span(r.tokens, plan.lo, plan.hi)
         if not spans:
             return
+        if self.faults is not None and self.faults.dma_fails("migrate"):
+            # inter-host transfer lost (partial keeps a leading,
+            # still-contiguous prefix of the whole-node pieces)
+            spans = spans[:self.faults.partial_keep(len(spans))]
+            if not spans:
+                return
         accepted = self.locals[dst].ingest_host_span(r.tokens, spans, now)
         if accepted:
             r.migrated_len = sum(hi - lo for lo, hi in accepted)
@@ -192,7 +241,52 @@ class Simulator:
         if migrated:
             t += self.cm.migrate_time(migrated)
         sf = self.cfg.speed_factors or {}
-        return t * sf.get(inst, 1.0)
+        f = sf.get(inst, 1.0)
+        if self.faults is not None:
+            f *= self.faults.straggle_factor(inst)
+        return t * f
+
+    # ---- fault machinery -----------------------------------------------------
+
+    def reconcile_all(self, now: float) -> int:
+        """Gauge anti-entropy: ship every live instance's residency
+        digest to the global scheduler; gauges/markings exact after."""
+        repairs = 0
+        for i, ls in self.locals.items():
+            if i in self._crashed or not self.gs.instances[i].alive:
+                continue
+            repairs += self.gs.reconcile(i, ls.residency_digest(), now)
+        return repairs
+
+    def check_invariants(self) -> None:
+        """Accounting reconciliation over the surviving instances —
+        the sim-plane mirror of ClusterRuntime.check_invariants."""
+        for i, ls in self.locals.items():
+            if i in self._crashed or not self.gs.instances[i].alive:
+                continue
+            assert ls.used_tokens >= 0, (
+                f"instance {i}: negative token accounting")
+            if ls.config.host_capacity_tokens > 0:
+                assert ls.host_used_tokens == sum(ls._host_lru.values()), (
+                    f"instance {i}: host LRU / gauge diverged")
+                assert (ls.host_used_tokens
+                        <= ls.config.host_capacity_tokens), (
+                    f"instance {i}: host tier over capacity")
+                assert set(ls._host_nodes) == set(ls._host_lru), (
+                    f"instance {i}: host node index / LRU diverged")
+            assert ls.prefetch_reserved_tokens >= 0, (
+                f"instance {i}: negative prefetch reservation")
+        for i, inst in self.gs.instances.items():
+            assert inst.cached_tokens >= 0, (
+                f"global gauge for instance {i} went negative")
+            assert inst.host_cached_tokens >= 0, (
+                f"global host gauge for instance {i} went negative")
+
+    def fault_stats(self) -> Dict[str, int]:
+        out = dict(self.fault_counters)
+        if self.faults is not None:
+            out.update(self.faults.stats)
+        return out
 
     # ---- main loop ------------------------------------------------------------
 
@@ -203,10 +297,55 @@ class Simulator:
         for r in requests:
             heapq.heappush(events,
                            (r.arrival_time, next(seq), "arrival", r))
-        finished: List[Request] = []
+        n_total = len(requests)
+        finished = self.finished = []
+        failed = self.failed = []
         now = 0.0
+        detection = self.gs.config.heartbeat_interval > 0.0
+        tick_itv = (self.gs.config.heartbeat_interval if detection
+                    else self.gs.config.reconcile_every)
+        if self.faults is not None:
+            for inst, t in self.faults.cfg.crash_at.items():
+                heapq.heappush(events, (t, next(seq), "crash", inst))
+        if tick_itv > 0.0:
+            heapq.heappush(events, (tick_itv, next(seq), "tick", None))
+        last_reconcile = 0.0
+        counters = self.fault_counters
+        guard = max(1_000_000, 1_000 * max(n_total, 1))
+
+        def terminal_fail(r: Request, t: float) -> None:
+            r.state = RequestState.FAILED
+            r.finish_time = t
+            failed.append(r)
+
+        def reroute(r: Request, t: float) -> None:
+            if r.state == RequestState.FINISHED:
+                return
+            r.reset_for_retry()
+            r.retries += 1
+            if r.retries > cfg.retry_budget:
+                counters["failed_terminal"] += 1
+                terminal_fail(r, t)
+                return
+            counters["retries"] += 1
+            delay = (cfg.retry_backoff * 2.0 ** (r.retries - 1)
+                     if cfg.retry_backoff > 0.0 else 0.0)
+            heapq.heappush(events, (t + delay, next(seq), "arrival", r))
+
+        def recover(inst: int, t: float) -> None:
+            """The control plane learned ``inst`` is dead: repair the
+            forest (unless the detector already did) and re-route its
+            stranded requests."""
+            if self.gs.instances[inst].alive:
+                self.gs.on_instance_failure(inst, t)
+            self._busy[inst] = False
+            for r in self.locals[inst].drain():
+                counters["recovered_requests"] += 1
+                reroute(r, t)
 
         def kick(inst: int, t: float) -> None:
+            if inst in self._crashed or not self.gs.instances[inst].alive:
+                return
             if self._busy[inst]:
                 return
             ls = self.locals[inst]
@@ -229,8 +368,16 @@ class Simulator:
             issue loop. An inbound migrated span prefetches the same
             way: its DCN leg is folded into the pipeline's latency and
             no longer charged at admission."""
+            if inst in self._crashed:
+                return
             ls = self.locals[inst]
             for rec in ls.plan_prefetch(t):
+                if (self.faults is not None
+                        and self.faults.dma_fails("prefetch")):
+                    # speculative DMA lost: refund the reservation;
+                    # admission restores on the critical path instead
+                    ls.cancel_prefetch(rec["id"], t)
+                    continue
                 mig, mig_rid = 0, None
                 for q in ls.waiting:
                     if q.request_id not in rec["want"] or not q.migrated_len:
@@ -252,22 +399,50 @@ class Simulator:
                                (t + dt, next(seq), "prefetch_done",
                                 (inst, rec["id"], mig, mig_rid)))
 
+        n_events = 0
         while events:
+            n_events += 1
+            if n_events > guard:
+                raise RuntimeError("sim did not converge")
             now, _, kind, payload = heapq.heappop(events)
+            self._now = now
+            if self._pending_notify:
+                due = [p for p in self._pending_notify if p[0] <= now]
+                if due:
+                    self._pending_notify = [p for p in self._pending_notify
+                                            if p[0] > now]
+                    for _, i, spans, dem, hdrop in due:
+                        self.gs.on_evictions(i, spans, demoted=dem,
+                                             host_dropped=hdrop)
             if kind == "arrival":
                 r: Request = payload
                 prefetch = None
                 if cfg.policy == "rr":
+                    alive = self.gs.alive_instances()
+                    if not alive:
+                        counters["failed_no_survivors"] += 1
+                        terminal_fail(r, now)
+                        continue
                     inst = next(self._rr)
+                    while inst not in alive:
+                        inst = next(self._rr)
                     r.instance = inst
                     r.scheduled_time = now
                 else:
+                    if not self.gs.alive_instances():
+                        counters["failed_no_survivors"] += 1
+                        terminal_fail(r, now)
+                        continue
                     decision = self.gs.schedule(r, now)
                     inst = decision.instance
                     if decision.migration is not None:
                         self._execute_migration(r, inst,
                                                 decision.migration, now)
                     prefetch = decision.prefetch
+                # a SILENTLY crashed instance can still be chosen (the
+                # detector hasn't fired): the request strands in its
+                # queue until detection recovers it — exactly the
+                # cluster runtime's behavior
                 self.locals[inst].enqueue(r, now, prefetch=prefetch)
                 # admission first, then plan prefetch for what still
                 # waits — the engine's per-step order (issue after
@@ -275,8 +450,40 @@ class Simulator:
                 # the admissions of the same event
                 kick(inst, now)
                 pump_prefetch(inst, now)
+            elif kind == "crash":
+                inst = payload
+                if inst in self._crashed:
+                    continue
+                self._crashed.add(inst)
+                self.faults.record_crash(inst)
+                self._busy[inst] = False
+                if not detection:
+                    recover(inst, now)      # oracle fallback
+            elif kind == "tick":
+                for i in self.locals:
+                    if i in self._crashed \
+                            or not self.gs.instances[i].alive:
+                        continue
+                    if self.faults is not None \
+                            and self.faults.drop_heartbeat():
+                        continue
+                    self.gs.heartbeat(i, now)
+                for i in self.gs.check_health(now):
+                    recover(i, now)
+                re_itv = self.gs.config.reconcile_every
+                if re_itv > 0.0 and now - last_reconcile >= re_itv:
+                    last_reconcile = now
+                    self.reconcile_all(now)
+                for i in self.locals:
+                    kick(i, now)
+                if len(finished) + len(failed) < n_total:
+                    heapq.heappush(events,
+                                   (now + tick_itv, next(seq), "tick",
+                                    None))
             elif kind == "prefetch_done":
                 inst, rec_id, mig, mig_rid = payload
+                if inst in self._crashed:
+                    continue            # the DMA died with the instance
                 ls = self.locals[inst]
                 done = ls.complete_prefetch(rec_id, now)
                 if done["landed"] and mig:
@@ -293,6 +500,8 @@ class Simulator:
                 pump_prefetch(inst, now)
             else:
                 inst, batch = payload
+                if inst in self._crashed:
+                    continue            # the iteration died mid-wave
                 self._busy[inst] = False
                 for it in batch.items:
                     if it.phase == "decode":
@@ -344,7 +553,12 @@ class Simulator:
             if total_prompt else 0.0)
         stats["host_used_tokens"] = float(sum(
             ls.host_used_tokens for ls in self.locals.values()))
-        return SimResult(finished, makespan=now, stats=stats)
+        if self.faults is not None:
+            stats.update({k: float(v)
+                          for k, v in self.fault_stats().items()})
+            stats["failed"] = float(len(failed))
+        return SimResult(finished, makespan=now, stats=stats,
+                         failed=failed)
 
 
 def simulate(requests: Sequence[Request], **kw) -> SimResult:

@@ -1,0 +1,23 @@
+"""Shared pytest plumbing for the suite.
+
+The full suite compiles a few hundred distinct XLA executables in one
+process (every module builds its own reduced models and jits).  Left
+unbounded, that accumulated native state can segfault jaxlib's CPU
+compiler deep into the run — deterministically, on whichever test
+crosses the threshold.  Dropping the jit/executable caches at module
+boundaries keeps peak in-process XLA state bounded by the heaviest
+single module; cross-module cache reuse is near zero anyway because
+each module uses its own reduced configs.
+"""
+
+import gc
+
+import jax
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _bound_xla_state_per_module():
+    yield
+    jax.clear_caches()
+    gc.collect()

@@ -1,0 +1,502 @@
+"""Fault injection + failure detection (DESIGN.md §11): crash-mid-wave
+recovery on the fused+tiered+prefetch plane, heartbeat state machine,
+retry/backoff semantics, circuit-breaker degradation, notification
+anti-entropy, and sim-vs-cluster fault accounting parity."""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.core.cost_model import cost_model_for
+from repro.core.global_scheduler import GlobalScheduler, GlobalSchedulerConfig
+from repro.core.local_scheduler import LocalScheduler, LocalSchedulerConfig
+from repro.core.request import Request, RequestState
+from repro.models import zoo
+from repro.serving.cluster import ClusterRuntime
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving.faults import (CircuitBreaker, FaultConfig,
+                                  FaultInjector)
+from repro.serving.simulator import SimConfig, Simulator
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = dataclasses.replace(reduced(ARCHS["smollm-360m"]), n_layers=2,
+                              dtype="float32")
+    api = zoo.build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    return cfg, api, params
+
+
+def _mk_requests(cfg, n, shared_len=24, tail=8, out=4, seed=0):
+    rng = np.random.default_rng(seed)
+    shared = tuple(rng.integers(1, cfg.vocab_size, shared_len).tolist())
+    return [Request(tokens=shared
+                    + tuple(rng.integers(1, cfg.vocab_size, tail).tolist()),
+                    max_new_tokens=out) for _ in range(n)]
+
+
+def _oracle(api, cfg, r):
+    import jax.numpy as jnp
+    toks = jnp.asarray(r.tokens)[None]
+    nxt, cache = api.prefill(_oracle.params, {"tokens": toks})
+    outs = [int(nxt[0])]
+    pad = r.max_new_tokens
+    cache = {g: {n: (jnp.pad(a, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+                     if n in ("k", "v") else a)
+                 for n, a in c.items()} for g, c in cache.items()}
+    for t in range(r.max_new_tokens - 1):
+        nxt, cache = api.decode(_oracle.params, cache,
+                                {"tokens": nxt,
+                                 "pos": jnp.int32(len(r.tokens) + t)})
+        outs.append(int(nxt[0]))
+    return outs
+
+
+# ---- unit: injector determinism + breaker ----------------------------------
+
+
+def test_injector_deterministic_and_site_independent():
+    cfg = FaultConfig(seed=7, dma_failure_rate=0.3, notify_drop_rate=0.2)
+    a = FaultInjector(cfg)
+    b = FaultInjector(cfg)
+    seq_a = [a.dma_fails("restore") for _ in range(64)]
+    # interleave OTHER sites on b: restore's stream must not shift
+    seq_b = []
+    for _ in range(64):
+        b.dma_fails("demote")
+        b.drop_notify()
+        seq_b.append(b.dma_fails("restore"))
+    assert seq_a == seq_b
+    assert a.stats["dma_restore_failures"] == sum(seq_a)
+
+
+def test_circuit_breaker_trip_and_cooldown():
+    cb = CircuitBreaker(threshold=3, cooldown=1.0)
+    assert cb.allow(0.0)
+    cb.record_failure(0.0)
+    cb.record_failure(0.0)
+    cb.record_success()          # success closes the streak
+    cb.record_failure(0.1)
+    cb.record_failure(0.1)
+    assert cb.allow(0.1) and cb.trips == 0
+    cb.record_failure(0.2)       # third consecutive -> open
+    assert cb.trips == 1
+    assert not cb.allow(0.5)
+    assert cb.allow(1.2)         # past cooldown
+
+
+# ---- satellite: reset_for_retry regression ---------------------------------
+
+
+def test_reset_for_retry_scrubs_placement_state():
+    r = Request(tokens=(1, 2, 3, 4), max_new_tokens=4, arrival_time=1.5)
+    r.state = RequestState.DECODING
+    r.instance = 1
+    r.cached_len = 3
+    r.device_cached_len = 2
+    r.restored_len = 1
+    r.prefetched_len = 1
+    r.migrated_len = 2
+    r.prefill_done = 4
+    r.output_tokens = [9, 9]
+    r.scheduled_time = r.first_run_time = r.first_token_time = 2.0
+    r.retries = 1
+    r.reset_for_retry()
+    assert r.state == RequestState.QUEUED_GLOBAL
+    assert r.instance is None
+    assert (r.cached_len == r.device_cached_len == r.restored_len
+            == r.prefetched_len == r.migrated_len == r.prefill_done == 0)
+    assert r.output_tokens == []
+    assert r.scheduled_time == r.first_run_time == r.first_token_time == 0.0
+    # untouched: identity, arrival, retry accounting (caller increments)
+    assert r.tokens == (1, 2, 3, 4) and r.arrival_time == 1.5
+    assert r.retries == 1
+
+
+def test_drain_resets_requests_fully():
+    """Regression: drain() used to hand back requests with stale
+    prefetched_len/migrated_len/timeline fields — the re-submission
+    then corrupted E2 costing and accounting on the new instance."""
+    ls = LocalScheduler(LocalSchedulerConfig(instance_id=0,
+                                             capacity_tokens=1024))
+    r = Request(tokens=tuple(range(1, 17)), max_new_tokens=2)
+    ls.enqueue(r, 0.0)
+    r.migrated_len = 7
+    r.prefetched_len = 5
+    r.first_run_time = 3.0
+    out = ls.drain()
+    assert out == [r]
+    assert r.state == RequestState.QUEUED_GLOBAL
+    assert r.migrated_len == 0 and r.prefetched_len == 0
+    assert r.first_run_time == 0.0 and r.instance is None
+
+
+# ---- unit: heartbeat state machine -----------------------------------------
+
+
+def test_heartbeat_alive_suspect_dead_state_machine():
+    gs = GlobalScheduler(num_instances=2,
+                         cost_model=cost_model_for("smollm-360m"),
+                         config=GlobalSchedulerConfig(
+                             heartbeat_interval=0.1, suspect_misses=2,
+                             dead_misses=5))
+    gs.heartbeat(0, 0.0)
+    gs.heartbeat(1, 0.0)
+    assert gs.check_health(0.15) == []          # gap < 2 * itv
+    gs.heartbeat(0, 0.2)
+    assert gs.check_health(0.25) == []          # suspect is not dead
+    assert gs.instances[1].health == "suspect"
+    assert gs.instances[1].alive                # soft state: still routable
+    assert gs.stats["suspected"] == 1
+    gs.heartbeat(1, 0.3)                        # beacon revives it
+    assert gs.instances[1].health == "alive"
+    # silence past dead_misses * itv -> detector declares DEAD
+    for t in (0.4, 0.5, 0.6, 0.7, 0.8):
+        gs.heartbeat(0, t)
+    assert gs.check_health(0.85) == [1]
+    assert not gs.instances[1].alive
+    assert gs.stats["detected_dead"] == 1
+    # never-heartbeated instances are judged from registration time
+    gs.add_instance(5, now=0.85)
+    assert gs.check_health(0.9) == []
+    gs.heartbeat(0, 1.9)
+    assert gs.check_health(2.0) == [5]
+
+
+def test_suspect_soft_avoid_not_hard_exclude():
+    gs = GlobalScheduler(num_instances=2,
+                         cost_model=cost_model_for("smollm-360m"),
+                         config=GlobalSchedulerConfig(
+                             heartbeat_interval=0.1))
+    gs.instances[0].health = "suspect"
+    rng = np.random.default_rng(0)
+    picks = []
+    for i in range(6):
+        r = Request(tokens=tuple(rng.integers(1, 1 << 20, 24).tolist()),
+                    max_new_tokens=4)
+        d = gs.schedule(r, float(i) * 0.01)
+        picks.append(d.instance)
+    assert picks.count(1) > picks.count(0), picks
+    # a suspect is NOT excluded: when it is the only instance left it
+    # still serves (re-route happens only on DEAD)
+    gs.instances[1].health = "suspect"
+    gs.instances[0].health = "suspect"
+    r = Request(tokens=tuple(rng.integers(1, 1 << 20, 24).tolist()),
+                max_new_tokens=4)
+    assert gs.schedule(r, 1.0).instance in (0, 1)
+
+
+# ---- satellite: zero-survivor guard ----------------------------------------
+
+
+def test_zero_survivors_parks_request_terminally(small_model):
+    cfg, api, params = small_model
+    cl = ClusterRuntime(cfg, params, num_instances=1,
+                        engine_cfg=EngineConfig(
+                            max_context=64, chunk_size=16,
+                            max_batch_tokens=64, capacity_tokens=4096,
+                            page_size=16))
+    r0 = _mk_requests(cfg, 1, seed=3)[0]
+    cl.submit(r0, 0.0)
+    cl.step(0.0)
+    # last instance dies WITH a request in flight: the re-route finds
+    # zero survivors and must park, not raise
+    cl.fail_instance(0, 0.1)
+    assert r0.state == RequestState.FAILED
+    assert r0 in cl.failed_requests
+    assert cl.stats["failed_no_survivors"] == 1
+    # direct submit after total loss parks too
+    r1 = _mk_requests(cfg, 1, seed=4)[0]
+    assert cl.submit(r1, 0.2) == -1
+    assert r1.state == RequestState.FAILED
+    assert cl.stats["failed_no_survivors"] == 2
+    # run() terminates instead of hanging: everything is terminal
+    assert len(cl.failed_requests) == 2
+
+
+# ---- retry budget + backoff ------------------------------------------------
+
+
+def test_retry_budget_exhaustion_is_terminal(small_model):
+    cfg, api, params = small_model
+    _oracle.params = params
+    cl = ClusterRuntime(cfg, params, num_instances=2, policy="rr",
+                        retry_budget=0,
+                        engine_cfg=EngineConfig(
+                            max_context=64, chunk_size=16,
+                            max_batch_tokens=64, capacity_tokens=4096,
+                            page_size=16))
+    reqs = _mk_requests(cfg, 4, seed=5)
+    for r in reqs:
+        cl.submit(r, 0.0)
+    cl.step(0.0)
+    n = cl.fail_instance(0, 0.1)     # rr placed 2 of 4 here
+    assert n == 2
+    assert cl.stats["failed_terminal"] == 2
+    failed = [r for r in reqs if r.state == RequestState.FAILED]
+    assert len(failed) == 2 and all(r.retries == 1 for r in failed)
+    t = 0.1
+    for _ in range(400):
+        cl.step(t)
+        t += 0.01
+        if len(cl.finished) + len(cl.failed_requests) == 4:
+            break
+    assert len(cl.finished) == 2 and len(cl.failed_requests) == 2
+    for r in cl.finished:
+        assert list(r.output_tokens) == _oracle(api, cfg, r)
+
+
+def test_retry_backoff_delays_resubmission(small_model):
+    cfg, api, params = small_model
+    _oracle.params = params
+    cl = ClusterRuntime(cfg, params, num_instances=2, policy="rr",
+                        retry_budget=3, retry_backoff=0.2,
+                        engine_cfg=EngineConfig(
+                            max_context=64, chunk_size=16,
+                            max_batch_tokens=64, capacity_tokens=4096,
+                            page_size=16))
+    reqs = _mk_requests(cfg, 4, seed=6)
+    for r in reqs:
+        cl.submit(r, 0.0)
+    cl.fail_instance(0, 0.1)
+    # stranded requests sit in the backoff queue, not on an engine
+    assert len(cl._retry_q) == 2
+    assert all(abs(due - 0.3) < 1e-9 for due, _, _ in cl._retry_q)
+    cl.step(0.15)
+    assert len(cl._retry_q) == 2            # not due yet
+    cl.step(0.35)
+    assert not cl._retry_q                  # drained to the survivor
+    t = 0.35
+    for _ in range(400):
+        cl.step(t)
+        t += 0.01
+        if len(cl.finished) == 4:
+            break
+    assert len(cl.finished) == 4 and not cl.failed_requests
+    assert cl.stats["retries"] == 2
+    for r in reqs:
+        assert list(r.output_tokens) == _oracle(api, cfg, r)
+
+
+# ---- tentpole: crash mid-wave on the fused+tiered+prefetch plane -----------
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_crash_mid_wave_tiered_prefetch_recovers_exact(small_model, seed):
+    """Kill the busiest instance mid-step — prefetch reservations and
+    demote DMA in flight — with heartbeat detection (no oracle): the
+    detector must find the corpse, survivors re-serve every stranded
+    request token-exactly, and cross-layer invariants hold after."""
+    cfg, api, params = small_model
+    _oracle.params = params
+    cl = ClusterRuntime(
+        cfg, params, num_instances=2,
+        engine_cfg=EngineConfig(
+            max_context=64, chunk_size=16, max_batch_tokens=64,
+            capacity_tokens=128, page_size=16,
+            host_capacity_tokens=4096, prefetch_budget_tokens=128),
+        scheduler_cfg=GlobalSchedulerConfig(
+            capacity_tokens=128, host_capacity_tokens=4096,
+            heartbeat_interval=0.02, suspect_misses=2, dead_misses=5),
+        fault_config=FaultConfig(seed=seed))
+    wave1 = _mk_requests(cfg, 8, shared_len=32, tail=24, out=4,
+                         seed=seed)
+    t = 0.0
+    for r in wave1:
+        cl.submit(r, t)
+    for _ in range(600):
+        cl.step(t)
+        t += 0.01
+        if len(cl.finished) == 8:
+            break
+    assert len(cl.finished) == 8
+    assert any(e.scheduler.stats["demoted_tokens"] > 0
+               for e in cl.engines.values()), "host tier never engaged"
+    # wave 2 re-hits the (now host-resident) prefix: prefetches issue
+    wave2 = _mk_requests(cfg, 8, shared_len=32, tail=24, out=4,
+                         seed=seed)
+    for r in wave2:
+        cl.submit(r, t)
+    cl.step(t)
+    t += 0.01
+    victim = max(cl.engines, key=lambda i: cl.engines[i].scheduler.depth)
+    cl.faults.arm_crash(victim)          # dies INSIDE its next step
+    for _ in range(2000):
+        cl.step(t)
+        t += 0.01
+        if len(cl.finished) + len(cl.failed_requests) == 16:
+            break
+    assert cl.faults.stats["crashes"] == 1
+    assert cl.engines[victim].failed
+    assert not cl.gs.instances[victim].alive, "detector never fired"
+    assert cl.gs.stats["detected_dead"] == 1
+    assert len(cl.finished) == 16 and not cl.failed_requests
+    cl.check_invariants()
+    for r in wave1 + wave2:
+        assert list(r.output_tokens) == _oracle(api, cfg, r), \
+            f"req {r.request_id} diverged after crash recovery"
+
+
+# ---- circuit breaker degrades restore to recompute -------------------------
+
+
+def test_restore_dma_failures_trip_breaker_degrade_to_recompute(small_model):
+    cfg, api, params = small_model
+    _oracle.params = params
+    eng = Engine(cfg, params, EngineConfig(
+        max_context=64, chunk_size=16, max_batch_tokens=64,
+        capacity_tokens=128, page_size=16, host_capacity_tokens=4096))
+    eng.attach_faults(FaultInjector(
+        FaultConfig(dma_rates={"restore": 1.0})))
+    wave1 = _mk_requests(cfg, 6, shared_len=32, tail=24, out=3, seed=9)
+    now, done = 0.0, []
+    for r in wave1:
+        eng.scheduler.enqueue(r, now)
+    while len(done) < 6:
+        done += eng.step(now)
+        now += 0.01
+    assert eng.scheduler.stats["demoted_tokens"] > 0
+    wave2 = _mk_requests(cfg, 6, shared_len=32, tail=24, out=3, seed=9)
+    for r in wave2:
+        eng.scheduler.enqueue(r, now)
+    while len(done) < 12:
+        done += eng.step(now)
+        now += 0.01
+    # every restore DMA failed: the breaker opened and admission served
+    # by recompute — outputs still exact, the engine executed zero
+    # restore scatters (restored_len is the scheduler's optimistic
+    # booking; the engine's stat is the executed DMA)
+    assert eng.stats["restore_failures"] >= 3
+    assert eng._cb is not None and eng._cb.trips >= 1
+    assert eng.stats["restored_tokens"] == 0
+    for r in done:
+        assert list(r.output_tokens) == _oracle(api, cfg, r)
+
+
+# ---- notification drop + gauge anti-entropy --------------------------------
+
+
+def test_notification_drop_repaired_by_anti_entropy(small_model):
+    cfg, api, params = small_model
+    cl = ClusterRuntime(
+        cfg, params, num_instances=2,
+        engine_cfg=EngineConfig(
+            max_context=64, chunk_size=16, max_batch_tokens=64,
+            capacity_tokens=256, page_size=16),
+        fault_config=FaultConfig(notify_drop_rate=1.0))
+    reqs = _mk_requests(cfg, 10, shared_len=24, tail=12, out=3, seed=13)
+    t = 0.0
+    for r in reqs:
+        cl.submit(r, t)
+    for _ in range(800):
+        cl.step(t)
+        t += 0.01
+        if len(cl.finished) == 10:
+            break
+    assert len(cl.finished) == 10
+    assert cl.faults.stats["notify_dropped"] > 0, \
+        "capacity never forced an eviction — test is vacuous"
+
+    def truth(i):
+        d = cl.engines[i].scheduler.residency_digest()
+        return (sum(n for _, n in d["device"]),
+                sum(n for _, n in d["host"]))
+
+    # every eviction notification was lost: global gauges are inflated
+    assert any(cl.gs.instances[i].cached_tokens != truth(i)[0]
+               for i in cl.engines), "gauges never drifted"
+    repairs = cl.reconcile_all(t)
+    assert repairs > 0
+    assert cl.gs.stats["reconciles"] == 2
+    for i in cl.engines:
+        dev, host = truth(i)
+        assert cl.gs.instances[i].cached_tokens == dev
+        assert cl.gs.instances[i].host_cached_tokens == host
+    cl.check_invariants()
+    # reconcile is idempotent once truth is restored
+    assert cl.reconcile_all(t + 1.0) == 0
+
+
+# ---- satellite: simulator parity -------------------------------------------
+
+
+def _sim_requests(n, shared_len=256, tail=64, out=8, spacing=0.05, seed=0):
+    rng = np.random.default_rng(seed)
+    shared = tuple(rng.integers(1, 1 << 20, shared_len).tolist())
+    return [Request(tokens=shared
+                    + tuple(rng.integers(1, 1 << 20, tail).tolist()),
+                    max_new_tokens=out, arrival_time=i * spacing)
+            for i in range(n)]
+
+
+def test_simulator_fault_parity_accounting():
+    """The sim exposes the cluster's fault surface: a scheduled crash
+    with heartbeat detection, DMA loss, dropped notifications, retry
+    accounting, and anti-entropy — every request terminal, invariants
+    hold, and the counter vocabulary matches the cluster runtime's."""
+    reqs = _sim_requests(40, seed=21)
+    sim = Simulator(SimConfig(
+        num_instances=3, capacity_tokens=2_000,
+        host_capacity_tokens=20_000, prefetch_budget_tokens=512,
+        faults=FaultConfig(seed=21, crash_at={0: 0.4},
+                           dma_failure_rate=0.05, notify_drop_rate=0.02),
+        heartbeat_interval=0.1, suspect_misses=2, dead_misses=5,
+        reconcile_every=0.5, retry_budget=3, retry_backoff=0.1))
+    res = sim.run(reqs)
+    assert len(res.finished) + len(res.failed) == 40, "requests hung"
+    assert res.stats["crashes"] == 1.0
+    assert not sim.gs.instances[0].alive, "sim detector never fired"
+    assert sim.gs.stats["detected_dead"] == 1
+    assert sim.fault_counters["recovered_requests"] > 0
+    sim.check_invariants()
+    # post-run anti-entropy: gauges exactly equal per-instance truth
+    sim.reconcile_all(res.makespan)
+    for i, ls in sim.locals.items():
+        if i in sim._crashed:
+            continue
+        d = ls.residency_digest()
+        assert (sim.gs.instances[i].cached_tokens
+                == sum(n for _, n in d["device"]))
+        assert (sim.gs.instances[i].host_cached_tokens
+                == sum(n for _, n in d["host"]))
+    # same counter vocabulary as the real cluster runtime (accounting
+    # parity — scheduler benches and engine runs report alike)
+    cl_keys = set(FaultInjector(FaultConfig()).stats)
+    assert cl_keys <= set(res.stats)
+    for k in ("retries", "failed_terminal", "failed_no_survivors",
+              "recovered_requests"):
+        assert k in res.stats
+
+
+def test_simulator_zero_survivors_and_retry_exhaustion():
+    reqs = _sim_requests(10, spacing=0.2, seed=5)
+    sim = Simulator(SimConfig(
+        num_instances=1, capacity_tokens=4_000,
+        faults=FaultConfig(seed=5, crash_at={0: 0.3}),
+        retry_budget=2, retry_backoff=0.05))
+    res = sim.run(reqs)
+    # detection off -> oracle recovery at crash time; with no survivors
+    # every in-flight and later request terminally fails, none hang
+    assert len(res.finished) + len(res.failed) == 10
+    assert res.failed, "crash with zero survivors must fail requests"
+    assert all(r.state == RequestState.FAILED for r in res.failed)
+    assert res.stats["failed_no_survivors"] > 0
+
+
+def test_simulator_faultfree_unchanged_by_fault_plumbing():
+    """Zero-cost-when-off: a fault-free run and a FaultConfig-with-
+    zero-rates run produce identical schedules and stats."""
+    base = Simulator(SimConfig(num_instances=2, capacity_tokens=4_000))
+    r1 = base.run(_sim_requests(20, seed=3))
+    wired = Simulator(SimConfig(num_instances=2, capacity_tokens=4_000,
+                                faults=FaultConfig(seed=3)))
+    r2 = wired.run(_sim_requests(20, seed=3))
+    assert r1.makespan == r2.makespan
+    assert [r.instance for r in r1.finished] \
+        == [r.instance for r in r2.finished]
+    assert r1.stats["gs_exploit"] == r2.stats["gs_exploit"]
