@@ -1,6 +1,6 @@
 PY ?= python
 
-.PHONY: ci ci-fast test bench-engine bench-smoke chaos-smoke install
+.PHONY: ci ci-fast test bench-engine bench-smoke chaos-smoke obs-smoke install
 
 install:
 	$(PY) -m pip install -e .[test]
@@ -16,6 +16,7 @@ ci-fast:
 	PYTHONPATH=src $(PY) -m pytest -q -m "not slow" tests
 	$(MAKE) bench-smoke
 	$(MAKE) chaos-smoke
+	$(MAKE) obs-smoke
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -q
@@ -44,3 +45,12 @@ bench-smoke:
 chaos-smoke:
 	PYTHONPATH=src $(PY) -m benchmarks.bench_chaos
 	PYTHONPATH=src $(PY) -m pytest -q tests/test_faults.py -k "crash_mid_wave"
+
+# observability gate (DESIGN.md §12): same seed three ways (telemetry
+# absent / disabled / enabled) — fails if callback gauges drift from
+# live scheduler truth or post-anti-entropy residency digests, if any
+# request's TTFT/latency breakdown doesn't sum to the measurement
+# within 1e-9, if a trace leaks an open span, if enabling telemetry
+# perturbs results at all, or if its wall-clock overhead is unbounded
+obs-smoke:
+	PYTHONPATH=src $(PY) -m benchmarks.bench_obs

@@ -33,8 +33,9 @@ import numpy as np
 from repro.core.request import Request
 from repro.serving.faults import FaultConfig
 from repro.serving.simulator import SimConfig, Simulator
+from repro.serving.telemetry import Telemetry
 
-from .common import emit
+from .common import breakdown_rows, emit
 
 SEEDS = (0, 1, 2)
 NUM_INSTANCES = 4
@@ -84,13 +85,13 @@ def _run(seed: int, chaos: bool):
         cfg.reconcile_every = 0.5
         cfg.retry_budget = 3
         cfg.retry_backoff = 0.1
-    sim = Simulator(cfg)
+    sim = Simulator(cfg, telemetry=Telemetry())
     res = sim.run(_burst_workload(seed))
     return sim, res
 
 
 def main() -> int:
-    rows, violations = [], []
+    rows, bd_rows, violations = [], [], []
     for seed in SEEDS:
         reqs = _burst_workload(seed)
         n = len(reqs)
@@ -125,6 +126,23 @@ def main() -> int:
                     f"anti-entropy ({gi.cached_tokens}/{dev} device, "
                     f"{gi.host_cached_tokens}/{host} host)")
 
+        # gate 5 (telemetry): every span closed — a crash/retry/finish
+        # must never leak an open queue/prefill/decode span — and each
+        # terminal request's breakdown sums to its measured latency
+        leaked = chaos_sim.telemetry.open_spans()
+        if leaked:
+            violations.append(
+                f"seed {seed}: {len(leaked)} requests leaked open "
+                f"spans under chaos: {leaked}")
+        for r in chz.finished:
+            bd = r.trace.breakdown()
+            if abs(bd["latency"] - r.latency()) > 1e-9 \
+                    or abs(bd["ttft"] - r.ttft()) > 1e-9:
+                violations.append(
+                    f"seed {seed}: {r.request_id} breakdown does not "
+                    f"sum to measured latency")
+                break
+
         # gate 4: graceful degradation
         p99_clean = clean.summary()["p99_ttft"]
         p99_chaos = (chz.summary() or {}).get("p99_ttft", float("inf"))
@@ -136,6 +154,11 @@ def main() -> int:
             violations.append(
                 f"seed {seed}: {len(chz.failed)}/{n} terminal failures "
                 f"(> {MAX_FAIL_FRAC:.0%})")
+
+        if seed == SEEDS[0]:
+            for mode, res in (("clean", clean), ("chaos", chz)):
+                bd_rows.extend(breakdown_rows(
+                    [r.trace for r in res.finished], label=mode))
 
         for mode, res in (("clean", clean), ("chaos", chz)):
             s = res.summary()
@@ -158,6 +181,8 @@ def main() -> int:
             })
 
     emit("bench_chaos", rows)
+    emit("bench_chaos_breakdown", bd_rows,
+         keys=["run", "component", "n", "mean_s", "p99_s", "total_s"])
     if violations:
         for v in violations:
             print(f"GATE VIOLATION: {v}", file=sys.stderr)

@@ -38,7 +38,7 @@ from repro.core.request import Request
 from repro.models import zoo
 from repro.serving.engine import Engine, EngineConfig
 
-from .common import RESULTS_DIR, emit
+from .common import RESULTS_DIR, emit, percentile
 
 BATCH = 16            # decode batch under measurement (>= 8)
 SHARED = 64           # shared prefix tokens (page-aligned: 4 pages)
@@ -245,7 +245,7 @@ def run_mixed(cfg=None, api=None, params=None):
             "prefill_tokens_per_s": ptoks / sum(iter_s),
             "dispatches_per_iter":
                 (eng.stats["model_dispatches"] - d0) / max(iters, 1),
-            "p99_decode_ms": 1e3 * float(np.percentile(iter_s, 99)),
+            "p99_decode_ms": 1e3 * percentile(iter_s, 0.99),
             "mean_iter_ms": 1e3 * float(np.mean(iter_s)),
             "mixed_iters": iters,
             "prefilled_tokens": ptoks,

@@ -1,0 +1,153 @@
+"""Observability smoke gate (DESIGN.md §12, `make obs-smoke`).
+
+A short shared-prefix burst runs through the REAL schedulers (via the
+discrete-event simulator) three times on the same seed — telemetry
+absent, disabled, enabled — and the process exits non-zero unless:
+
+  1. gauge exactness: every registry callback gauge equals the live
+     scheduler truth it fronts (used/host/prefetch-reserved tokens per
+     instance, global cached-token gauges vs residency digests after
+     anti-entropy), with `check_invariants()` holding;
+  2. attribution exactness: every finished request's breakdown
+     components sum to its measured TTFT and latency within 1e-9, and
+     every trace is closed (no leaked spans);
+  3. gating: the enabled run's results are IDENTICAL to the
+     absent/disabled runs (observation never perturbs the schedule),
+     and the wall-clock overhead of enabled vs absent stays bounded.
+
+Results land in results/bench/bench_obs.csv.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+from repro.core.request import Request
+from repro.serving.simulator import SimConfig, Simulator
+from repro.serving.telemetry import Telemetry
+
+from .common import emit
+
+N_REQUESTS = 120
+N_GROUPS = 4
+PREFIX_LEN = 500
+TAIL_LEN = 80
+OUT = 12
+OVERHEAD_LIMIT = 3.0     # enabled may cost at most this x absent
+                         # wall-clock (generous: the runs are short
+                         # and absolute times are milliseconds)
+
+
+def _workload(seed: int = 0):
+    rng = np.random.default_rng(seed)
+    prefixes = [tuple(rng.integers(1, 1 << 20, PREFIX_LEN).tolist())
+                for _ in range(N_GROUPS)]
+    return [Request(
+        tokens=prefixes[i % N_GROUPS]
+        + tuple(rng.integers(1, 1 << 20, TAIL_LEN).tolist()),
+        max_new_tokens=OUT, arrival_time=0.02 * i)
+        for i in range(N_REQUESTS)]
+
+
+def _cfg() -> SimConfig:
+    return SimConfig(num_instances=2, capacity_tokens=1_500,
+                     host_capacity_tokens=15_000,
+                     prefetch_budget_tokens=512)
+
+
+def _run(telemetry):
+    sim = Simulator(_cfg(), telemetry=telemetry)
+    t0 = time.perf_counter()
+    res = sim.run(_workload())
+    return sim, res, time.perf_counter() - t0
+
+
+def main() -> int:
+    violations, rows = [], []
+
+    sim_a, res_a, wall_a = _run(None)
+    sim_d, res_d, wall_d = _run(Telemetry(enabled=False))
+    tel = Telemetry()
+    sim_e, res_e, wall_e = _run(tel)
+
+    # -- gate 3a: byte-identical results across the three runs ---------
+    base = res_a.summary()
+    if base != res_d.summary():
+        violations.append("disabled telemetry perturbed the run")
+    if base != res_e.summary():
+        violations.append("enabled telemetry perturbed the run")
+
+    # -- gate 1: gauges == live truth, invariants hold -----------------
+    sim_e.check_invariants()
+    reg = tel.registry
+    for i, ls in sim_e.locals.items():
+        checks = (("sched_used_tokens", ls.used_tokens),
+                  ("sched_host_used_tokens", ls.host_used_tokens),
+                  ("sched_prefetch_reserved_tokens",
+                   ls.prefetch_reserved_tokens))
+        for name, truth in checks:
+            got = reg.get(name, instance=i)
+            if got != truth:
+                violations.append(
+                    f"gauge {name}[{i}] = {got} != live {truth}")
+    sim_e.reconcile_all(res_e.makespan)
+    for i, ls in sim_e.locals.items():
+        d = ls.residency_digest()
+        dev = sum(x for _, x in d["device"])
+        host = sum(x for _, x in d["host"])
+        if reg.get("gs_cached_tokens", instance=i) != dev \
+                or reg.get("gs_host_cached_tokens", instance=i) != host:
+            violations.append(
+                f"instance {i}: gs gauges != residency digest after "
+                f"anti-entropy")
+
+    # -- gate 2: attribution sums + closed spans -----------------------
+    leaked = tel.open_spans()
+    if leaked:
+        violations.append(f"{len(leaked)} traces leaked open spans")
+    if len(res_e.finished) != N_REQUESTS:
+        violations.append(
+            f"only {len(res_e.finished)}/{N_REQUESTS} finished")
+    worst = 0.0
+    for r in res_e.finished:
+        bd = r.trace.breakdown()
+        worst = max(worst, abs(bd["latency"] - r.latency()),
+                    abs(bd["ttft"] - r.ttft()))
+    if worst > 1e-9:
+        violations.append(
+            f"breakdown does not sum to measurement (worst {worst:.2e})")
+
+    # -- gate 3b: bounded overhead -------------------------------------
+    overhead = wall_e / max(wall_a, 1e-9)
+    if overhead > OVERHEAD_LIMIT:
+        violations.append(
+            f"telemetry overhead {overhead:.2f}x > {OVERHEAD_LIMIT}x")
+
+    for mode, wall, res in (("absent", wall_a, res_a),
+                            ("disabled", wall_d, res_d),
+                            ("enabled", wall_e, res_e)):
+        s = res.summary()
+        rows.append({"mode": mode, "wall_s": wall,
+                     "finished": len(res.finished),
+                     "p99_ttft": s["p99_ttft"],
+                     "p99_latency": s["p99_latency"],
+                     "metric_names": (len(tel.registry.names())
+                                      if mode == "enabled" else 0)})
+    emit("bench_obs", rows)
+
+    if violations:
+        for v in violations:
+            print(f"GATE VIOLATION: {v}", file=sys.stderr)
+        return 1
+    print(f"obs gates passed: gauges exact vs live truth + digests, "
+          f"breakdown sums within 1e-9 (worst {worst:.2e}), "
+          f"enabled == disabled == absent, overhead {overhead:.2f}x "
+          f"<= {OVERHEAD_LIMIT}x")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

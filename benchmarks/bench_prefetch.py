@@ -35,8 +35,9 @@ import numpy as np
 
 from repro.core.request import Request
 from repro.serving.simulator import SimConfig, Simulator
+from repro.serving.telemetry import Telemetry
 
-from .common import RESULTS_DIR, emit
+from .common import RESULTS_DIR, breakdown_rows, emit
 
 SCENARIOS = {
     # name: (n_sessions, prefix_len, tail_len, out, waves, wave_gap_s)
@@ -92,15 +93,21 @@ def run_scenario(name, spec):
         "host_capacity_tokens": host_cap,
         "prefetch_budget_tokens": budget,
         "working_set_tokens": working_set}}
+    bd_rows = []
     for mode, pf in (("restore", 0), ("prefetch", budget)):
         sim = Simulator(SimConfig(
             num_instances=NUM_INSTANCES, capacity_tokens=device_cap,
             host_capacity_tokens=host_cap, chunk_size=2048,
-            max_batch_tokens=8192, prefetch_budget_tokens=pf))
+            max_batch_tokens=8192, prefetch_budget_tokens=pf),
+            telemetry=Telemetry())
         warm, bursts = _phases(spec)
         sim.run(warm)                   # phase A: unmeasured warm-up
         res = sim.run(bursts)           # phase B: measured steady state
         s = res.summary()
+        # TTFT attribution over the measured phase only (scoped by
+        # finished-request traces, not the whole telemetry plane)
+        bd_rows.extend(breakdown_rows(
+            [r.trace for r in res.finished], label=f"{name}/{mode}"))
         row = {
             "scenario": name, "mode": mode,
             "p99_ttft_s": s["p99_ttft"],
@@ -132,20 +139,23 @@ def run_scenario(name, spec):
           f"avg TTFT {b['avg_ttft_s']:.3f}s -> {p['avg_ttft_s']:.3f}s, "
           f"overlap {p['prefetch_overlap_frac']:.2f}, "
           f"hit {int(p['prefetch_hit'])} tok")
-    return rows, out_json
+    return rows, out_json, bd_rows
 
 
 def run():
-    all_rows, out = [], {}
+    all_rows, all_bd, out = [], [], {}
     for name, spec in SCENARIOS.items():
-        rows, oj = run_scenario(name, spec)
+        rows, oj, bd = run_scenario(name, spec)
         all_rows.extend(rows)
+        all_bd.extend(bd)
         out[name] = oj
     emit("bench_prefetch", all_rows,
          keys=["scenario", "mode", "p99_ttft_s", "avg_ttft_s",
                "p99_latency_s", "p50_latency_s", "throughput_rps",
                "restored_tokens", "prefetch_issued", "prefetch_hit",
                "prefetch_wasted", "prefetch_overlap_frac"])
+    emit("bench_prefetch_breakdown", all_bd,
+         keys=["run", "component", "n", "mean_s", "p99_s", "total_s"])
     os.makedirs(RESULTS_DIR, exist_ok=True)
     path = os.path.join(RESULTS_DIR, "bench_prefetch.json")
     with open(path, "w") as f:

@@ -1,4 +1,8 @@
-"""Shared benchmark helpers: CSV emission + sweep utilities."""
+"""Shared benchmark helpers: CSV emission, sweep utilities, and the
+latency-summary / TTFT-breakdown helpers every bench_*.py used to
+hand-roll — now backed by the telemetry plane's ``Histogram`` so
+percentile definitions are identical everywhere (sorted-index math,
+matching ``SimResult.summary()`` bit-for-bit)."""
 
 from __future__ import annotations
 
@@ -9,7 +13,58 @@ import sys
 import time
 from typing import Any, Dict, List, Sequence
 
+from repro.serving.telemetry import (BREAKDOWN_COMPONENTS, Histogram,
+                                     Telemetry)
+
 RESULTS_DIR = os.environ.get("BENCH_RESULTS", "results/bench")
+
+
+def percentile(values: Sequence[float], q: float) -> float:
+    """Exact sorted-index percentile (q in [0, 1])."""
+    return Histogram.from_values(values).percentile(q)
+
+
+def summarize(values: Sequence[float], prefix: str = "") -> Dict[str, float]:
+    """avg/p50/p99 of a latency series under ``<prefix>``-ed keys."""
+    h = Histogram.from_values(values)
+    return {f"{prefix}avg": h.mean,
+            f"{prefix}p50": h.percentile(0.50),
+            f"{prefix}p99": h.percentile(0.99)}
+
+
+def breakdown_rows(traces, label: str = "") -> List[Dict[str, Any]]:
+    """Mean/p99 per TTFT component across finished requests — the
+    attribution table bench_prefetch / bench_chaos print next to their
+    totals. ``traces`` is a ``Telemetry`` or an iterable of
+    ``RequestTrace`` (e.g. ``[r.trace for r in res.finished]`` to scope
+    to one measured phase). ``prefetch_hidden`` is the DMA seconds the
+    pipeline took OFF the critical path (informational; the summed
+    components already exclude it)."""
+    if isinstance(traces, Telemetry):
+        traces = traces.traces
+    per: Dict[str, List[float]] = {c: [] for c in BREAKDOWN_COMPONENTS}
+    hidden: List[float] = []
+    n = 0
+    for tr in traces:
+        if tr is None:
+            continue
+        bd = tr.breakdown()
+        if bd.get("status") != "finished":
+            continue
+        n += 1
+        for c in BREAKDOWN_COMPONENTS:
+            per[c].append(bd[c])
+        hidden.append(bd.get("prefetch_hidden", 0.0))
+    if not n:
+        return []
+    rows = []
+    for c in BREAKDOWN_COMPONENTS + ("prefetch_hidden",):
+        vals = hidden if c == "prefetch_hidden" else per[c]
+        h = Histogram.from_values(vals)
+        rows.append({"run": label, "component": c, "n": n,
+                     "mean_s": h.mean, "p99_s": h.percentile(0.99),
+                     "total_s": h.sum})
+    return rows
 
 
 def emit(name: str, rows: Sequence[Dict[str, Any]],

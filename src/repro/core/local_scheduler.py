@@ -208,6 +208,11 @@ class LocalScheduler:
         # (simulator semantics: every prompt node is published) refunds
         # just the outputs.
         self._acct: Dict[int, int] = {}
+        # telemetry facade (serving.telemetry.Telemetry), attached by
+        # the owning runtime. Duck-typed: core never imports serving.
+        # Every hook below is behind an `is not None` / `r.trace is not
+        # None` check, mirroring the faults-gating pattern (§11).
+        self.telemetry = None
         self.evicted_log: List[int] = []
         self.stats = {"batches": 0, "evicted_tokens": 0, "admitted": 0,
                       "starved_max_wait": 0.0, "demoted_tokens": 0,
@@ -250,6 +255,9 @@ class LocalScheduler:
         self._clock = max(self._clock, now)
         self._tiered_cached(request, now, update_stats=True)
         request.state = RequestState.QUEUED_LOCAL
+        if request.trace is not None:
+            request.trace.begin("queue", now,
+                                instance=self.config.instance_id)
         self.waiting.append(request)
         if prefetch is not None:
             self._prefetch_hints[request.request_id] = prefetch
@@ -341,6 +349,22 @@ class LocalScheduler:
                     BatchItem(r, "prefill", chunk, cached_len=r.cached_len,
                               restored_len=r.restored_len,
                               migrated_len=r.migrated_len))
+                if r.trace is not None:
+                    r.trace.end("queue", now)
+                    r.trace.begin("prefill", now)
+                    r.trace.point("admit", now,
+                                  instance=cfg.instance_id,
+                                  cached=r.cached_len,
+                                  device_cached=r.device_cached_len,
+                                  restored=r.restored_len,
+                                  migrated=r.migrated_len,
+                                  prefetched=r.prefetched_len)
+                    if r.restored_len:
+                        r.trace.point("restore", now,
+                                      tokens=r.restored_len)
+                    if r.migrated_len:
+                        r.trace.point("migrate", now,
+                                      tokens=r.migrated_len)
                 # the DCN charge is one-time — a re-queued request must
                 # not re-pay a migration that already happened
                 r.migrated_len = 0
@@ -887,6 +911,17 @@ class LocalScheduler:
             self.used_tokens += rec["reserved"]
             self.prefetch_reserved_tokens += rec["reserved"]
             self.stats["prefetch_issued"] += rec["reserved"]
+            if self.telemetry is not None:
+                self.telemetry.event("prefetch_issue", now,
+                                     instance=cfg.instance_id,
+                                     rec=rec["id"],
+                                     tokens=rec["reserved"],
+                                     want=sorted(rec["want"]))
+                for q in self.waiting:
+                    if q.request_id in rec["want"] and q.trace is not None:
+                        q.trace.point("prefetch_issue", now,
+                                      rec=rec["id"],
+                                      tokens=rec["reserved"])
             out.append(rec)
         return out
 
@@ -932,6 +967,14 @@ class LocalScheduler:
         self.used_tokens = max(self.used_tokens - rec["reserved"], 0)
         self.prefetch_reserved_tokens -= rec["reserved"]
         self.stats["prefetch_cancelled"] += rec["reserved"]
+        if self.telemetry is not None:
+            self.telemetry.event("prefetch_cancel", now,
+                                 instance=self.config.instance_id,
+                                 rec=rec_id, tokens=rec["reserved"])
+            for q in self.waiting:
+                if q.request_id in rec["want"] and q.trace is not None:
+                    q.trace.point("prefetch_cancel", now, rec=rec_id,
+                                  tokens=rec["reserved"])
         self._prefetch_recs.pop(rec_id, None)
         # unpinning may unblock an overdue host-capacity enforcement
         dropped = self._enforce_host_capacity(now)
@@ -978,6 +1021,13 @@ class LocalScheduler:
             landed += toks
             self.stats["prefetch_landed"] += toks
         rec["landed"] = True
+        if self.telemetry is not None:
+            self.telemetry.event("prefetch_land", now, instance=inst,
+                                 rec=rec_id, tokens=landed)
+            for q in self.waiting:
+                if q.request_id in rec["want"] and q.trace is not None:
+                    q.trace.point("prefetch_land", now, rec=rec_id,
+                                  tokens=landed)
         dropped = self._enforce_host_capacity(now)
         if dropped and self.on_evict is not None:
             self.on_evict(inst, [], demoted=[], host_dropped=dropped)
@@ -999,7 +1049,7 @@ class LocalScheduler:
         """Admission reached spans a prefetch landed: count the hit
         (the pages it aliases were moved off this request's TTFT) and
         retire the landed marker."""
-        b = 0
+        b, claimed = 0, 0
         for node in m.path:
             b += len(node.tokens)
             if b > dev:
@@ -1008,6 +1058,12 @@ class LocalScheduler:
             if toks:
                 self.stats["prefetch_hit"] += toks
                 request.prefetched_len += toks
+                claimed += toks
+        if claimed and request.trace is not None:
+            # the DMA these tokens needed already ran, hidden behind
+            # queue wait — breakdown() reports it as prefetch_hidden
+            request.trace.point("prefetch_claim", self._clock,
+                                tokens=claimed)
 
     # ---- iteration completion -----------------------------------------------------------
 
@@ -1028,6 +1084,10 @@ class LocalScheduler:
                     r.state = RequestState.DECODING
                     if r.first_token_time == 0.0:
                         r.first_token_time = now
+                    if r.trace is not None:
+                        r.trace.end("prefill", now)
+                        r.trace.point("first_token", now)
+                        r.trace.begin("decode", now)
             else:
                 r.output_tokens.append(0)  # engine overwrites real ids
                 done = (finished_fn(r) if finished_fn
@@ -1036,6 +1096,9 @@ class LocalScheduler:
                     self.running.remove(r)
                     r.state = RequestState.FINISHED
                     r.finish_time = now
+                    if r.trace is not None:
+                        r.trace.end("decode", now)
+                        r.trace.point("finish", now)
                     self._release(r)
                     finished.append(r)
         return finished
@@ -1129,6 +1192,9 @@ class LocalScheduler:
         self._cancel_prefetch_for(request.request_id)
         self._release(request)
         request.state = RequestState.FAILED
+        if request.trace is not None:
+            request.trace.close_open(self._clock, status="error")
+            request.trace.point("failed", self._clock, reason="abort")
         # a queued abort may leave a purely structural path behind
         # (plan_prefetch's boundary split, _reserve's insert): prune
         # the dead leaf chain so aborted prompts cannot grow the local

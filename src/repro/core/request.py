@@ -5,7 +5,7 @@ from __future__ import annotations
 import enum
 import itertools
 from dataclasses import dataclass, field
-from typing import List, Optional, Sequence, Tuple
+from typing import Any, List, Optional, Sequence, Tuple
 
 _req_ids = itertools.count()
 
@@ -46,6 +46,10 @@ class Request:
     first_run_time: float = 0.0             # first iteration on an engine
     first_token_time: float = 0.0
     finish_time: float = 0.0
+    # telemetry span timeline (serving.telemetry.RequestTrace), attached
+    # only when a Telemetry-enabled runtime submits the request. Typed
+    # Any (duck-typed here) so core never imports the serving layer.
+    trace: Optional[Any] = None
 
     @property
     def prompt_len(self) -> int:
@@ -55,12 +59,14 @@ class Request:
     def missed_len(self) -> int:
         return max(self.prompt_len - self.cached_len, 0)
 
-    def reset_for_retry(self) -> None:
+    def reset_for_retry(self, now: Optional[float] = None) -> None:
         """Scrub every placement-scoped field before re-routing to a
         new instance. A retried request must look freshly arrived to
         the global scheduler: stale `migrated_len` / `prefetched_len` /
         partial outputs from a dead placement would corrupt both the
-        E2 cost model and the accounting invariants."""
+        E2 cost model and the accounting invariants — and a stale
+        `finish_time` would mix the dead attempt's terminal stamp into
+        the retried attempt's latency attribution."""
         self.state = RequestState.QUEUED_GLOBAL
         self.instance = None
         self.cached_len = 0
@@ -73,6 +79,17 @@ class Request:
         self.scheduled_time = 0.0
         self.first_run_time = 0.0
         self.first_token_time = 0.0
+        self.finish_time = 0.0
+        if self.trace is not None:
+            # close the dead attempt's spans with an error status and
+            # mark the retry; callers without a clock (drain paths) get
+            # the timeline's last known time. Drain + reroute both
+            # reset: dedupe so one actual retry stamps one event.
+            t = now if now is not None else self.trace.last_t
+            self.trace.close_open(t, status="error")
+            evs = self.trace.events
+            if not evs or evs[-1]["name"] != "retry":
+                self.trace.point("retry", t, attempt=self.retries + 1)
 
     def latency(self) -> float:
         return self.finish_time - self.arrival_time

@@ -39,6 +39,7 @@ from ..core.global_scheduler import GlobalScheduler, GlobalSchedulerConfig
 from ..core.request import Request, RequestState
 from .engine import Engine, EngineConfig
 from .faults import FaultConfig, FaultInjector, InstanceCrashed
+from .telemetry import Telemetry
 
 
 class ClusterRuntime:
@@ -49,8 +50,13 @@ class ClusterRuntime:
                  policy: str = "e2",
                  fault_config: Optional[FaultConfig] = None,
                  retry_budget: int = 3,
-                 retry_backoff: float = 0.0):
+                 retry_backoff: float = 0.0,
+                 telemetry: Optional[Telemetry] = None):
         self.policy = policy
+        # disabled telemetry is treated exactly like None (byte-
+        # identical runs), mirroring the faults-gating pattern
+        self.telemetry = (telemetry if telemetry is not None
+                          and telemetry.enabled else None)
         base = engine_cfg or EngineConfig()
         self.gs = GlobalScheduler(
             num_instances=num_instances,
@@ -88,6 +94,26 @@ class ClusterRuntime:
                       "failed_terminal": 0, "failed_no_survivors": 0,
                       "recovered_requests": 0,
                       "crash_with_inflight_dma": 0}
+        if self.telemetry is not None:
+            tel = self.telemetry
+            self.stats = tel.adopt(self.stats, "runtime")
+            self.gs.stats = tel.adopt(self.gs.stats, "gs")
+            if self.faults is not None:
+                self.faults.stats = tel.adopt(self.faults.stats, "faults")
+            for i, eng in self.engines.items():
+                eng.attach_telemetry(tel)
+                self._gs_gauges(i)
+
+    def _gs_gauges(self, inst: int) -> None:
+        """Callback gauges over the global scheduler's per-instance
+        cached-token estimates — the surfaces anti-entropy repairs."""
+        st = self.gs.instances[inst]
+        self.telemetry.gauge_fn("gs_cached_tokens",
+                                lambda s=st: s.cached_tokens,
+                                instance=inst)
+        self.telemetry.gauge_fn("gs_host_cached_tokens",
+                                lambda s=st: s.host_cached_tokens,
+                                instance=inst)
 
     def _notify_evictions(self, inst: int, spans, *, demoted=(),
                           host_dropped=()) -> None:
@@ -112,6 +138,9 @@ class ClusterRuntime:
     # ---- request intake -------------------------------------------------
 
     def submit(self, request: Request, now: float) -> int:
+        tel = self.telemetry
+        if tel is not None:
+            tel.trace(request, now)
         alive = self.gs.alive_instances()
         if not alive:
             # zero survivors: park the request as terminally failed
@@ -121,6 +150,11 @@ class ClusterRuntime:
             request.finish_time = now
             self.stats["failed_no_survivors"] += 1
             self.failed_requests.append(request)
+            if tel is not None:
+                request.trace.close_open(now, status="error")
+                request.trace.point("failed", now,
+                                    reason="no_survivors")
+                tel.observe_request(request, now)
             return -1
         prefetch = None
         if self.policy == "rr":
@@ -128,6 +162,9 @@ class ClusterRuntime:
             self._rr_next += 1
             request.instance = inst
             request.scheduled_time = now
+            if request.trace is not None:
+                request.trace.point("schedule", now, instance=inst,
+                                    mode="rr")
         else:
             decision = self.gs.schedule(request, now)
             inst = decision.instance
@@ -139,6 +176,13 @@ class ClusterRuntime:
             # start moving it (and any other host chain) to device
             # while the request waits
             prefetch = decision.prefetch
+            if request.trace is not None:
+                request.trace.point(
+                    "schedule", now, instance=inst, mode=decision.mode,
+                    cost=decision.cost, cached=decision.cached_len,
+                    missed=decision.missed_len,
+                    migrated=request.migrated_len,
+                    prefetch=prefetch is not None)
         self.engines[inst].scheduler.enqueue(request, now,
                                              prefetch=prefetch)
         return inst
@@ -208,6 +252,8 @@ class ClusterRuntime:
                 continue
             for r in out:
                 self.gs.on_request_complete(r, now)
+                if self.telemetry is not None:
+                    self.telemetry.observe_request(r, now)
                 done.append(r)
             self._heartbeat(inst, now)
         if self._detection:
@@ -292,6 +338,9 @@ class ClusterRuntime:
             self.faults.arm_crash(inst)
             return
         self.faults.record_crash(inst)
+        if self.telemetry is not None:
+            self.telemetry.event("crash", now, instance=inst,
+                                 mid_step=False)
         eng.crash()
         if not self._detection:
             self._recover_instance(inst, now)   # oracle fallback
@@ -304,6 +353,9 @@ class ClusterRuntime:
         if eng._prefetch_inflight or (tier is not None
                                       and getattr(tier, "_pending", None)):
             self.stats["crash_with_inflight_dma"] += 1
+        if self.telemetry is not None:
+            self.telemetry.event("crash", now, instance=inst,
+                                 mid_step=True)
         eng.crash()
         if not self._detection:
             self._recover_instance(inst, now)   # oracle fallback
@@ -317,6 +369,9 @@ class ClusterRuntime:
             self.gs.on_instance_failure(inst)
         reqs = self.engines[inst].fail()
         self.stats["recovered_requests"] += len(reqs)
+        if self.telemetry is not None:
+            self.telemetry.event("recover", now, instance=inst,
+                                 requests=len(reqs))
         for r in reqs:
             self._reroute(r, now)
 
@@ -327,20 +382,33 @@ class ClusterRuntime:
         (surfaced in ``failed_requests`` / stats) instead of cycling."""
         if r.state == RequestState.FINISHED:
             return
-        r.reset_for_retry()
+        r.reset_for_retry(now)
         r.retries += 1
+        tel = self.telemetry
         if r.retries > self.retry_budget:
             r.state = RequestState.FAILED
             r.finish_time = now
             self.stats["failed_terminal"] += 1
             self.failed_requests.append(r)
+            if tel is not None:
+                if r.trace is not None:
+                    r.trace.point("failed", now, reason="retry_budget")
+                tel.observe_request(r, now)
             return
         self.stats["retries"] += 1
         if self.retry_backoff > 0.0:
             delay = self.retry_backoff * (2.0 ** (r.retries - 1))
+            if tel is not None:
+                tel.event("retry", now, id=r.request_id,
+                          attempt=r.retries, backoff=delay)
+                if r.trace is not None:
+                    r.trace.point("backoff", now, delay=delay)
             heapq.heappush(self._retry_q,
                            (now + delay, next(self._retry_seq), r))
         else:
+            if tel is not None:
+                tel.event("retry", now, id=r.request_id,
+                          attempt=r.retries, backoff=0.0)
             self.submit(r, now)
 
     def _drain_retries(self, now: float) -> None:
@@ -543,4 +611,7 @@ class ClusterRuntime:
         self.gs.add_instance(inst,
                              host_capacity_tokens=ec.host_capacity_tokens,
                              now=now)
+        if self.telemetry is not None:
+            self.engines[inst].attach_telemetry(self.telemetry)
+            self._gs_gauges(inst)
         return inst

@@ -66,6 +66,7 @@ from ..models import zoo, transformer as T
 from .faults import CircuitBreaker, InstanceCrashed
 from .kv_cache import PagedKVPool
 from .kv_offload import HostKVStore, PagedHostTier
+from .telemetry import StatsDict, frac_of
 
 Pytree = Any
 
@@ -175,22 +176,32 @@ class Engine:
         self._ext_evict = on_evict
         # per-request live state: next input token (+ cache pytree when dense)
         self.live: Dict[int, Dict[str, Any]] = {}
-        self.stats = {"reused_tokens": 0, "prefilled_tokens": 0,
-                      "decode_steps": 0, "iterations": 0,
-                      "decode_batches": 0, "cache_concat_calls": 0,
-                      "seed_aliased_pages": 0, "seed_copied_pages": 0,
-                      "aborted": 0, "model_dispatches": 0,
-                      "fused_iterations": 0, "fused_padded_tokens": 0,
-                      "demoted_tokens": 0, "restored_tokens": 0,
-                      "restore_failures": 0, "demote_dispatches": 0,
-                      "restore_dispatches": 0, "demote_batches": 0,
-                      "demote_batches_overlapped": 0,
-                      "demote_overlap_frac": 0.0,
-                      "prefetch_issued": 0, "prefetch_hit": 0,
-                      "prefetch_wasted": 0, "prefetch_dispatches": 0,
-                      "prefetch_batches": 0,
-                      "prefetch_batches_overlapped": 0,
-                      "prefetch_overlap_frac": 0.0}
+        # StatsDict (not a plain dict) so the *_overlap_frac ratios are
+        # DERIVED at read time instead of recomputed inside the demote/
+        # prefetch drain loops; binds to the telemetry registry as
+        # engine_* series when a Telemetry is attached.
+        self.stats = StatsDict(
+            {"reused_tokens": 0, "prefilled_tokens": 0,
+             "decode_steps": 0, "iterations": 0,
+             "decode_batches": 0, "cache_concat_calls": 0,
+             "seed_aliased_pages": 0, "seed_copied_pages": 0,
+             "aborted": 0, "model_dispatches": 0,
+             "fused_iterations": 0, "fused_padded_tokens": 0,
+             "demoted_tokens": 0, "restored_tokens": 0,
+             "restore_failures": 0, "demote_dispatches": 0,
+             "restore_dispatches": 0, "demote_batches": 0,
+             "demote_batches_overlapped": 0,
+             "prefetch_issued": 0, "prefetch_hit": 0,
+             "prefetch_wasted": 0, "prefetch_dispatches": 0,
+             "prefetch_batches": 0,
+             "prefetch_batches_overlapped": 0},
+            derived={"demote_overlap_frac":
+                     frac_of("demote_batches_overlapped",
+                             "demote_batches"),
+                     "prefetch_overlap_frac":
+                     frac_of("prefetch_batches_overlapped",
+                             "prefetch_batches")})
+        self.telemetry = None
         self.failed = False
         # fault injection (DESIGN.md §11): None on fault-free runs —
         # every hook below is behind an `is not None` check, so the
@@ -781,10 +792,8 @@ class Engine:
             self.stats["prefetch_batches"] += 1
             if self.stats["model_dispatches"] > disp_at:
                 self.stats["prefetch_batches_overlapped"] += 1
-        if self.stats["prefetch_batches"]:
-            self.stats["prefetch_overlap_frac"] = (
-                self.stats["prefetch_batches_overlapped"]
-                / self.stats["prefetch_batches"])
+        # prefetch_overlap_frac is a derived StatsDict key — computed
+        # at read time, never recomputed here in the drain loop
 
     def _admit_dense(self, r: Request, now: float) -> None:
         cache = _cache_zeros(self._cache_spec)
@@ -1205,6 +1214,31 @@ class Engine:
         self.faults = faults
         if self.econf.host_capacity_tokens > 0:
             self._cb = breaker if breaker is not None else CircuitBreaker()
+
+    def attach_telemetry(self, telemetry) -> None:
+        """Bind this engine's stats surfaces into the shared telemetry
+        registry (engine_* / sched_* / hoststore_* series labeled with
+        the instance id) and register callback gauges over the live
+        token accounting — evaluated only at export, so the step path
+        pays nothing. Mirrors ``attach_faults``: never called on
+        untelemetered runs."""
+        inst = self.econf.instance_id
+        self.telemetry = telemetry
+        self.stats = telemetry.adopt(self.stats, "engine", instance=inst)
+        sch = self.scheduler
+        sch.telemetry = telemetry
+        sch.stats = telemetry.adopt(sch.stats, "sched", instance=inst)
+        if self.host_store is not None:
+            self.host_store.stats = telemetry.adopt(
+                self.host_store.stats, "hoststore", instance=inst)
+        telemetry.gauge_fn("sched_used_tokens",
+                           lambda s=sch: s.used_tokens, instance=inst)
+        telemetry.gauge_fn("sched_host_used_tokens",
+                           lambda s=sch: s.host_used_tokens,
+                           instance=inst)
+        telemetry.gauge_fn("sched_prefetch_reserved_tokens",
+                           lambda s=sch: s.prefetch_reserved_tokens,
+                           instance=inst)
 
     def crash(self) -> None:
         """SILENT death (vs ``fail``, the oracle path): the data plane

@@ -326,10 +326,8 @@ class PagedHostTier:
             eng.stats["demote_batches"] += 1
             if eng.stats["model_dispatches"] > rec["dispatches_at_issue"]:
                 eng.stats["demote_batches_overlapped"] += 1
-        if eng.stats["demote_batches"]:
-            eng.stats["demote_overlap_frac"] = (
-                eng.stats["demote_batches_overlapped"]
-                / eng.stats["demote_batches"])
+        # demote_overlap_frac is a derived StatsDict key on Engine.stats
+        # — computed at read time, never recomputed in this drain loop
 
     # ---- drop: host entry dies --------------------------------------------
 

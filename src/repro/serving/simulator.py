@@ -33,6 +33,7 @@ from ..core.local_scheduler import (AccountingHostTier, LocalScheduler,
                                     LocalSchedulerConfig)
 from ..core.request import Request, RequestState
 from .faults import FaultConfig, FaultInjector
+from .telemetry import Histogram, Telemetry
 
 
 @dataclass
@@ -91,18 +92,20 @@ class SimResult:
         return [r.latency() for r in self.finished]
 
     def summary(self) -> Dict[str, float]:
-        lats = sorted(self.latencies())
-        if not lats:
+        # Histogram uses the same sorted-index percentile definition
+        # this method always had, so the numbers are bit-identical
+        if not self.finished:
             return {}
-        n = len(lats)
-        ttfts = sorted(r.ttft() for r in self.finished)
+        lat = Histogram.from_values(self.latencies())
+        ttft = Histogram.from_values(r.ttft() for r in self.finished)
+        n = lat.count
         return {
             "n": n,
-            "avg_latency": sum(lats) / n,
-            "p50_latency": lats[n // 2],
-            "p99_latency": lats[min(int(n * 0.99), n - 1)],
-            "avg_ttft": sum(ttfts) / n,
-            "p99_ttft": ttfts[min(int(n * 0.99), n - 1)],
+            "avg_latency": lat.mean,
+            "p50_latency": lat.percentile(0.50),
+            "p99_latency": lat.percentile(0.99),
+            "avg_ttft": ttft.mean,
+            "p99_ttft": ttft.percentile(0.99),
             "makespan": self.makespan,
             "throughput_rps": n / self.makespan if self.makespan else 0.0,
             **self.stats,
@@ -110,8 +113,12 @@ class SimResult:
 
 
 class Simulator:
-    def __init__(self, cfg: SimConfig):
+    def __init__(self, cfg: SimConfig,
+                 telemetry: Optional[Telemetry] = None):
         self.cfg = cfg
+        # disabled telemetry == None: byte-identical event loop
+        self.telemetry = (telemetry if telemetry is not None
+                          and telemetry.enabled else None)
         self.cm = cost_model_for(cfg.model, cfg.chips_per_instance)
         gs_cfg = GlobalSchedulerConfig(
             window=cfg.window, th_bal=cfg.th_bal,
@@ -166,6 +173,31 @@ class Simulator:
         self.fault_counters = {"retries": 0, "failed_terminal": 0,
                                "failed_no_survivors": 0,
                                "recovered_requests": 0}
+        if self.telemetry is not None:
+            tel = self.telemetry
+            self.fault_counters = tel.adopt(self.fault_counters,
+                                            "runtime")
+            self.gs.stats = tel.adopt(self.gs.stats, "gs")
+            if self.faults is not None:
+                self.faults.stats = tel.adopt(self.faults.stats,
+                                              "faults")
+            for i, ls in self.locals.items():
+                ls.telemetry = tel
+                ls.stats = tel.adopt(ls.stats, "sched", instance=i)
+                tel.gauge_fn("sched_used_tokens",
+                             lambda s=ls: s.used_tokens, instance=i)
+                tel.gauge_fn("sched_host_used_tokens",
+                             lambda s=ls: s.host_used_tokens,
+                             instance=i)
+                tel.gauge_fn("sched_prefetch_reserved_tokens",
+                             lambda s=ls: s.prefetch_reserved_tokens,
+                             instance=i)
+                st = self.gs.instances[i]
+                tel.gauge_fn("gs_cached_tokens",
+                             lambda s=st: s.cached_tokens, instance=i)
+                tel.gauge_fn("gs_host_cached_tokens",
+                             lambda s=st: s.host_cached_tokens,
+                             instance=i)
 
     def _notify_evictions(self, inst: int, spans, *, demoted=(),
                           host_dropped=()) -> None:
@@ -246,6 +278,43 @@ class Simulator:
             f *= self.faults.straggle_factor(inst)
         return t * f
 
+    def _annotate_admission(self, inst: int, batch) -> None:
+        """Attach the cost model's modeled DMA/DCN seconds to the
+        restore / migrate / prefetch_claim events ``form_batch`` just
+        stamped on each admitted request's trace, splitting the
+        iteration's single batched charge pro-rata by tokens — the
+        exact quantities ``_iter_time`` adds to the iteration,
+        including the instance speed/straggle factor (deterministic,
+        so recomputing it here perturbs nothing)."""
+        sf = self.cfg.speed_factors or {}
+        f = sf.get(inst, 1.0)
+        if self.faults is not None:
+            f *= self.faults.straggle_factor(inst)
+        pre = [it for it in batch.items if it.phase == "prefill"]
+        restored = sum(it.restored_len for it in pre)
+        migrated = sum(it.migrated_len for it in pre)
+        rt = self.cm.restore_time(restored) * f if restored else 0.0
+        mt = self.cm.migrate_time(migrated) * f if migrated else 0.0
+        for it in pre:
+            tr = it.request.trace
+            if tr is None:
+                continue
+            if it.restored_len:
+                tr.annotate_last(
+                    "restore", seconds=rt * it.restored_len / restored)
+            if it.migrated_len:
+                tr.annotate_last(
+                    "migrate", seconds=mt * it.migrated_len / migrated)
+            for ev in reversed(tr.events):
+                # hidden cost the prefetch pipeline absorbed: what the
+                # claimed tokens would have cost as a critical-path
+                # restore at this admission (informational, not summed)
+                if ev["name"] == "prefetch_claim":
+                    ev["seconds"] = (self.cm.restore_time(
+                        ev.get("tokens", 0)) * f
+                        if ev.get("tokens") else 0.0)
+                    break
+
     # ---- fault machinery -----------------------------------------------------
 
     def reconcile_all(self, now: float) -> int:
@@ -313,23 +382,36 @@ class Simulator:
         counters = self.fault_counters
         guard = max(1_000_000, 1_000 * max(n_total, 1))
 
-        def terminal_fail(r: Request, t: float) -> None:
+        tel = self.telemetry
+
+        def terminal_fail(r: Request, t: float, reason: str) -> None:
             r.state = RequestState.FAILED
             r.finish_time = t
+            if tel is not None:
+                if r.trace is None:
+                    tel.trace(r, t)
+                r.trace.close_open(t, status="error")
+                r.trace.point("failed", t, reason=reason)
+                tel.observe_request(r, t)
             failed.append(r)
 
         def reroute(r: Request, t: float) -> None:
             if r.state == RequestState.FINISHED:
                 return
-            r.reset_for_retry()
+            r.reset_for_retry(t)
             r.retries += 1
             if r.retries > cfg.retry_budget:
                 counters["failed_terminal"] += 1
-                terminal_fail(r, t)
+                terminal_fail(r, t, "retry_budget")
                 return
             counters["retries"] += 1
             delay = (cfg.retry_backoff * 2.0 ** (r.retries - 1)
                      if cfg.retry_backoff > 0.0 else 0.0)
+            if tel is not None:
+                tel.event("retry", t, id=r.request_id,
+                          attempt=r.retries, backoff=delay)
+                if r.trace is not None and delay > 0.0:
+                    r.trace.point("backoff", t, delay=delay)
             heapq.heappush(events, (t + delay, next(seq), "arrival", r))
 
         def recover(inst: int, t: float) -> None:
@@ -339,7 +421,11 @@ class Simulator:
             if self.gs.instances[inst].alive:
                 self.gs.on_instance_failure(inst, t)
             self._busy[inst] = False
-            for r in self.locals[inst].drain():
+            drained = self.locals[inst].drain()
+            if tel is not None:
+                tel.event("recover", t, instance=inst,
+                          requests=len(drained))
+            for r in drained:
                 counters["recovered_requests"] += 1
                 reroute(r, t)
 
@@ -356,6 +442,8 @@ class Simulator:
                 return
             self._busy[inst] = True
             dt = self._iter_time(inst, batch)
+            if tel is not None:
+                self._annotate_admission(inst, batch)
             heapq.heappush(events,
                            (t + dt, next(seq), "iter_done", (inst, batch)))
 
@@ -417,21 +505,26 @@ class Simulator:
             if kind == "arrival":
                 r: Request = payload
                 prefetch = None
+                if tel is not None:
+                    tel.trace(r, now)
                 if cfg.policy == "rr":
                     alive = self.gs.alive_instances()
                     if not alive:
                         counters["failed_no_survivors"] += 1
-                        terminal_fail(r, now)
+                        terminal_fail(r, now, "no_survivors")
                         continue
                     inst = next(self._rr)
                     while inst not in alive:
                         inst = next(self._rr)
                     r.instance = inst
                     r.scheduled_time = now
+                    if r.trace is not None:
+                        r.trace.point("schedule", now, instance=inst,
+                                      mode="rr")
                 else:
                     if not self.gs.alive_instances():
                         counters["failed_no_survivors"] += 1
-                        terminal_fail(r, now)
+                        terminal_fail(r, now, "no_survivors")
                         continue
                     decision = self.gs.schedule(r, now)
                     inst = decision.instance
@@ -439,6 +532,14 @@ class Simulator:
                         self._execute_migration(r, inst,
                                                 decision.migration, now)
                     prefetch = decision.prefetch
+                    if r.trace is not None:
+                        r.trace.point(
+                            "schedule", now, instance=inst,
+                            mode=decision.mode, cost=decision.cost,
+                            cached=decision.cached_len,
+                            missed=decision.missed_len,
+                            migrated=r.migrated_len,
+                            prefetch=prefetch is not None)
                 # a SILENTLY crashed instance can still be chosen (the
                 # detector hasn't fired): the request strands in its
                 # queue until detection recovers it — exactly the
@@ -456,6 +557,8 @@ class Simulator:
                     continue
                 self._crashed.add(inst)
                 self.faults.record_crash(inst)
+                if tel is not None:
+                    tel.event("crash", now, instance=inst)
                 self._busy[inst] = False
                 if not detection:
                     recover(inst, now)      # oracle fallback
@@ -511,6 +614,8 @@ class Simulator:
                 done = self.locals[inst].complete_iteration(batch, now)
                 for r in done:
                     self.gs.on_request_complete(r, now)
+                    if tel is not None:
+                        tel.observe_request(r, now)
                     finished.append(r)
                 kick(inst, now)
                 if self.locals[inst].prefetch_enabled:

@@ -1,0 +1,372 @@
+"""Unified telemetry plane (DESIGN.md §12): metrics registry +
+vocabulary, per-request trace timelines, TTFT/latency attribution,
+exporters, and the disabled == absent byte-identical guarantee — on
+the simulator and the real fused+tiered+prefetch cluster, clean and
+under injected faults."""
+
+import dataclasses
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.core.request import Request, RequestState
+from repro.models import zoo
+from repro.serving.cluster import ClusterRuntime
+from repro.serving.engine import EngineConfig
+from repro.serving.faults import FaultConfig
+from repro.serving.simulator import SimConfig, Simulator
+from repro.serving.telemetry import (BREAKDOWN_COMPONENTS, Histogram,
+                                     MetricsRegistry, RequestTrace,
+                                     StatsDict, Telemetry, frac_of)
+
+
+# ---- unit: registry primitives ---------------------------------------------
+
+
+def test_histogram_percentiles_match_sorted_index():
+    rng = np.random.default_rng(3)
+    vals = rng.exponential(0.3, 257).tolist()
+    h = Histogram.from_values(vals)
+    v, n = sorted(vals), len(vals)
+    assert h.percentile(0.50) == v[n // 2]
+    assert h.percentile(0.99) == v[min(int(n * 0.99), n - 1)]
+    assert h.mean == pytest.approx(sum(vals) / n)
+    assert h.count == n
+    # bucket counts cover every sample exactly once
+    assert sum(h.counts) == n
+
+
+def test_registry_exporters():
+    reg = MetricsRegistry()
+    reg.counter("steps", instance=0).inc(3)
+    reg.counter("steps", instance=1).inc()
+    reg.gauge("depth").set(7)
+    reg.gauge_fn("live", lambda: 42)
+    reg.histogram("lat").observe(0.2)
+    snap = json.loads(json.dumps(reg.snapshot()))   # JSON-serializable
+    assert snap["counters"]['steps{instance="0"}'] == 3
+    assert snap["gauges"]["live"] == 42
+    prom = reg.to_prometheus()
+    assert "# TYPE steps counter" in prom
+    assert 'steps{instance="1"} 1' in prom
+    assert "lat_count 1" in prom and "lat_sum" in prom
+    assert 'lat_bucket{le="+Inf"} 1' in prom
+
+
+def test_statsdict_views_and_derived_keys():
+    sd = StatsDict({"hits": 3, "total": 4},
+                   derived={"hit_frac": frac_of("hits", "total")})
+    assert sd["hit_frac"] == 0.75
+    assert dict(sd)["hit_frac"] == 0.75       # dict() keeps derived keys
+    with pytest.raises(KeyError):
+        sd["hit_frac"] = 0.5                  # derived keys are read-only
+    # binding migrates storage into the registry without changing reads
+    reg = MetricsRegistry()
+    sd.bind(reg, "eng", instance=2)
+    assert sd["hits"] == 3 and sd["hit_frac"] == 0.75
+    sd["hits"] += 1
+    assert reg.get("eng_hits", instance=2) == 4
+    assert sd["hit_frac"] == 1.0
+
+
+# ---- unit: traces + attribution --------------------------------------------
+
+
+def _finished_request(**kw):
+    r = Request(tokens=(1,) * 16, max_new_tokens=4, arrival_time=1.0, **kw)
+    r.state = RequestState.FINISHED
+    r.scheduled_time, r.first_run_time = 1.1, 1.4
+    r.first_token_time, r.finish_time = 1.9, 2.5
+    return r
+
+
+def test_trace_spans_idempotent_and_breakdown_sums():
+    r = _finished_request()
+    tr = RequestTrace(r)
+    tr.point("submit", 1.0)
+    tr.point("schedule", 1.1, instance=0)
+    tr.begin("queue", 1.1)
+    tr.begin("queue", 1.2)                    # idempotent: earliest wins
+    tr.end("queue", 1.4)
+    tr.end("queue", 1.45)                     # no-op: already closed
+    tr.begin("prefill", 1.4)
+    tr.point("restore", 1.4, tokens=64, seconds=0.1)
+    tr.end("prefill", 1.9)
+    tr.begin("decode", 1.9)
+    tr.end("decode", 2.5)
+    assert tr.open_spans() == []
+    bd = tr.breakdown()
+    assert bd["status"] == "finished"
+    assert bd["sched_delay"] == pytest.approx(0.1)
+    assert bd["queue"] == pytest.approx(0.3)
+    assert bd["restore"] == pytest.approx(0.1)
+    assert bd["compute"] == pytest.approx(0.4)
+    assert bd["decode"] == pytest.approx(0.6)
+    assert sum(bd[c] for c in BREAKDOWN_COMPONENTS) \
+        == pytest.approx(r.latency(), abs=1e-12)
+    assert bd["ttft"] == pytest.approx(r.ttft(), abs=1e-12)
+
+
+def test_breakdown_clamps_modeled_charges_into_prefill_window():
+    r = _finished_request()
+    tr = RequestTrace(r)
+    tr.point("restore", 1.4, tokens=999, seconds=99.0)  # absurd charge
+    bd = tr.breakdown()
+    # restore is clamped to the measured prefill window: compute >= 0
+    # and the components still sum exactly
+    assert bd["compute"] >= 0.0
+    assert sum(bd[c] for c in BREAKDOWN_COMPONENTS) \
+        == pytest.approx(r.latency(), abs=1e-12)
+
+
+def test_reset_for_retry_clears_finish_time_and_stamps_retry():
+    r = Request(tokens=(1, 2, 3), max_new_tokens=2)
+    r.state = RequestState.DECODING
+    r.finish_time = 9.0
+    tr = RequestTrace(r)
+    tr.begin("queue", 0.5)
+    r.trace = tr
+    r.reset_for_retry(1.0)
+    assert r.finish_time == 0.0               # satellite-1 regression
+    assert tr.open_spans() == []              # crash closed the span
+    assert tr.events[-1]["name"] == "retry"
+    r.reset_for_retry(1.0)                    # drain + reroute double-call
+    assert sum(1 for e in tr.events if e["name"] == "retry") == 1
+
+
+# ---- simulator: gating, timelines, chaos -----------------------------------
+
+
+def _sim_requests(n, shared_len=256, tail=64, out=8, spacing=0.05, seed=0):
+    rng = np.random.default_rng(seed)
+    shared = tuple(rng.integers(1, 1 << 20, shared_len).tolist())
+    return [Request(tokens=shared
+                    + tuple(rng.integers(1, 1 << 20, tail).tolist()),
+                    max_new_tokens=out, arrival_time=i * spacing)
+            for i in range(n)]
+
+
+def _sim_cfg(**kw):
+    base = dict(num_instances=2, capacity_tokens=2_000,
+                host_capacity_tokens=20_000, prefetch_budget_tokens=512)
+    base.update(kw)
+    return SimConfig(**base)
+
+
+def test_sim_disabled_telemetry_byte_identical():
+    runs = {}
+    for key, tel in (("absent", None),
+                     ("disabled", Telemetry(enabled=False)),
+                     ("enabled", Telemetry())):
+        res = Simulator(_sim_cfg(), telemetry=tel).run(
+            _sim_requests(30, seed=11))
+        runs[key] = res.summary()
+    assert runs["absent"] == runs["disabled"]
+    assert runs["absent"] == runs["enabled"]  # observation never perturbs
+
+
+def _session_waves(n_sessions=8, prefix_len=1000, tail=50, out=8, seed=7):
+    """Warm wave (cold prefills, demotion) + re-hit bursts: the traffic
+    shape where host restores and the speculative-prefetch pipeline
+    both engage (bench_prefetch's scenario, scaled down)."""
+    rng = np.random.default_rng(seed)
+    prefixes = [tuple(rng.integers(1, 1 << 20, prefix_len).tolist())
+                for _ in range(n_sessions)]
+    warm, t = [], 0.0
+    for p in prefixes:
+        warm.append(Request(
+            tokens=p + tuple(rng.integers(1, 1 << 20, tail).tolist()),
+            max_new_tokens=out, arrival_time=t))
+        t += 1.5
+    burst, t0 = [], t + 5.0
+    for w in range(3):
+        for i, p in enumerate(prefixes):
+            burst.append(Request(
+                tokens=p + tuple(rng.integers(1, 1 << 20, tail).tolist()),
+                max_new_tokens=out,
+                arrival_time=t0 + w * 6.0 + 0.002 * i))
+    return warm, burst
+
+
+def test_sim_clean_run_timelines_complete():
+    tel = Telemetry()
+    sim = Simulator(SimConfig(
+        num_instances=2, capacity_tokens=2_100,
+        host_capacity_tokens=8_400, chunk_size=2048,
+        max_batch_tokens=8192, prefetch_budget_tokens=1_260),
+        telemetry=tel)
+    warm, burst = _session_waves()
+    sim.run(warm)
+    res = sim.run(burst)
+    assert len(res.finished) == len(burst)
+    assert tel.open_spans() == {}
+    for r in res.finished:
+        bd = r.trace.breakdown()
+        assert abs(bd["latency"] - r.latency()) < 1e-9
+        assert abs(bd["ttft"] - r.ttft()) < 1e-9
+        names = [e["name"] for e in r.trace.events]
+        for must in ("submit", "schedule", "admit", "first_token",
+                     "finish"):
+            assert must in names, f"{must} missing from timeline"
+    # per-class histograms observed every finished request (both waves)
+    assert tel.registry.get("request_latency_seconds",
+                            workload="default") \
+        == len(warm) + len(burst)
+    # the prefetch pipeline engaged: issue events in the log, and the
+    # hidden-DMA attribution landed on the claiming requests
+    assert tel.events_named("prefetch_issue")
+    assert any(r.trace.breakdown()["prefetch_hidden"] > 0
+               for r in res.finished)
+    # callback gauges read live scheduler truth
+    for i, ls in sim.locals.items():
+        assert tel.registry.get("sched_used_tokens", instance=i) \
+            == ls.used_tokens
+
+
+def test_sim_chaos_no_leaked_spans_and_gauges_exact():
+    tel = Telemetry()
+    sim = Simulator(_sim_cfg(
+        num_instances=3,
+        faults=FaultConfig(seed=21, crash_at={0: 0.4},
+                           dma_failure_rate=0.05, notify_drop_rate=0.02),
+        heartbeat_interval=0.1, suspect_misses=2, dead_misses=5,
+        reconcile_every=0.5, retry_budget=3, retry_backoff=0.1),
+        telemetry=tel)
+    reqs = _sim_requests(40, seed=21)
+    res = sim.run(reqs)
+    assert len(res.finished) + len(res.failed) == 40
+    assert res.stats["crashes"] == 1.0
+    # every open span was closed by a terminal/retry path
+    assert tel.open_spans() == {}
+    assert tel.events_named("crash") and tel.events_named("recover")
+    assert tel.events_named("retry")
+    # breakdown stays exact under retries/backoff; failures zero out
+    for r in res.finished:
+        bd = r.trace.breakdown()
+        assert abs(bd["latency"] - r.latency()) < 1e-9
+        assert abs(bd["ttft"] - r.ttft()) < 1e-9
+    for r in res.failed:
+        bd = r.trace.breakdown()
+        assert bd["status"] != "finished"
+        assert all(bd[c] == 0.0 for c in BREAKDOWN_COMPONENTS)
+    # terminal counters cover the population exactly once
+    fin = sum(v for n, v in tel.registry.series().items()
+              if n.startswith("request_finished"))
+    fail = sum(v for n, v in tel.registry.series().items()
+               if n.startswith("request_failed"))
+    assert fin == len(res.finished) and fail == len(res.failed)
+    # after anti-entropy the registry's callback gauges equal
+    # per-instance scheduler truth (residency digest)
+    sim.reconcile_all(res.makespan)
+    sim.check_invariants()
+    for i, ls in sim.locals.items():
+        if i in sim._crashed:
+            continue
+        d = ls.residency_digest()
+        assert tel.registry.get("gs_cached_tokens", instance=i) \
+            == sum(n for _, n in d["device"])
+        assert tel.registry.get("gs_host_cached_tokens", instance=i) \
+            == sum(n for _, n in d["host"])
+
+
+def test_sim_snapshot_and_prometheus_export():
+    tel = Telemetry()
+    Simulator(_sim_cfg(), telemetry=tel).run(_sim_requests(10, seed=3))
+    snap = json.loads(tel.to_json())
+    assert set(snap) >= {"counters", "gauges", "histograms", "events",
+                         "traces"}
+    assert snap["traces"]["open_spans"] == {}
+    prom = tel.to_prometheus()
+    assert "# TYPE request_latency_seconds histogram" in prom
+    assert 'request_latency_seconds_bucket' in prom
+    assert "sched_used_tokens" in prom
+
+
+# ---- cluster plane (real engines) ------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = dataclasses.replace(reduced(ARCHS["smollm-360m"]), n_layers=2,
+                              dtype="float32")
+    api = zoo.build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    return cfg, api, params
+
+
+def _mk_requests(cfg, n, shared_len=24, tail=8, out=4, seed=0):
+    rng = np.random.default_rng(seed)
+    shared = tuple(rng.integers(1, cfg.vocab_size, shared_len).tolist())
+    return [Request(tokens=shared
+                    + tuple(rng.integers(1, cfg.vocab_size, tail).tolist()),
+                    max_new_tokens=out) for _ in range(n)]
+
+
+def _run_cluster(cfg, params, tel, seed=0, n=8):
+    cl = ClusterRuntime(
+        cfg, params, num_instances=2,
+        engine_cfg=EngineConfig(
+            max_context=64, chunk_size=16, max_batch_tokens=64,
+            capacity_tokens=128, page_size=16,
+            host_capacity_tokens=4096, prefetch_budget_tokens=128),
+        fault_config=FaultConfig(seed=seed),
+        telemetry=tel)
+    reqs = _mk_requests(cfg, n, shared_len=32, tail=24, out=4, seed=seed)
+    t = 0.0
+    for r in reqs:
+        cl.submit(r, t)
+    for _ in range(800):
+        cl.step(t)
+        t += 0.01
+        if len(cl.finished) + len(cl.failed_requests) == n:
+            break
+    return cl, reqs
+
+
+def test_cluster_telemetry_timelines_and_vocabulary(small_model):
+    cfg, api, params = small_model
+    tel = Telemetry()
+    cl, reqs = _run_cluster(cfg, params, tel)
+    assert len(cl.finished) == len(reqs)
+    assert tel.open_spans() == {}
+    for r in cl.finished:
+        bd = r.trace.breakdown()
+        assert abs(bd["latency"] - r.latency()) < 1e-9
+        assert abs(bd["ttft"] - r.ttft()) < 1e-9
+    # adopted stats stay live views over the registry
+    eng = cl.engines[0]
+    assert eng.stats["iterations"] \
+        == tel.registry.get("engine_iterations", instance=0)
+    sch = eng.scheduler
+    assert tel.registry.get("sched_used_tokens", instance=0) \
+        == sch.used_tokens
+    # sim and cluster speak the same metric vocabulary (PR-6 counter
+    # parity, extended to the full telemetry plane): every shared-family
+    # name the sim emits exists on the cluster registry too
+    sim_tel = Telemetry()
+    Simulator(_sim_cfg(num_instances=2,
+                       faults=FaultConfig(seed=0, dma_failure_rate=0.05),
+                       heartbeat_interval=0.1, reconcile_every=0.5),
+              telemetry=sim_tel).run(_sim_requests(20, seed=5))
+    shared = ("gs_", "sched_", "faults_", "request_")
+    sim_names = {n for n in sim_tel.registry.names()
+                 if n.startswith(shared)}
+    cl_names = {n for n in tel.registry.names() if n.startswith(shared)}
+    missing = sim_names - cl_names
+    assert not missing, f"sim emits names the cluster never does: {missing}"
+
+
+def test_cluster_disabled_telemetry_byte_identical(small_model):
+    cfg, api, params = small_model
+    outs = {}
+    for key, tel in (("absent", None),
+                     ("disabled", Telemetry(enabled=False)),
+                     ("enabled", Telemetry())):
+        cl, reqs = _run_cluster(cfg, params, tel, seed=4)
+        outs[key] = ([list(r.output_tokens) for r in reqs],
+                     dict(cl.stats), dict(cl.engines[0].stats))
+    assert outs["absent"] == outs["disabled"]
+    assert outs["absent"][0] == outs["enabled"][0]   # tokens unperturbed
