@@ -1,6 +1,7 @@
 PY ?= python
 
-.PHONY: ci ci-fast test bench-engine bench-smoke chaos-smoke obs-smoke install
+.PHONY: ci ci-fast test bench-engine bench-smoke chaos-smoke obs-smoke \
+	shard-smoke install
 
 install:
 	$(PY) -m pip install -e .[test]
@@ -17,6 +18,7 @@ ci-fast:
 	$(MAKE) bench-smoke
 	$(MAKE) chaos-smoke
 	$(MAKE) obs-smoke
+	$(MAKE) shard-smoke
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -q
@@ -54,3 +56,13 @@ chaos-smoke:
 # perturbs results at all, or if its wall-clock overhead is unbounded
 obs-smoke:
 	PYTHONPATH=src $(PY) -m benchmarks.bench_obs
+
+# SPMD data-plane gate (DESIGN.md §13): real engine forwards at TP
+# 1/2/4 on an emulated CPU mesh, fixed per-chip pool — fails unless
+# every run is token-exact vs the single-device dense oracle, the
+# fused plane stays at exactly 1.0 model dispatches/iteration, and
+# pooled device KV capacity scales linearly with the mesh; emits the
+# per-shard DMA/collective/occupancy breakdown to
+# results/bench/bench_spmd.{csv,json}
+shard-smoke:
+	PYTHONPATH=src $(PY) -m benchmarks.bench_spmd

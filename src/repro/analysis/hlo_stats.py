@@ -152,7 +152,12 @@ def analyze_hlo(text: str) -> HloStats:
             if md:
                 out_dt = md.group(1)
                 out_dims = _dims(md.group(2))
-                op_strs = [o.strip() for o in md.group(3).split(",")]
+                # operands separate on top-level commas only — inline
+                # shapes ("f32[8,16]{1,0} %x") contain commas of their
+                # own, so split right before the next dtype[/ %name
+                op_strs = [o.strip() for o in
+                           re.split(r",\s+(?=[a-z0-9]+\[|%)",
+                                    md.group(3))]
 
                 def op_shape(s: str):
                     # operand may carry inline shape "f32[a,b] %x"

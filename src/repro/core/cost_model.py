@@ -184,6 +184,21 @@ class CostModel:
             t += n_decode * self.model.kv_bytes_per_token * ctx / bw
         return t
 
+    def with_chips(self, chips: int) -> "CostModel":
+        """Re-derive this cost model for a ``chips``-way TP submesh of
+        the same hardware (mesh-of-meshes: a heterogeneous cluster holds
+        1-chip and 4-chip instances side by side, and E2 must price each
+        against its own aggregate HBM/compute). Calibrated coefficients
+        (``fit``) do not carry over — they were measured at the old TP
+        degree."""
+        import dataclasses as _dc
+        hw = _dc.replace(self.hw, chips_per_instance=max(chips, 1))
+        return CostModel(hw=hw, model=self.model,
+                         prefill_b=self.prefill_b, decode_b=self.decode_b,
+                         restore_b=self.restore_b, migrate_b=self.migrate_b,
+                         avg_context=self.avg_context,
+                         avg_decode_batch=self.avg_decode_batch)
+
     # ---- calibration (paper: offline profiling regression) ------------------
 
     def fit(self, prefill_samples: Sequence[Tuple[float, float]],

@@ -80,11 +80,17 @@ class GlobalScheduler:
                      capacity_tokens: Optional[int] = None,
                      speed_factor: float = 1.0,
                      host_capacity_tokens: Optional[int] = None,
-                     now: float = 0.0) -> None:
+                     now: float = 0.0,
+                     cost_model: Optional[CostModel] = None) -> None:
+        """``cost_model`` overrides the scheduler-wide default for this
+        instance — heterogeneous clusters (mesh-of-meshes, DESIGN.md
+        §13) register each submesh with a cost model derived for its
+        own TP degree, so E2 prices a 4-chip instance's prefill/decode
+        against its aggregate compute/HBM."""
         self.instances[instance_id] = InstanceState(
             instance_id=instance_id,
             capacity_tokens=capacity_tokens or self.config.capacity_tokens,
-            cost_model=self.cost_model,
+            cost_model=cost_model or self.cost_model,
             window=self.config.window,
             speed_factor=speed_factor,
             host_capacity_tokens=(

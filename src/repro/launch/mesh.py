@@ -11,9 +11,10 @@ touch jax device state (device count locks on first use).
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
+import numpy as np
 
 
 def make_production_mesh(*, multi_pod: bool = False,
@@ -52,3 +53,47 @@ def make_host_mesh(n_instances: int = 1):
     """Tiny mesh for CPU tests (1 device): all axes size 1 except data."""
     ndev = len(jax.devices())
     return jax.make_mesh((min(n_instances, ndev), 1), ("data", "model"))
+
+
+# ---------------------------------------------------------------------
+# serving submeshes (one engine instance = one TP submesh)
+# ---------------------------------------------------------------------
+
+def make_serve_mesh(chips: int, devices: Optional[Sequence] = None):
+    """Per-instance tensor-parallel submesh: ("data", "model") =
+    (1, chips). The serving engine runs its donated fused dispatch over
+    this mesh — params TP-sharded by serve_policy, the paged KV pool by
+    pool_pspec — while page tables and scheduling state stay on host.
+    ``devices`` pins the physical chips (ClusterRuntime carves
+    jax.devices() into disjoint groups for the mesh-of-meshes); by
+    default the first ``chips`` visible devices are taken."""
+    if chips < 1:
+        raise ValueError(f"chips must be >= 1, got {chips}")
+    devs = list(devices) if devices is not None else jax.devices()[:chips]
+    if len(devs) < chips:
+        raise ValueError(
+            f"need {chips} devices for a serve submesh, have {len(devs)} "
+            "(CPU runs: XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+    return jax.sharding.Mesh(
+        np.array(devs[:chips], dtype=object).reshape(1, chips),
+        ("data", "model"))
+
+
+def partition_devices(chips_per_instance: Sequence[int]) -> list:
+    """Carve the visible devices into disjoint per-instance groups —
+    the mesh-of-meshes: instance i gets chips_per_instance[i] chips.
+    Heterogeneous clusters (1-chip and 4-chip instances side by side)
+    are the point; the groups never overlap, so each submesh's
+    collectives stay inside its instance."""
+    devs = jax.devices()
+    need = sum(max(c, 1) for c in chips_per_instance)
+    if need > len(devs):
+        raise ValueError(
+            f"cluster needs {need} chips ({list(chips_per_instance)}) "
+            f"but only {len(devs)} devices are visible")
+    groups, ofs = [], 0
+    for c in chips_per_instance:
+        c = max(c, 1)
+        groups.append(devs[ofs:ofs + c])
+        ofs += c
+    return groups

@@ -36,7 +36,19 @@ def main() -> None:
     ap.add_argument("--rps", type=float, default=50.0)
     ap.add_argument("--max-context", type=int, default=96)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--chips-per-instance", default=None,
+                    help="comma list of TP degrees, one per instance "
+                         "(mesh-of-meshes, e.g. '4,1,1'); a single int "
+                         "applies to every instance. Needs that many "
+                         "visible devices (CPU: XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N).")
     args = ap.parse_args()
+
+    chips = None
+    if args.chips_per_instance is not None:
+        parts = [int(p) for p in str(args.chips_per_instance).split(",")]
+        chips = (parts * args.instances)[:args.instances] \
+            if len(parts) == 1 else parts
 
     cfg = reduced(get_config(args.arch))
     api = zoo.build(cfg)
@@ -61,7 +73,8 @@ def main() -> None:
                             chunk_size=16, max_batch_tokens=64,
                             capacity_tokens=64 * args.max_context,
                             page_size=16),
-                        policy=args.policy)
+                        policy=args.policy,
+                        chips_per_instance=chips)
     t0 = time.time()
     done = cl.run(reqs, dt=0.01)
     wall = time.time() - t0

@@ -178,7 +178,19 @@ def _cache_pspec(name: str, shape: Tuple[int, ...], mesh: Mesh,
     if bspec is not None:
         used.update(_norm(bspec))
     if name in ("k", "v", "ck", "cv"):
-        S = shape[2]
+        S, KH = shape[2], shape[3]
+        # head-wise TP first (Megatron-style: each chip owns KH/tp
+        # heads, zero cross-chip traffic inside attention) — but ONLY
+        # when the TP degree divides kv_heads. The GQA edge (tp > KH,
+        # or non-divisible KH) must REPLICATE heads and fall back to
+        # sequence sharding: an indivisible head spec is a compile
+        # error, not a slow path.
+        hspec = None
+        if "model" in mesh.shape and "model" not in used \
+                and KH % axis_size(mesh, "model") == 0 \
+                and axis_size(mesh, "model") > 1:
+            hspec = "model"
+            used.add("model")
         sspec = None
         for axes in _SEQ_PREFS:
             if all(a in mesh.shape for a in axes) \
@@ -186,7 +198,7 @@ def _cache_pspec(name: str, shape: Tuple[int, ...], mesh: Mesh,
                     and S % axis_size(mesh, axes) == 0:
                 sspec = axes[0] if len(axes) == 1 else tuple(axes)
                 break
-        return P(None, bspec, sspec, None, None)
+        return P(None, bspec, sspec, hspec, None)
     if name == "conv":
         ed = shape[3]
         m = "model" if ed % axis_size(mesh, "model") == 0 else None
@@ -211,3 +223,74 @@ def cache_shardings(cache_specs: Pytree, mesh: Mesh) -> Pytree:
                     for k, v in tree.items()}
         raise TypeError(tree)
     return walk(cache_specs)
+
+
+# ---------------------------------------------------------------------
+# paged KV pool shardings (serving data plane, DESIGN.md §13)
+# ---------------------------------------------------------------------
+
+def pool_pspec(shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """PartitionSpec for one paged-pool leaf [n_pages, PS, KH, D].
+
+    Preference order, each guarded by divisibility:
+      1. head-wise   P(None, None, "model", None) — each chip owns
+         KH/tp kv-heads of every page (Megatron attention, zero
+         resharding inside the kernel);
+      2. slot-wise   P(None, "model", None, None) — the GQA fallback:
+         when the TP degree exceeds (or doesn't divide) kv_heads, heads
+         REPLICATE and each chip owns PS/tp token slots of every page
+         (sequence sharding at page granularity — distributed
+         flash-decoding over the slot shards);
+      3. page-wise   P("model", None, None, None) — last resort when
+         the page size doesn't divide either;
+      4. replicate.
+
+    The guard in step 1 is the serve-time GQA edge: producing an
+    indivisible head spec (e.g. KH=1 pools on a 4-chip submesh) would
+    be a mesh compile error, so heads replicate and the sequence axis
+    takes the shard instead."""
+    n_pages, ps, kh, _d = shape
+    if "model" not in mesh.shape:
+        return P(None, None, None, None)
+    tp = axis_size(mesh, "model")
+    if tp <= 1:
+        return P(None, None, None, None)
+    if kh % tp == 0:
+        return P(None, None, "model", None)
+    if ps % tp == 0:
+        return P(None, "model", None, None)
+    if n_pages % tp == 0:
+        return P("model", None, None, None)
+    return P(None, None, None, None)
+
+
+def span_pspec(shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """PartitionSpec for a token-granular KV span [L, KH, D] — the
+    host<->device DMA payloads (demote gathers land as [nb, PS, KH, D],
+    restore/prefetch scatters ship [L, KH, D]). Only the head shard
+    carries over from ``pool_pspec``: each chip moves exactly its own
+    kv-head slice (per-shard DMA); slot/page-sharded pools replicate
+    the span and let the scatter's index arithmetic route tokens."""
+    kh = shape[-2]
+    if "model" not in mesh.shape:
+        return P(*([None] * len(shape)))
+    tp = axis_size(mesh, "model")
+    if tp > 1 and kh % tp == 0:
+        return P(*([None] * (len(shape) - 2)), "model", None)
+    return P(*([None] * len(shape)))
+
+
+def pool_shardings(pool_specs: Pytree, mesh: Mesh) -> Pytree:
+    """NamedShardings for the engine's paged pool pytree
+    ({pj: {gg: {"k"/"v": [n_pages, PS, KH, D]}}})."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, pool_pspec(s.shape, mesh)),
+        pool_specs)
+
+
+def span_shardings(pool_specs: Pytree, mesh: Mesh) -> Pytree:
+    """NamedShardings for token-granular DMA payloads matching the
+    pool tree: leaf [L, KH, D] per pool leaf."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, span_pspec((1,) + s.shape[2:], mesh)),
+        pool_specs)

@@ -365,7 +365,15 @@ def forward_mixed_paged(params, cfg, xc, xd, pages, chunk_table,
     Decode-only and single-chunk batches are special cases of this
     entry, so one trace per (Lc, C, Ld) bucket triple serves any mix of
     phases — model dispatches per iteration stay O(1) in the number of
-    active prefills."""
+    active prefills.
+
+    SPMD contract (DESIGN.md §13): this body is written once and runs
+    unchanged on a tensor-parallel submesh. The engine jits it with the
+    pool pinned to ``pool_pspec`` shardings and params TP-sharded by
+    ``serve_policy``; GSPMD then partitions the page gathers/scatters
+    and inserts the attention/MLP collectives. Nothing here may assume
+    a device count — page-table indexing is position-based, so it is
+    valid under head-, slot-, or page-sharded pools alike."""
     plan = layer_plan(cfg)
     new = {pj: dict(groups) for pj, groups in pages.items()}
     for g in range(cfg.n_groups):
@@ -556,7 +564,10 @@ def paged_cache_specs(cfg, n_pages: int, page_size: int) -> Pytree:
     scan group) — i.e. per physical layer. The pool is instance-wide:
     requests address it through page tables, so there is no batch or
     seq dim, and leaves are kept per-layer (not stacked over groups)
-    so the unrolled paged forwards update them in place."""
+    so the unrolled paged forwards update them in place. On a serve
+    submesh each leaf shards by ``launch.sharding.pool_pspec`` (heads
+    when divisible, else page slots), so every chip holds a 1/tp slice
+    of EVERY page — aggregate pool capacity scales with the submesh."""
     if not paged_servable(cfg):
         raise ValueError(f"{cfg.name}: stack is not paged-servable")
     plan = layer_plan(cfg)

@@ -1,0 +1,87 @@
+"""Host/device batch split for the paged data plane (DESIGN.md §13).
+
+The sglang-jax idiom (SNIPPETS.md §3), three stages with a hard
+host/device boundary between the last two:
+
+  * ScheduleBatch   — ``core.local_scheduler.Batch``: scheduling state
+    (requests, phases, chunk budgets, page tables). Host-only, mutable,
+    never sees a device.
+  * ModelWorkerBatch — this module: the numpy subset the model forward
+    actually consumes, already padded/bucketed to its (Lc, C, Ld)
+    trace shape. Built once per engine step from the ScheduleBatch;
+    pure host arrays.
+  * ForwardBatch    — this module: the SAME arrays lowered to
+    device-ready jax arrays in ONE transfer (a single ``device_put``
+    of the whole tuple, replicated over the engine's submesh when it
+    has one). This is the only thing that crosses the host/device
+    boundary besides the donated pool itself, so each scheduling step
+    ships exactly one batch lowering and one model dispatch.
+
+Keeping the split explicit is what makes the SPMD plane cheap: page
+tables and scheduling state never live on device, and the sharded jit
+sees only bucketed dense arrays whose shapes retrace O(log^3) times.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, fields
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["ModelWorkerBatch", "ForwardBatch"]
+
+
+@dataclass
+class ModelWorkerBatch:
+    """Host-side (numpy) model inputs for one fused iteration.
+
+    Mixed steps fill both halves; pure-decode steps leave the chunk
+    half at Lc=0 and use the decode bucket entry instead. All arrays
+    are padded to their power-of-two buckets already — the worker
+    batch IS the trace shape."""
+    # prefill-chunk half: [Lc, C] tokens, per-lane start/len, [Lc, P]
+    # page-table rows (padding lanes carry all-scratch rows)
+    chunk_tokens: np.ndarray
+    chunk_start: np.ndarray
+    chunk_len: np.ndarray
+    chunk_page_table: np.ndarray
+    # decode half: [Ld] fed tokens / context positions, [Ld, P] rows
+    dec_tokens: np.ndarray
+    dec_pos: np.ndarray
+    dec_page_table: np.ndarray
+
+    def arrays(self) -> Tuple[np.ndarray, ...]:
+        return tuple(getattr(self, f.name) for f in fields(self))
+
+
+@dataclass
+class ForwardBatch:
+    """Device-side twin of ``ModelWorkerBatch``: same fields, jax
+    arrays, produced by ``lower`` in one batched host->device transfer.
+    Immutable from the engine's point of view — the step passes its
+    fields straight into the donated (sharded) dispatch."""
+    chunk_tokens: jax.Array
+    chunk_start: jax.Array
+    chunk_len: jax.Array
+    chunk_page_table: jax.Array
+    dec_tokens: jax.Array
+    dec_pos: jax.Array
+    dec_page_table: jax.Array
+
+    @classmethod
+    def lower(cls, wb: ModelWorkerBatch,
+              sharding: Optional[Any] = None) -> "ForwardBatch":
+        """ONE host->device transfer for the whole worker batch. With a
+        submesh the arrays commit replicated over it (``sharding`` is
+        the engine's replicated NamedSharding), so the fused dispatch
+        never reshards its dense inputs; single-device engines keep the
+        plain uncommitted path byte-identical to the pre-SPMD engine."""
+        arrs = wb.arrays()
+        if sharding is not None:
+            out = jax.device_put(arrs, (sharding,) * len(arrs))
+        else:
+            out = tuple(jnp.asarray(a) for a in arrs)
+        return cls(*out)

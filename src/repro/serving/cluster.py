@@ -37,6 +37,7 @@ from ..core.cost_model import CostModel, cost_model_for
 from ..core.e2 import MigrationPlan
 from ..core.global_scheduler import GlobalScheduler, GlobalSchedulerConfig
 from ..core.request import Request, RequestState
+from ..launch.mesh import partition_devices
 from .engine import Engine, EngineConfig
 from .faults import FaultConfig, FaultInjector, InstanceCrashed
 from .telemetry import Telemetry
@@ -51,28 +52,66 @@ class ClusterRuntime:
                  fault_config: Optional[FaultConfig] = None,
                  retry_budget: int = 3,
                  retry_backoff: float = 0.0,
-                 telemetry: Optional[Telemetry] = None):
+                 telemetry: Optional[Telemetry] = None,
+                 chips_per_instance: Optional[Sequence[int]] = None):
+        """``chips_per_instance`` turns the cluster into a mesh-of-
+        meshes (DESIGN.md §13): entry i gives instance i's TP degree.
+        The visible devices are carved into disjoint groups (multi-chip
+        instances each get their own submesh; 1-chip instances stay on
+        the default device with no mesh at all), every instance
+        registers with the global scheduler at its AGGREGATE pooled
+        capacity (per-chip capacity x chips), and E2 prices it with a
+        cost model re-derived for its own chip count — so a 4-chip
+        instance looks 4x faster AND 4x larger than a 1-chip neighbor.
+        ``None`` (default) is the homogeneous pre-SPMD path,
+        byte-identical to before."""
         self.policy = policy
         # disabled telemetry is treated exactly like None (byte-
         # identical runs), mirroring the faults-gating pattern
         self.telemetry = (telemetry if telemetry is not None
                           and telemetry.enabled else None)
         base = engine_cfg or EngineConfig()
-        self.gs = GlobalScheduler(
-            num_instances=num_instances,
-            cost_model=cost_model or cost_model_for("smollm-360m"),
-            config=scheduler_cfg or GlobalSchedulerConfig(
-                capacity_tokens=base.capacity_tokens,
-                host_capacity_tokens=base.host_capacity_tokens))
+        base_cm = cost_model or cost_model_for("smollm-360m")
+        gs_cfg = scheduler_cfg or GlobalSchedulerConfig(
+            capacity_tokens=base.capacity_tokens,
+            host_capacity_tokens=base.host_capacity_tokens)
         self.faults = (FaultInjector(fault_config)
                        if fault_config is not None else None)
         self.engines: Dict[int, Engine] = {}
-        for i in range(num_instances):
-            ec = dataclasses.replace(base, instance_id=i)
-            self.engines[i] = Engine(model_cfg, params, ec,
-                                     on_evict=self._notify_evictions)
-            if self.faults is not None:
-                self.engines[i].attach_faults(self.faults)
+        if chips_per_instance is None:
+            self.gs = GlobalScheduler(num_instances=num_instances,
+                                      cost_model=base_cm, config=gs_cfg)
+            self._device_ofs = 0
+            for i in range(num_instances):
+                ec = dataclasses.replace(base, instance_id=i)
+                self.engines[i] = Engine(model_cfg, params, ec,
+                                         on_evict=self._notify_evictions)
+                if self.faults is not None:
+                    self.engines[i].attach_faults(self.faults)
+        else:
+            chips = [max(int(c), 1) for c in chips_per_instance]
+            if len(chips) != num_instances:
+                raise ValueError(
+                    f"chips_per_instance has {len(chips)} entries for "
+                    f"{num_instances} instances")
+            groups = partition_devices(chips)
+            self._device_ofs = sum(chips)
+            self.gs = GlobalScheduler(num_instances=0,
+                                      cost_model=base_cm, config=gs_cfg)
+            for i, (c, grp) in enumerate(zip(chips, groups)):
+                ec = dataclasses.replace(base, instance_id=i,
+                                         chips_per_instance=c)
+                self.engines[i] = Engine(
+                    model_cfg, params, ec,
+                    on_evict=self._notify_evictions,
+                    devices=grp if c > 1 else None)
+                if self.faults is not None:
+                    self.engines[i].attach_faults(self.faults)
+                self.gs.add_instance(
+                    i, capacity_tokens=ec.device_capacity_tokens,
+                    host_capacity_tokens=ec.host_capacity_tokens,
+                    cost_model=(base_cm.with_chips(c) if c > 1
+                                else base_cm))
         self._rr_next = 0
         self.finished: List[Request] = []
         # terminal failures (retry budget exhausted / zero survivors):
@@ -600,17 +639,37 @@ class ClusterRuntime:
 
     def add_instance(self, model_cfg, params, now: float,
                      engine_cfg: Optional[EngineConfig] = None) -> int:
-        """Elastic scale-up: register and start a fresh instance."""
+        """Elastic scale-up: register and start a fresh instance. A
+        multi-chip ``engine_cfg`` carves its submesh from the devices
+        not yet owned by an existing instance (mesh-of-meshes stays
+        disjoint) and registers at aggregate capacity with a
+        chips-derived cost model."""
         inst = max(self.engines) + 1
         ec = dataclasses.replace(engine_cfg or EngineConfig(),
                                  instance_id=inst)
+        devices = None
+        chips = max(ec.chips_per_instance, 1)
+        if chips > 1:
+            import jax
+            ofs = getattr(self, "_device_ofs", 0)
+            devs = jax.devices()
+            if ofs + chips > len(devs):
+                raise ValueError(
+                    f"elastic add needs {chips} free chips, only "
+                    f"{len(devs) - ofs} remain unassigned")
+            devices = devs[ofs:ofs + chips]
+            self._device_ofs = ofs + chips
         self.engines[inst] = Engine(model_cfg, params, ec,
-                                    on_evict=self._notify_evictions)
+                                    on_evict=self._notify_evictions,
+                                    devices=devices)
         if self.faults is not None:
             self.engines[inst].attach_faults(self.faults)
         self.gs.add_instance(inst,
+                             capacity_tokens=ec.device_capacity_tokens,
                              host_capacity_tokens=ec.host_capacity_tokens,
-                             now=now)
+                             now=now,
+                             cost_model=(self.gs.cost_model.with_chips(chips)
+                                         if chips > 1 else None))
         if self.telemetry is not None:
             self.engines[inst].attach_telemetry(self.telemetry)
             self._gs_gauges(inst)

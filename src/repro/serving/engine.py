@@ -52,17 +52,22 @@ pjit'd ones from launch/serve.py; the scheduling logic is shared.
 from __future__ import annotations
 
 import dataclasses
+import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..core.local_scheduler import Batch, LocalScheduler, LocalSchedulerConfig
 from ..core.radix_tree import PathKey, PrefixSpan
 from ..core.request import Request, RequestState
+from ..launch import sharding as shard_lib
+from ..launch.mesh import make_serve_mesh
 from ..models import zoo, transformer as T
+from .batch import ForwardBatch, ModelWorkerBatch
 from .faults import CircuitBreaker, InstanceCrashed
 from .kv_cache import PagedKVPool
 from .kv_offload import HostKVStore, PagedHostTier
@@ -109,6 +114,18 @@ class EngineConfig:
     # step's model dispatch, drained after it — so admission aliases
     # the prefetched pages and restores nothing on the TTFT path.
     prefetch_budget_tokens: int = 0
+    # SPMD data plane (DESIGN.md §13): TP degree of this instance.
+    # >1 makes the engine a tensor-parallel submesh — params sharded by
+    # serve_policy, the paged pool by pool_pspec, the fused dispatch
+    # compiled over the mesh. ``capacity_tokens`` stays PER-CHIP: the
+    # pooled device KV capacity is capacity_tokens * chips (each chip
+    # holds a 1/chips slice of every page, so aggregate HBM scales).
+    chips_per_instance: int = 1
+
+    @property
+    def device_capacity_tokens(self) -> int:
+        """Aggregate KV token capacity of the instance's submesh."""
+        return self.capacity_tokens * max(self.chips_per_instance, 1)
 
 
 def _cache_zeros(specs: Pytree) -> Pytree:
@@ -131,7 +148,8 @@ def _bucket(n: int) -> int:
 
 class Engine:
     def __init__(self, cfg, params, econf: EngineConfig,
-                 on_evict: Optional[Callable] = None):
+                 on_evict: Optional[Callable] = None,
+                 devices: Optional[Sequence] = None):
         # the demo engine serves full attention; SWA only changes
         # semantics beyond max_context, which the demo never reaches
         self.model_cfg = dataclasses.replace(cfg, sliding_window=0)
@@ -156,10 +174,25 @@ class Engine:
                 and econf.host_capacity_tokens <= 0:
             raise ValueError("speculative restore prefetches HOST-tier "
                              "spans: set host_capacity_tokens > 0")
+        # SPMD submesh (DESIGN.md §13): chips > 1 turns this engine into
+        # one tensor-parallel instance. The mesh is built BEFORE the
+        # scheduler so token accounting sees the pooled (aggregate)
+        # device capacity; single-chip engines take the exact pre-SPMD
+        # path — no mesh, no shardings, byte-identical dispatches.
+        self.chips = max(econf.chips_per_instance, 1)
+        self.mesh = None
+        self._rep_sharding = None
+        if self.chips > 1:
+            if not self.paged:
+                raise ValueError(
+                    "tensor-parallel serving (chips_per_instance > 1) "
+                    "requires the paged data plane")
+            self.mesh = make_serve_mesh(self.chips, devices)
+            self._rep_sharding = NamedSharding(self.mesh, P())
         self.scheduler = LocalScheduler(
             LocalSchedulerConfig(
                 instance_id=econf.instance_id,
-                capacity_tokens=econf.capacity_tokens,
+                capacity_tokens=econf.device_capacity_tokens,
                 chunk_size=econf.chunk_size,
                 max_batch_tokens=econf.max_batch_tokens,
                 max_batch_requests=econf.max_batch_requests,
@@ -194,7 +227,14 @@ class Engine:
              "prefetch_issued": 0, "prefetch_hit": 0,
              "prefetch_wasted": 0, "prefetch_dispatches": 0,
              "prefetch_batches": 0,
-             "prefetch_batches_overlapped": 0},
+             "prefetch_batches_overlapped": 0,
+             # SPMD plane (§13): wall seconds of per-shard host<->device
+             # payload movement (batch lowering, restore/prefetch
+             # scatters, demote drains) and of blocking on the sharded
+             # dispatch + cross-shard result assembly. Accumulated ONLY
+             # when a mesh exists — single-chip engines stay at 0.0 and
+             # byte-identical to the pre-SPMD plane.
+             "shard_dma_seconds": 0.0, "collective_seconds": 0.0},
             derived={"demote_overlap_frac":
                      frac_of("demote_batches_overlapped",
                              "demote_batches"),
@@ -224,27 +264,61 @@ class Engine:
 
     def _init_paged(self) -> None:
         ps = self.econf.page_size
-        # scheduler token accounting keeps usage under capacity_tokens;
+        # scheduler token accounting keeps usage under the AGGREGATE
+        # submesh capacity (capacity_tokens per chip x chips — each chip
+        # holds a 1/chips slice of every page, so pooled HBM scales);
         # slack pages absorb page-granularity fragmentation (every live
         # sequence wastes < page_size tokens in its tail page), +1 for
         # the reserved scratch page that padded batch lanes write into.
         # slack scales with concurrency: one partial tail page AND one
         # unaccounted CoW duplicate per live request, + the scratch page
-        n_pages = (self.econf.capacity_tokens // ps
+        n_pages = (self.econf.device_capacity_tokens // ps
                    + 2 * self.econf.max_batch_requests + 1)
         self.pool = PagedKVPool(n_pages, ps)
         self._scratch_page = self.pool.reserve_page()   # page 0, pinned
         assert self._scratch_page == 0
         self._pages_per_req = -(-self.econf.max_context // ps)
-        self.pages = _cache_zeros(self.api.paged_cache_specs(n_pages, ps))
+        specs = self.api.paged_cache_specs(n_pages, ps)
+        jit_kw: Dict[str, Any] = {}
+        gather_kw: Dict[str, Any] = {}
+        if self.mesh is not None:
+            # SPMD plane (§13): shard params by serve_policy and the
+            # pool leaves by pool_pspec (head-wise when the TP degree
+            # divides kv_heads, slot/page-wise GQA fallback otherwise).
+            # Out-shardings pin the donated pool's layout so GSPMD can
+            # never reshard it across steps (donation stays aliasing).
+            policy = shard_lib.serve_policy(self.mesh, self.api.n_bytes)
+            self.params = jax.device_put(
+                self.params,
+                shard_lib.param_shardings(self.api.specs, self.mesh,
+                                          policy))
+            self._pool_shardings = shard_lib.pool_shardings(specs,
+                                                            self.mesh)
+            self._span_shardings = shard_lib.span_shardings(specs,
+                                                            self.mesh)
+            # demote gathers keep every non-page axis shard: drop the
+            # page dim's partition, keep slot/head placement per-shard
+            self._gathered_shardings = jax.tree.map(
+                lambda s: NamedSharding(
+                    self.mesh, P(None, *tuple(s.spec)[1:])),
+                self._pool_shardings)
+            jit_kw = {"out_shardings": (self._rep_sharding,
+                                        self._pool_shardings)}
+            gather_kw = {"out_shardings": self._gathered_shardings}
+            self.pages = jax.device_put(_cache_zeros(specs),
+                                        self._pool_shardings)
+        else:
+            self.pages = _cache_zeros(specs)
         self._decode_paged_fn = jax.jit(self._decode_paged_impl,
-                                        donate_argnums=(0,))
+                                        donate_argnums=(0,), **jit_kw)
         self._extend_paged_fn = jax.jit(self._extend_paged_impl,
-                                        donate_argnums=(0,))
+                                        donate_argnums=(0,), **jit_kw)
         self._mixed_paged_fn = jax.jit(self._mixed_paged_impl,
-                                       donate_argnums=(0,))
-        self._copy_page_fn = jax.jit(self._copy_page_impl,
-                                     donate_argnums=(0,))
+                                       donate_argnums=(0,), **jit_kw)
+        self._copy_page_fn = jax.jit(
+            self._copy_page_impl, donate_argnums=(0,),
+            **({"out_shardings": self._pool_shardings}
+               if self.mesh is not None else {}))
         # keep node->page aliases aligned with radix node splits
         self.scheduler.tree.split_hooks.append(self._on_split)
         # hierarchical KV tiering (DESIGN.md §8): the scheduler owns
@@ -258,9 +332,12 @@ class Engine:
             self.scheduler.host_tier = PagedHostTier(self, self.host_store)
             self.scheduler.tree.split_hooks.append(self._on_split_host)
             self._gather_pages_fn = jax.jit(
-                lambda pages, idx: jax.tree.map(lambda a: a[idx], pages))
-            self._scatter_tokens_fn = jax.jit(self._scatter_tokens_impl,
-                                              donate_argnums=(0,))
+                lambda pages, idx: jax.tree.map(lambda a: a[idx], pages),
+                **gather_kw)
+            self._scatter_tokens_fn = jax.jit(
+                self._scatter_tokens_impl, donate_argnums=(0,),
+                **({"out_shardings": self._pool_shardings}
+                   if self.mesh is not None else {}))
         else:
             self.host_store = None
 
@@ -312,6 +389,35 @@ class Engine:
         Padding tokens carry pidx 0 — the reserved scratch page."""
         return jax.tree.map(lambda a, d: a.at[pidx, sidx].set(d),
                             pages, data)
+
+    # ---- host/device batch boundary (DESIGN.md §13) ------------------------
+
+    def _lower_batch(self, wb: ModelWorkerBatch) -> ForwardBatch:
+        """ModelWorkerBatch -> ForwardBatch: ONE host->device transfer
+        for the step's dense inputs. On a submesh the arrays commit
+        replicated (timed into ``shard_dma_seconds``); single-chip
+        engines take the plain asarray path."""
+        if self.mesh is None:
+            return ForwardBatch.lower(wb)
+        t0 = time.perf_counter()
+        fb = ForwardBatch.lower(wb, self._rep_sharding)
+        jax.block_until_ready(fb.dec_page_table)
+        self.stats["shard_dma_seconds"] += time.perf_counter() - t0
+        return fb
+
+    def _fetch_result(self, nxt) -> np.ndarray:
+        """Materialize the dispatch's per-lane predictions host-side.
+        On a submesh this blocks on the sharded computation and
+        assembles the cross-shard result (timed into
+        ``collective_seconds`` — an emulated mesh cannot split the
+        collective out of the fused dispatch, so the series reports the
+        blocked-on-device wall time, an upper bound)."""
+        if self.mesh is None:
+            return np.asarray(nxt)
+        t0 = time.perf_counter()
+        out = np.asarray(nxt)
+        self.stats["collective_seconds"] += time.perf_counter() - t0
+        return out
 
     def gather_pages_device(self, page_ids: List[int]) -> Tuple[Any, int]:
         """Demote-side snapshot: ONE bucketed device gather over an
@@ -646,6 +752,22 @@ class Engine:
             return x
 
         data = jax.tree.map(cat, *[s[2] for s in staged])
+        if self.mesh is not None:
+            # per-shard DMA: each chip receives exactly its own slice
+            # of the restored KV (head shard when the pool is
+            # head-sharded; replicated payload otherwise, with the
+            # scatter's index arithmetic routing tokens to the owning
+            # shard) — timed into the shard-DMA series
+            t0 = time.perf_counter()
+            dev = jax.device_put(
+                (np.asarray(pp), np.asarray(ss)),
+                (self._rep_sharding, self._rep_sharding))
+            data = jax.device_put(data, self._span_shardings)
+            jax.block_until_ready(data)
+            self.stats["shard_dma_seconds"] += time.perf_counter() - t0
+            self.pages = self._scatter_tokens_fn(
+                self.pages, dev[0], dev[1], data)
+            return
         self.pages = self._scatter_tokens_fn(
             self.pages, jnp.asarray(pp), jnp.asarray(ss),
             jax.tree.map(jnp.asarray, data))
@@ -1127,11 +1249,17 @@ class Engine:
         dpt = self._page_table_rows(
             [("req", it.request.request_id) for it in dec_items],
             n_rows=Ld)
+        # ScheduleBatch -> ModelWorkerBatch -> ForwardBatch (§13): the
+        # host-side arrays above lower in ONE device transfer, then the
+        # single donated (sharded) dispatch consumes them — scheduling
+        # state and page tables never live on device
+        wb = ModelWorkerBatch(ctoks, cstart, clen, cpt, dtoks, dpos, dpt)
+        fb = self._lower_batch(wb)
         nxt, self.pages = self._mixed_paged_fn(
-            self.pages, jnp.asarray(ctoks), jnp.asarray(cstart),
-            jnp.asarray(clen), jnp.asarray(cpt), jnp.asarray(dtoks),
-            jnp.asarray(dpos), jnp.asarray(dpt))
-        nxt = np.asarray(nxt)
+            self.pages, fb.chunk_tokens, fb.chunk_start, fb.chunk_len,
+            fb.chunk_page_table, fb.dec_tokens, fb.dec_pos,
+            fb.dec_page_table)
+        nxt = self._fetch_result(nxt)
         self.stats["model_dispatches"] += 1
         self.stats["fused_iterations"] += 1
         self.stats["fused_padded_tokens"] += (
@@ -1171,10 +1299,16 @@ class Engine:
             pos[i] = r.prompt_len + len(r.output_tokens) - 1
         pt = self._page_table_rows(
             [("req", r.request_id) for r in dec], n_rows=Bb)
+        # pure-decode steps ride the same host/device batch boundary as
+        # the fused path: empty chunk half, one lowering, one dispatch
+        wb = ModelWorkerBatch(np.zeros((0, 1), np.int32),
+                              np.zeros(0, np.int32), np.zeros(0, np.int32),
+                              np.zeros((0, self._pages_per_req), np.int32),
+                              tokens, pos, pt)
+        fb = self._lower_batch(wb)
         nxt, self.pages = self._decode_paged_fn(
-            self.pages, jnp.asarray(tokens), jnp.asarray(pos),
-            jnp.asarray(pt))
-        nxt = np.asarray(nxt)
+            self.pages, fb.dec_tokens, fb.dec_pos, fb.dec_page_table)
+        nxt = self._fetch_result(nxt)
         for i, r in enumerate(dec):
             self.live[r.request_id]["next"] = int(nxt[i])
         self.stats["decode_steps"] += B
@@ -1239,6 +1373,18 @@ class Engine:
         telemetry.gauge_fn("sched_prefetch_reserved_tokens",
                            lambda s=sch: s.prefetch_reserved_tokens,
                            instance=inst)
+        # SPMD plane (§13): per-shard pool occupancy. Every chip holds
+        # a 1/chips slice of every live page, so each shard's occupancy
+        # in tokens equals the pool's used pages x page_size (its BYTES
+        # are 1/chips of that); reading through the engine keeps the
+        # gauge live across fail()'s pool rebuild.
+        if self.mesh is not None:
+            for s in range(self.chips):
+                telemetry.gauge_fn(
+                    "engine_shard_pool_tokens",
+                    lambda e=self: (e.pool.used_pages * e.pool.page_size
+                                    // e.chips),
+                    instance=inst, shard=s)
 
     def crash(self) -> None:
         """SILENT death (vs ``fail``, the oracle path): the data plane

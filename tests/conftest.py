@@ -11,6 +11,18 @@ each module uses its own reduced configs.
 """
 
 import gc
+import os
+
+# The SPMD data-plane tests (tests/test_spmd_engine.py) need a real
+# multi-device mesh; on CPU runners that is emulated by asking XLA for
+# 8 host-platform devices BEFORE jax initializes its backend (the flag
+# is read once, at first device use). Single-device tests are
+# unaffected: uncommitted arrays still land on device 0 and nothing
+# shards unless a mesh is built explicitly.
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=8").strip()
 
 import jax
 import pytest

@@ -5,14 +5,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
 from jax.sharding import PartitionSpec as P
 
 from repro.analysis.hlo_stats import analyze_hlo
 from repro.configs import ARCHS, ASSIGNED, get_config
 from repro.launch.sharding import (Policy, _cache_pspec, dp_spec,
-                                   serve_policy, train_policy)
+                                   pool_pspec, serve_policy, span_pspec,
+                                   train_policy)
 from repro.models import zoo
 from repro.models.spec import Spec, _walk
 
@@ -121,6 +120,114 @@ def test_full_spec_tree_maps(arch):
             return None
 
         _walk(api.specs, leaf)
+
+
+# ---------------------------------------------------------------------
+# Policy.pspec mechanics (preference order / divisibility / axis reuse)
+# ---------------------------------------------------------------------
+
+TP4 = FakeMesh({"data": 16, "model": 4})
+
+
+def test_pspec_preference_order():
+    # first pref that exists, divides, and is unused wins
+    pol = Policy(rules={"x": (("model", "data"), ("model",), ("data",))})
+    s = Spec((256,), ("x",))
+    assert pol.pspec(s, PROD) == P(("model", "data"))
+    # 16 divides model=16 but not model*data=256 -> second pref
+    s = Spec((16,), ("x",))
+    assert pol.pspec(s, PROD) == P("model")
+
+
+def test_pspec_missing_axis_skipped():
+    # "pod" absent on the single-pod mesh -> falls through to "model"
+    pol = Policy(rules={"x": (("pod", "model"), ("model",))})
+    s = Spec((32,), ("x",))
+    assert pol.pspec(s, PROD) == P("model")
+    assert pol.pspec(s, PROD2) == P(("pod", "model"))
+
+
+def test_pspec_exhausted_prefs_replicate():
+    pol = Policy(rules={"x": (("model",), ("data",))})
+    s = Spec((15, 7), ("x", "x"))       # divides neither 16 axis
+    assert pol.pspec(s, PROD) == P()    # trailing Nones popped
+
+
+def test_pspec_tuple_pref_axis_reuse():
+    # dim 0 takes "model"; dim 1's ("model","data") pref must be
+    # rejected wholesale (partial reuse), falling through to ("data",)
+    pol = Policy(rules={"a": ("model",),
+                        "b": (("model", "data"), ("data",))})
+    s = Spec((32, 256), ("a", "b"))
+    assert pol.pspec(s, PROD) == P("model", "data")
+
+
+def test_dp_spec_pod_fallback():
+    # 16 % (pod*data)=32 != 0 but 16 % data=16 == 0 -> "data" alone
+    assert dp_spec(PROD2, 16) == "data"
+
+
+def test_serve_policy_big_fsdp_embed_rule():
+    small = serve_policy(PROD, param_bytes=4 << 30)
+    big = serve_policy(PROD, param_bytes=300 << 30)
+    assert "embed" not in small.rules              # replicate when small
+    assert big.rules["embed"] == ("data",)         # FSDP when big
+    # expert FSDP engages with the same switch
+    s = Spec((8, 64, 2560), ("experts", "expert_in", "expert_ff"))
+    assert small.pspec(s, PROD) == P("model", None, None) or \
+        small.pspec(s, PROD) == P(None, None, "model")
+    assert big.pspec(s, PROD) == P(None, None, ("model", "data"))
+
+
+# ---------------------------------------------------------------------
+# serve-time paged-pool shardings + the GQA edge (DESIGN.md §13)
+# ---------------------------------------------------------------------
+
+def test_pool_pspec_head_wise_when_divisible():
+    # KH=8 divides tp=4 -> Megatron head sharding
+    assert pool_pspec((289, 16, 8, 64), TP4) == P(None, None, "model", None)
+
+
+def test_pool_pspec_gqa_falls_back_to_slots():
+    """The GQA edge: TP degree exceeds kv_heads -> heads must REPLICATE
+    and the page-slot dim takes the shard (an indivisible head spec
+    would be a compile error, not a slow path)."""
+    spec = pool_pspec((289, 16, 1, 64), TP4)
+    assert spec == P(None, "model", None, None)
+    assert spec[2] is None                         # heads replicated
+    # KH=6 doesn't divide tp=4 either -> same fallback
+    assert pool_pspec((289, 16, 6, 64), TP4) == P(None, "model", None, None)
+
+
+def test_pool_pspec_page_wise_last_resort_and_replicate():
+    # neither heads (1) nor slots (15) divide; pages (288) do
+    assert pool_pspec((288, 15, 1, 64), TP4) == P("model", None, None, None)
+    # nothing divides -> replicate rather than produce an illegal spec
+    assert pool_pspec((289, 15, 1, 64), TP4) == P(None, None, None, None)
+    # tp=1 or no "model" axis -> always replicate
+    assert pool_pspec((289, 16, 8, 64), FakeMesh({"data": 4, "model": 1})) \
+        == P(None, None, None, None)
+
+
+def test_span_pspec_only_head_shard_carries_over():
+    # head-sharded pools move per-shard DMA payloads (each chip ships
+    # its own kv-head slice); slot/page-sharded pools replicate spans
+    assert span_pspec((100, 8, 64), TP4) == P(None, "model", None)
+    assert span_pspec((100, 1, 64), TP4) == P(None, None, None)
+    assert span_pspec((3, 16, 8, 64), TP4) == P(None, None, "model", None)
+
+
+def test_cache_pspec_head_preference_guarded():
+    # decode-cell k/v now prefer head-wise TP when KH divides
+    assert _cache_pspec("k", (4, 128, 32768, 8, 128), TP4) == \
+        P(None, "data", None, "model", None)
+    # GQA edge (KH=2, tp=4): heads replicate, sequence takes "model" —
+    # the pre-SPMD behavior, byte-identical
+    assert _cache_pspec("k", (4, 128, 32768, 2, 128), TP4) == \
+        P(None, "data", "model", None, None)
+    # production (16,16): KH=8 % 16 != 0 -> unchanged from before
+    assert _cache_pspec("k", (4, 128, 32768, 8, 128), PROD) == \
+        P(None, "data", "model", None, None)
 
 
 def test_hlo_analyzer_counts_nested_loops():
