@@ -1,7 +1,7 @@
 PY ?= python
 
 .PHONY: ci ci-fast test bench-engine bench-smoke chaos-smoke obs-smoke \
-	shard-smoke install
+	shard-smoke spec-smoke install
 
 install:
 	$(PY) -m pip install -e .[test]
@@ -19,6 +19,7 @@ ci-fast:
 	$(MAKE) chaos-smoke
 	$(MAKE) obs-smoke
 	$(MAKE) shard-smoke
+	$(MAKE) spec-smoke
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -q
@@ -66,3 +67,14 @@ obs-smoke:
 # results/bench/bench_spmd.{csv,json}
 shard-smoke:
 	PYTHONPATH=src $(PY) -m benchmarks.bench_spmd
+
+# speculative-decoding gate (DESIGN.md §14): the fused draft-propose +
+# target-verify plane on a calibrated 100%-acceptance model pair
+# (target = draft + identity tail layers) — fails unless the greedy
+# speculative run is token-exact vs the non-speculative fused
+# baseline, the engine stays at exactly 1.0 TARGET dispatches per
+# iteration (verify lanes ride the one mixed dispatch), realized
+# acceptance is ~1.0, and p50 decode throughput improves >= 1.5x;
+# emits per-run + breakdown tables to results/bench/bench_spec.*
+spec-smoke:
+	PYTHONPATH=src $(PY) -m benchmarks.bench_spec

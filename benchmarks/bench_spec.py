@@ -1,0 +1,204 @@
+"""Fused speculative decoding smoke bench (DESIGN.md §14) — the
+`make spec-smoke` gate.
+
+Runs the SAME decode-heavy greedy workload through the fused paged
+plane with speculation OFF and ON (draft-propose + target-verify riding
+the one mixed dispatch), at identical device capacity, and fails loudly
+unless:
+
+  * the speculative run is token-exact against the non-speculative
+    fused baseline (greedy verification must not change one token);
+  * the speculative plane still issues EXACTLY 1.0 TARGET-model
+    dispatches per engine iteration (verify lanes ride the chunk half
+    of the one donated ``forward_mixed_paged`` call — draft dispatches
+    are accounted separately in ``spec_draft_dispatches``);
+  * the realized acceptance rate on the calibrated high-acceptance
+    model pair is ~1.0 (the pair is constructed so the draft and
+    target produce bit-identical logits, see ``_model_pair``);
+  * p50 decode throughput (tokens/s over ``TRIALS`` repeat drives of
+    the warmed engines) improves by at least 1.5x.
+
+Prints the per-run table plus the §12 TTFT/latency breakdown with the
+per-request ``spec_proposed/accepted_tokens`` rows; results land in
+results/bench/bench_spec.{csv,json}.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import ARCHS, reduced
+from repro.core.request import Request
+from repro.models import zoo
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving.speculative import SpeculativeConfig
+from repro.serving.telemetry import Telemetry
+
+from .common import RESULTS_DIR, breakdown_rows, emit, percentile
+
+DRAFT_LAYERS = 2
+TARGET_LAYERS = 4
+K = 4
+TRIALS = 5
+MIN_SPEEDUP = 1.5
+
+
+def _model_pair():
+    """Target/draft pair with a KNOWN ~1.0 greedy acceptance rate.
+
+    The target is the draft plus ``TARGET_LAYERS - DRAFT_LAYERS`` tail
+    layers whose attention and MLP output projections (``wo``/``wd``)
+    are zeroed — each such layer is an exact identity on the residual
+    stream, so draft and target produce bit-identical logits while the
+    target still pays the full 4-layer dispatch. Real deployments pair
+    a trained small model; the smoke gate needs a deterministic
+    acceptance=1.0 workload to make the throughput bar meaningful."""
+    cfg = dataclasses.replace(reduced(ARCHS["smollm-360m"]),
+                              n_layers=TARGET_LAYERS, dtype="float32")
+    api = zoo.build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    assert set(params["stack"]) == {"p0"}, "expected a uniform dense plan"
+    p0 = params["stack"]["p0"]
+    p0 = {**p0,
+          "attn": {**p0["attn"],
+                   "wo": p0["attn"]["wo"].at[DRAFT_LAYERS:].set(0.0)},
+          "ffn": {**p0["ffn"],
+                  "wd": p0["ffn"]["wd"].at[DRAFT_LAYERS:].set(0.0)}}
+    params = {"embed": params["embed"], "stack": {"p0": p0}}
+    draft_cfg = dataclasses.replace(cfg, n_layers=DRAFT_LAYERS)
+    draft_params = {"embed": params["embed"],
+                    "stack": jax.tree.map(lambda a: a[:DRAFT_LAYERS],
+                                          {"p0": p0})}
+    return cfg, params, draft_cfg, draft_params
+
+
+def _econf(spec=None):
+    return EngineConfig(max_context=96, chunk_size=16, max_batch_tokens=160,
+                        max_batch_requests=16, capacity_tokens=4096,
+                        page_size=16, speculative=spec)
+
+
+def _reqs(cfg, seed):
+    """Decode-heavy wave: short prompts, long generations."""
+    rng = np.random.default_rng(seed)
+    return [Request(tokens=tuple(rng.integers(1, cfg.vocab_size,
+                                              int(rng.integers(8, 17)))
+                                 .tolist()),
+                    max_new_tokens=64)
+            for _ in range(8)]
+
+
+def _drive(eng, reqs, tel=None, max_iters=2000):
+    done, now = [], 0.0
+    for r in reqs:
+        if tel is not None:         # the cluster front-end does this in
+            tel.trace(r, now)       # production; the bench drives raw
+        eng.scheduler.enqueue(r, now)
+    for _ in range(max_iters):
+        done += eng.step(now)
+        now += 0.01
+        if len(done) == len(reqs):
+            break
+    assert len(done) == len(reqs), "bench workload did not finish"
+    return done
+
+
+def _outs(done):
+    return {(tuple(r.tokens), r.max_new_tokens): list(r.output_tokens)
+            for r in done}
+
+
+def _trial(eng, cfg, tel=None, seed=0):
+    """One timed drive; decode tokens/s excludes each request's first
+    (prefill-produced) token."""
+    t0 = time.perf_counter()
+    done = _drive(eng, _reqs(cfg, seed), tel=tel)
+    wall = time.perf_counter() - t0
+    dec = sum(len(r.output_tokens) - 1 for r in done)
+    return done, dec / max(wall, 1e-9)
+
+
+def main() -> int:
+    cfg, params, draft_cfg, draft_params = _model_pair()
+    spec = SpeculativeConfig(draft_cfg=draft_cfg, k=K,
+                             draft_params=draft_params)
+    runs = {}
+    for name, sp in (("spec_off", None), ("spec_on", spec)):
+        eng = Engine(cfg, params, _econf(sp))
+        tel = Telemetry()
+        eng.attach_telemetry(tel)
+        _trial(eng, cfg)            # warmup: compiles every bucket shape
+        outs, rates = {}, []
+        for _ in range(TRIALS):     # same seed -> same shapes, fully warm
+            done, rate = _trial(eng, cfg)      # untraced: timing only
+            rates.append(rate)
+            outs = _outs(done)
+        _trial(eng, cfg, tel)       # traced drive for the breakdown table
+        runs[name] = {"eng": eng, "tel": tel, "outs": outs,
+                      "rates": rates, "p50": percentile(rates, 0.50)}
+
+    off, on = runs["spec_off"], runs["spec_on"]
+    st = on["eng"].stats
+
+    # ---- gates ----------------------------------------------------------
+    assert on["outs"] == off["outs"], (
+        "speculative run diverged from the non-speculative fused "
+        "baseline (greedy verify must be token-exact)")
+    dpi = st["model_dispatches"] / max(st["iterations"], 1)
+    assert dpi == 1.0, (
+        f"{dpi:.3f} target dispatches/iteration (verify lanes must ride "
+        f"the one fused dispatch)")
+    assert st["spec_draft_dispatches"] > 0, "draft plane never dispatched"
+    acc = st["spec_accepted_tokens"] / max(st["spec_proposed_tokens"], 1)
+    assert acc >= 0.98, (
+        f"acceptance {acc:.3f} on the calibrated identical-logits pair "
+        f"(expected ~1.0)")
+    speedup = on["p50"] / off["p50"]
+    assert speedup >= MIN_SPEEDUP, (
+        f"p50 decode throughput speedup {speedup:.2f}x < {MIN_SPEEDUP}x "
+        f"(off {off['p50']:.1f} tok/s, on {on['p50']:.1f} tok/s)")
+
+    rows = []
+    for name in ("spec_off", "spec_on"):
+        e = runs[name]["eng"]
+        rows.append({
+            "run": name,
+            "decode_tok_s_p50": runs[name]["p50"],
+            "dispatches_per_iter": (e.stats["model_dispatches"]
+                                    / max(e.stats["iterations"], 1)),
+            "draft_dispatches": e.stats["spec_draft_dispatches"],
+            "proposed": e.stats["spec_proposed_tokens"],
+            "accepted": e.stats["spec_accepted_tokens"],
+            "rejected": e.stats["spec_rejected_tokens"],
+            "degraded": e.stats["spec_degraded"],
+            "acceptance": (e.stats["spec_accepted_tokens"]
+                           / max(e.stats["spec_proposed_tokens"], 1)),
+        })
+    emit("bench_spec", rows)
+    emit("bench_spec_breakdown",
+         breakdown_rows(on["tel"], "spec_on")
+         + breakdown_rows(off["tel"], "spec_off"))
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, "bench_spec.json"), "w") as f:
+        json.dump({"config": {"k": K, "trials": TRIALS,
+                              "draft_layers": DRAFT_LAYERS,
+                              "target_layers": TARGET_LAYERS},
+                   "rows": rows, "speedup_p50": speedup,
+                   "gates": ["token_exact_vs_nonspec_baseline",
+                             "one_target_dispatch_per_iteration",
+                             "acceptance_near_one",
+                             f"p50_speedup_ge_{MIN_SPEEDUP}x"]},
+                  f, indent=2)
+    print(f"spec-smoke gates passed: exactness, 1.0 target dispatches/"
+          f"iter, acceptance {acc:.3f}, p50 speedup {speedup:.2f}x")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -44,6 +44,11 @@ def breakdown_rows(traces, label: str = "") -> List[Dict[str, Any]]:
         traces = traces.traces
     per: Dict[str, List[float]] = {c: [] for c in BREAKDOWN_COMPONENTS}
     hidden: List[float] = []
+    # speculative decoding (§14): per-request proposed/accepted draft
+    # tokens — informational rows (token counts, not seconds), emitted
+    # only when any finished request actually speculated
+    spec: Dict[str, List[float]] = {"spec_proposed_tokens": [],
+                                    "spec_accepted_tokens": []}
     n = 0
     for tr in traces:
         if tr is None:
@@ -55,11 +60,17 @@ def breakdown_rows(traces, label: str = "") -> List[Dict[str, Any]]:
         for c in BREAKDOWN_COMPONENTS:
             per[c].append(bd[c])
         hidden.append(bd.get("prefetch_hidden", 0.0))
+        for c in spec:
+            spec[c].append(bd.get(c, 0.0))
     if not n:
         return []
     rows = []
-    for c in BREAKDOWN_COMPONENTS + ("prefetch_hidden",):
-        vals = hidden if c == "prefetch_hidden" else per[c]
+    extras = ("prefetch_hidden",) + (
+        tuple(spec) if any(v for vals in spec.values() for v in vals)
+        else ())
+    for c in BREAKDOWN_COMPONENTS + extras:
+        vals = (hidden if c == "prefetch_hidden"
+                else spec[c] if c in spec else per[c])
         h = Histogram.from_values(vals)
         rows.append({"run": label, "component": c, "n": n,
                      "mean_s": h.mean, "p99_s": h.percentile(0.99),

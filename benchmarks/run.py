@@ -1,9 +1,17 @@
-"""Benchmark harness: one module per paper table/figure.
+"""Benchmark harness: one module per paper table/figure or subsystem.
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+    PYTHONPATH=src python -m benchmarks.run --list
 
 Emits CSVs to results/bench/ and prints them. The roofline report reads
 results/dryrun/ (produced by repro.launch.dryrun --all).
+
+Entry-point adapters: the seed suites take ``run(quick=...)``; the
+subsystem benches grown since then expose either a no-arg ``run()``
+(offload/migration/prefetch/engine) or a gate-style ``main()`` that
+returns an exit status (chaos/obs/spmd/spec). The registry normalizes
+all of them to ``fn(quick) -> raises-or-nonzero-on-failure`` so
+``--only`` and the failure accounting treat every suite uniformly.
 """
 
 from __future__ import annotations
@@ -13,31 +21,76 @@ import sys
 import time
 
 
+def _quickable(fn):
+    return lambda quick: fn(quick=quick)
+
+
+def _noargs(fn):
+    return lambda quick: fn()
+
+
+def _gate(fn):
+    """main()-style benches return a status; nonzero means a violated
+    gate — surface it as a failure instead of swallowing it."""
+    def call(quick):
+        rc = fn()
+        if rc:
+            raise RuntimeError(f"gate failed (exit status {rc})")
+    return call
+
+
+def _suites():
+    from . import (bench_ablation, bench_azure, bench_chaos, bench_e2e,
+                   bench_engine, bench_kernels, bench_migration,
+                   bench_obs, bench_offload, bench_prefetch,
+                   bench_scheduler, bench_spec, bench_spmd,
+                   bench_workloads, roofline_report)
+    return {
+        # seed suites (paper tables/figures)
+        "workloads": _quickable(bench_workloads.run),   # Table 1
+        "e2e": _quickable(bench_e2e.run),               # Figure 3
+        "azure": _quickable(bench_azure.run),           # Figure 4
+        "ablation": _quickable(bench_ablation.run),     # Figure 5
+        "scheduler": _quickable(bench_scheduler.run),   # §4.4
+        "kernels": _quickable(bench_kernels.run),       # Pallas kernels
+        "roofline": _quickable(roofline_report.run),    # deliverable (g)
+        # subsystem benches (DESIGN.md §§ in brackets)
+        "engine": _noargs(bench_engine.run),            # §3/§7 planes
+        "offload": _noargs(bench_offload.run),          # §8 host tier
+        "migration": _noargs(bench_migration.run),      # §9 migration
+        "prefetch": _noargs(bench_prefetch.run),        # §10 prefetch
+        "chaos": _gate(bench_chaos.main),               # §11 faults
+        "obs": _gate(bench_obs.main),                   # §12 telemetry
+        "spmd": _gate(bench_spmd.main),                 # §13 SPMD
+        "spec": _gate(bench_spec.main),                 # §14 speculative
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="reduced sizes (CI)")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--list", action="store_true",
+                    help="print registered suite names and exit")
     args = ap.parse_args()
 
-    from . import (bench_ablation, bench_azure, bench_e2e, bench_kernels,
-                   bench_scheduler, bench_workloads, roofline_report)
-    suites = {
-        "workloads": bench_workloads.run,     # Table 1
-        "e2e": bench_e2e.run,                 # Figure 3
-        "azure": bench_azure.run,             # Figure 4
-        "ablation": bench_ablation.run,       # Figure 5
-        "scheduler": bench_scheduler.run,     # §4.4
-        "kernels": bench_kernels.run,         # Pallas kernels
-        "roofline": roofline_report.run,      # deliverable (g)
-    }
+    suites = _suites()
+    if args.list:
+        for name in suites:
+            print(name)
+        return
+    if args.only and args.only not in suites:
+        print(f"unknown suite {args.only!r}; choose from: "
+              f"{', '.join(suites)}", file=sys.stderr)
+        sys.exit(2)
     failures = 0
     for name, fn in suites.items():
         if args.only and name != args.only:
             continue
         t0 = time.time()
         try:
-            fn(quick=args.quick)
+            fn(args.quick)
             print(f"[{name}] done in {time.time()-t0:.1f}s\n", flush=True)
         except Exception as e:  # noqa: BLE001
             failures += 1

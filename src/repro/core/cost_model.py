@@ -64,6 +64,21 @@ class ModelSpec:
         )
 
 
+def expected_tokens_per_step(acceptance: float, k: int) -> float:
+    """Expected committed tokens per target verify dispatch when a
+    draft model proposes ``k`` tokens accepted i.i.d. at rate
+    ``acceptance``: E = sum_{i=0..k} a^i = (1 - a^(k+1)) / (1 - a),
+    i.e. the accepted prefix plus the free correction token. Bounded in
+    [1, k + 1]; equals 1 at a = 0 (every step still commits the
+    correction) and k + 1 at a = 1."""
+    if k <= 0:
+        return 1.0
+    a = min(max(acceptance, 0.0), 1.0)
+    if a >= 1.0:
+        return float(k + 1)
+    return (1.0 - a ** (k + 1)) / (1.0 - a)
+
+
 @dataclass
 class CostModel:
     """Linear prefill/decode regressions, per (model, hardware) pair.
@@ -92,6 +107,18 @@ class CostModel:
     # the co-resident decode tokens (matches the paper's profiled decode
     # regressions, which are measured under serving batch sizes)
     avg_decode_batch: float = 32.0
+    # ---- speculative decoding (DESIGN.md §14) ----
+    # spec_k = 0 prices plain one-token-per-step decode (byte-identical
+    # to the pre-spec model). spec_k > 0: each target dispatch verifies
+    # K drafted tokens and commits E = (1 - a^(K+1)) / (1 - a) expected
+    # tokens (a = spec_acceptance), while the draft model adds
+    # spec_draft_cost x decode_a per drafted token. E2 and the
+    # simulator consume decode_time/batch_time unchanged — a spec-aware
+    # instance simply carries a cheaper (or, at low acceptance, more
+    # expensive) per-token decode coefficient.
+    spec_k: int = 0
+    spec_acceptance: float = 0.0
+    spec_draft_cost: float = 0.15
 
     def __post_init__(self):
         self._derive()
@@ -126,10 +153,21 @@ class CostModel:
             return 0.0
         return self.prefill_a * missed_tokens + self.prefill_b
 
+    def spec_factor(self) -> float:
+        """Per-committed-token decode cost multiplier under speculative
+        decoding: (1 + K * draft_cost) target+draft work per step,
+        amortized over the expected committed tokens E(a, K). 1.0 when
+        speculation is off (spec_k == 0)."""
+        if self.spec_k <= 0:
+            return 1.0
+        e = expected_tokens_per_step(self.spec_acceptance, self.spec_k)
+        return (1.0 + self.spec_k * self.spec_draft_cost) / e
+
     def decode_time(self, out_tokens: float) -> float:
         if out_tokens <= 0:
             return 0.0
-        return self.decode_a * out_tokens + self.decode_b
+        return self.decode_a * self.spec_factor() * out_tokens \
+            + self.decode_b
 
     def restore_time(self, host_tokens: float) -> float:
         """Seconds to restore ``host_tokens`` of demoted KV host->device
@@ -181,7 +219,11 @@ class CostModel:
             t += (self.model.n_active_params * self.model.bytes_per_param) / bw
         if n_decode > 0:
             ctx = avg_ctx if avg_ctx is not None else self.avg_context
-            t += n_decode * self.model.kv_bytes_per_token * ctx / bw
+            # speculative decode: the same per-iteration KV read now
+            # commits E expected tokens (and pays the draft overhead),
+            # so the per-committed-token read scales by spec_factor
+            t += (n_decode * self.model.kv_bytes_per_token * ctx / bw
+                  * self.spec_factor())
         return t
 
     def with_chips(self, chips: int) -> "CostModel":
@@ -197,7 +239,23 @@ class CostModel:
                          prefill_b=self.prefill_b, decode_b=self.decode_b,
                          restore_b=self.restore_b, migrate_b=self.migrate_b,
                          avg_context=self.avg_context,
-                         avg_decode_batch=self.avg_decode_batch)
+                         avg_decode_batch=self.avg_decode_batch,
+                         spec_k=self.spec_k,
+                         spec_acceptance=self.spec_acceptance,
+                         spec_draft_cost=self.spec_draft_cost)
+
+    def with_speculative(self, k: int, acceptance: float,
+                         draft_cost: float = 0.15) -> "CostModel":
+        """Acceptance-aware decode pricing for a speculative-decoding
+        instance (draft proposes ``k`` tokens/step accepted at rate
+        ``acceptance``; the draft model costs ``draft_cost`` of a
+        target decode step per drafted token). E2's load_cost and the
+        simulator price decode through the returned model so spec-on
+        instances are not mis-priced against spec-off ones."""
+        import dataclasses as _dc
+        return _dc.replace(self, spec_k=max(int(k), 0),
+                           spec_acceptance=min(max(acceptance, 0.0), 1.0),
+                           spec_draft_cost=max(draft_cost, 0.0))
 
     # ---- calibration (paper: offline profiling regression) ------------------
 

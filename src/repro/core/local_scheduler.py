@@ -48,6 +48,14 @@ class LocalSchedulerConfig:
     # bytes host->device OFF the TTFT critical path; admission then
     # aliases the prefetched pages and restores nothing.
     prefetch_budget_tokens: int = 0
+    # Speculative decoding (DESIGN.md §14): extra per-decode-slot token
+    # charge against max_batch_tokens. With a draft model proposing K
+    # tokens per request per step, each decode slot occupies a K+1-token
+    # verify chunk in the fused dispatch instead of a single-token lane,
+    # so batch formation must budget 1 + K tokens for it or the step's
+    # real token count could exceed max_batch_tokens by K x slots.
+    # 0 (default) is the exact pre-spec accounting.
+    spec_verify_tokens: int = 0
 
 
 class AccountingHostTier:
@@ -317,7 +325,9 @@ class LocalScheduler:
             if len(batch) >= cfg.max_batch_requests or budget <= 0:
                 break
             batch.items.append(BatchItem(r, "decode", 1))
-            budget -= 1
+            # a speculative decode slot really spends 1 + K tokens of
+            # the fused dispatch (its verify chunk); plain decode: 1
+            budget -= 1 + cfg.spec_verify_tokens
 
         # 2. in-flight chunked prefills continue first (no re-admission cost)
         for r in list(self.prefilling):

@@ -373,7 +373,15 @@ def forward_mixed_paged(params, cfg, xc, xd, pages, chunk_table,
     ``serve_policy``; GSPMD then partitions the page gathers/scatters
     and inserts the attention/MLP collectives. Nothing here may assume
     a device count — page-table indexing is position-based, so it is
-    valid under head-, slot-, or page-sharded pools alike."""
+    valid under head-, slot-, or page-sharded pools alike.
+
+    Speculative contract (DESIGN.md §14): a chunk lane may be a VERIFY
+    lane — K+1 drafted tokens mid-decode rather than a prefill chunk.
+    Nothing here distinguishes the two: the lane scatters its K+1 KV
+    entries positionally (overwriting any rejected junk a previous
+    speculative step left there) and the causal extend mask hides
+    positions past ``chunk_start + chunk_len``, which is exactly why
+    rejected target-side tails need no trim."""
     plan = layer_plan(cfg)
     new = {pj: dict(groups) for pj, groups in pages.items()}
     for g in range(cfg.n_groups):

@@ -68,6 +68,18 @@ class ModelAPI:
     # states, not O(tokens).
     mixed_paged: Optional[Callable[[Pytree, Pytree, Dict],
                                    Tuple[jax.Array, Pytree]]] = None
+    # speculative-verification variant of ``mixed_paged`` (same batch
+    # dict, same KV writes): additionally returns ``chunk_pred``
+    # [Lc, C] — the per-POSITION greedy prediction for every chunk
+    # token, so a verify lane carrying [next, d1..dK] reads the target
+    # preds p0..pK it needs to accept/reject the drafts. The LM head
+    # runs over O(Lc * C) chunk positions here (vs O(lanes) in
+    # mixed_paged), which is exactly the verification work; the engine
+    # only jits this entry when speculation is enabled.
+    #   -> (nxt [Lc+Ld], chunk_pred [Lc, C], pages)
+    mixed_paged_spec: Optional[Callable[[Pytree, Pytree, Dict],
+                                        Tuple[jax.Array, jax.Array,
+                                              Pytree]]] = None
 
     def init(self, key) -> Pytree:
         return init_params(self.specs, key)
@@ -189,6 +201,27 @@ def _build_decoder(cfg: ModelConfig) -> ModelAPI:
         nxt = top1_logits(h, L.head_matrix(params["embed"], cfg))
         return nxt, pages
 
+    def mixed_paged_spec(params, pages, batch):
+        xc = L.embed_tokens(params["embed"], cfg, batch["chunk_tokens"])
+        xd = L.embed_tokens(params["embed"], cfg, batch["dec_tokens"])
+        hc, hd, pages = T.forward_mixed_paged(
+            params["stack"], cfg, xc, xd, pages,
+            batch["chunk_page_table"], batch["chunk_start"],
+            batch["chunk_len"], batch["dec_page_table"], batch["dec_pos"])
+        w = L.head_matrix(params["embed"], cfg)
+        last = jnp.maximum(batch["chunk_len"] - 1, 0)
+        h = jnp.concatenate(
+            [hc[jnp.arange(hc.shape[0]), last], hd], axis=0)
+        h = rms_norm(h, params["embed"]["final_norm"], cfg.norm_eps)
+        nxt = top1_logits(h, w)
+        # verification head: greedy prediction at EVERY chunk position
+        # (p_t after chunk token t) — same norm/head as the lane preds,
+        # so chunk_pred[i, last_i] == nxt[i] bit-for-bit
+        hcn = rms_norm(hc, params["embed"]["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("lcd,dv->lcv", hcn, w).astype(jnp.float32)
+        chunk_pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return nxt, chunk_pred, pages
+
     paged = T.paged_servable(cfg)
     return ModelAPI(cfg, specs, loss, prefill, decode,
                     lambda b, s: T.cache_specs(cfg, b, s), extend,
@@ -197,7 +230,8 @@ def _build_decoder(cfg: ModelConfig) -> ModelAPI:
                     paged_cache_specs=(
                         (lambda n, ps: T.paged_cache_specs(cfg, n, ps))
                         if paged else None),
-                    mixed_paged=mixed_paged if paged else None)
+                    mixed_paged=mixed_paged if paged else None,
+                    mixed_paged_spec=mixed_paged_spec if paged else None)
 
 
 # ---------------------------------------------------------------------

@@ -41,7 +41,13 @@ class ModelWorkerBatch:
     Mixed steps fill both halves; pure-decode steps leave the chunk
     half at Lc=0 and use the decode bucket entry instead. All arrays
     are padded to their power-of-two buckets already — the worker
-    batch IS the trace shape."""
+    batch IS the trace shape.
+
+    Speculative steps (DESIGN.md §14) reuse the chunk half verbatim:
+    a verify lane is packed as a K+1-token "chunk" ([pending, d1..dK]
+    at chunk_start = the request's context position) after the real
+    prefill chunks — no new fields, the draft/verify plane rides the
+    same lowering."""
     # prefill-chunk half: [Lc, C] tokens, per-lane start/len, [Lc, P]
     # page-table rows (padding lanes carry all-scratch rows)
     chunk_tokens: np.ndarray

@@ -72,6 +72,15 @@ class ClusterRuntime:
                           and telemetry.enabled else None)
         base = engine_cfg or EngineConfig()
         base_cm = cost_model or cost_model_for("smollm-360m")
+        if base.speculative is not None and base_cm.spec_k == 0:
+            # acceptance-aware decode pricing (§14): E2's load_cost and
+            # add_work must see the expected-tokens-per-step discount of
+            # spec-on instances or they are mis-priced against spec-off
+            # ones. Callers passing an explicit spec-priced CostModel
+            # keep it (spec_k != 0 already).
+            sp = base.speculative
+            base_cm = base_cm.with_speculative(sp.k, sp.acceptance,
+                                               sp.draft_cost)
         gs_cfg = scheduler_cfg or GlobalSchedulerConfig(
             capacity_tokens=base.capacity_tokens,
             host_capacity_tokens=base.host_capacity_tokens)
@@ -529,6 +538,17 @@ class ClusterRuntime:
                 assert req_tables <= live_reqs, (
                     f"instance {i}: leaked request tables "
                     f"{req_tables - live_reqs}")
+                if eng.draft is not None:
+                    # draft plane (§14): same refcount/free-list checks,
+                    # and every ("dr", rid) table must belong to a live
+                    # request — finish/degrade paths release eagerly
+                    eng.draft.pool.check_invariants()
+                    dr_tables = {k for k in eng.draft.pool.tables
+                                 if isinstance(k, tuple) and k[0] == "dr"}
+                    live_dr = {("dr", rid) for rid in eng.live}
+                    assert dr_tables <= live_dr, (
+                        f"instance {i}: leaked draft tables "
+                        f"{dr_tables - live_dr}")
             assert eng.scheduler.used_tokens >= 0, (
                 f"instance {i}: negative scheduler token accounting")
             if eng.host_store is not None:

@@ -71,6 +71,7 @@ from .batch import ForwardBatch, ModelWorkerBatch
 from .faults import CircuitBreaker, InstanceCrashed
 from .kv_cache import PagedKVPool
 from .kv_offload import HostKVStore, PagedHostTier
+from .speculative import DraftWorker, SpeculativeConfig
 from .telemetry import StatsDict, frac_of
 
 Pytree = Any
@@ -121,6 +122,14 @@ class EngineConfig:
     # pooled device KV capacity is capacity_tokens * chips (each chip
     # holds a 1/chips slice of every page, so aggregate HBM scales).
     chips_per_instance: int = 1
+    # Fused speculative decoding (DESIGN.md §14). None (default)
+    # disables it — the plane is byte-identical to the pre-spec engine.
+    # A SpeculativeConfig attaches a DraftWorker (the draft model's own
+    # paged plane) and turns every decode slot with >= 2 tokens of
+    # headroom into a K+1-token verify chunk inside the SAME single
+    # donated mixed dispatch, committing up to K+1 tokens per step with
+    # greedy-exact outputs. Requires the fused paged plane.
+    speculative: Optional[SpeculativeConfig] = None
 
     @property
     def device_capacity_tokens(self) -> int:
@@ -174,6 +183,9 @@ class Engine:
                 and econf.host_capacity_tokens <= 0:
             raise ValueError("speculative restore prefetches HOST-tier "
                              "spans: set host_capacity_tokens > 0")
+        if econf.speculative is not None and not self.fused:
+            raise ValueError("speculative decoding rides the fused mixed "
+                             "dispatch: it requires the paged fused plane")
         # SPMD submesh (DESIGN.md §13): chips > 1 turns this engine into
         # one tensor-parallel instance. The mesh is built BEFORE the
         # scheduler so token accounting sees the pooled (aggregate)
@@ -199,7 +211,10 @@ class Engine:
                 priority_groups=econf.priority_groups,
                 fcfs=econf.fcfs,
                 host_capacity_tokens=econf.host_capacity_tokens,
-                prefetch_budget_tokens=econf.prefetch_budget_tokens),
+                prefetch_budget_tokens=econf.prefetch_budget_tokens,
+                spec_verify_tokens=(econf.speculative.k
+                                    if econf.speculative is not None
+                                    else 0)),
             on_evict=self._on_evict)
         # External eviction notification — protocol v2 only (DESIGN.md
         # §9): called as cb(instance_id, evicted_spans, demoted=[...],
@@ -234,13 +249,23 @@ class Engine:
              # dispatch + cross-shard result assembly. Accumulated ONLY
              # when a mesh exists — single-chip engines stay at 0.0 and
              # byte-identical to the pre-SPMD plane.
-             "shard_dma_seconds": 0.0, "collective_seconds": 0.0},
+             "shard_dma_seconds": 0.0, "collective_seconds": 0.0,
+             # speculative decoding (§14): target-side verify outcomes.
+             # spec_draft_dispatches counts the DRAFT model's fused
+             # propose dispatches — they never touch model_dispatches,
+             # which stays the target-dispatch-per-iteration invariant.
+             "spec_proposed_tokens": 0, "spec_accepted_tokens": 0,
+             "spec_rejected_tokens": 0, "spec_verify_lanes": 0,
+             "spec_draft_dispatches": 0, "spec_degraded": 0},
             derived={"demote_overlap_frac":
                      frac_of("demote_batches_overlapped",
                              "demote_batches"),
                      "prefetch_overlap_frac":
                      frac_of("prefetch_batches_overlapped",
-                             "prefetch_batches")})
+                             "prefetch_batches"),
+                     "spec_acceptance_frac":
+                     frac_of("spec_accepted_tokens",
+                             "spec_proposed_tokens")})
         self.telemetry = None
         self.failed = False
         # fault injection (DESIGN.md §11): None on fault-free runs —
@@ -249,6 +274,9 @@ class Engine:
         self.faults = None
         self._cb: Optional[CircuitBreaker] = None
         self.host_store: Optional[HostKVStore] = None
+        # draft plane handle (§14): stays None on non-speculative runs
+        # AND on the dense plane — every spec hook checks `is not None`
+        self.draft: Optional[DraftWorker] = None
         # restores staged by admissions, flushed once per step
         self._pending_restore: List[Tuple[np.ndarray, np.ndarray, Any]] = []
         # speculative restores in flight this step: (record,
@@ -315,6 +343,24 @@ class Engine:
                                         donate_argnums=(0,), **jit_kw)
         self._mixed_paged_fn = jax.jit(self._mixed_paged_impl,
                                        donate_argnums=(0,), **jit_kw)
+        # speculative decoding (§14): the draft model's own paged plane
+        # plus the target's verify variant of the mixed dispatch (same
+        # KV writes, + per-position chunk predictions). fail() rebuilds
+        # both with the pool, exactly like the target plane.
+        if self.econf.speculative is not None:
+            self.draft = DraftWorker(self.econf.speculative, self.econf,
+                                     mesh=self.mesh,
+                                     rep_sharding=self._rep_sharding)
+            spec_jit_kw: Dict[str, Any] = {}
+            if self.mesh is not None:
+                spec_jit_kw = {"out_shardings": (self._rep_sharding,
+                                                 self._rep_sharding,
+                                                 self._pool_shardings)}
+            self._mixed_spec_fn = jax.jit(self._mixed_spec_impl,
+                                          donate_argnums=(0,),
+                                          **spec_jit_kw)
+        else:
+            self.draft = None
         self._copy_page_fn = jax.jit(
             self._copy_page_impl, donate_argnums=(0,),
             **({"out_shardings": self._pool_shardings}
@@ -377,6 +423,21 @@ class Engine:
                                      "dec_tokens": dec_tokens,
                                      "dec_pos": dec_pos,
                                      "dec_page_table": dec_pt})
+
+    def _mixed_spec_impl(self, pages, chunk_tokens, chunk_start, chunk_len,
+                         chunk_pt, dec_tokens, dec_pos, dec_pt):
+        # identical batch/KV semantics to _mixed_paged_impl; also
+        # returns chunk_pred [Lc, C] — the target's greedy prediction at
+        # every chunk position, which is exactly the verification signal
+        # for verify lanes carrying [pending, d1..dK]
+        return self.api.mixed_paged_spec(self.params, pages,
+                                         {"chunk_tokens": chunk_tokens,
+                                          "chunk_start": chunk_start,
+                                          "chunk_len": chunk_len,
+                                          "chunk_page_table": chunk_pt,
+                                          "dec_tokens": dec_tokens,
+                                          "dec_pos": dec_pos,
+                                          "dec_page_table": dec_pt})
 
     def _copy_page_impl(self, pages, src, dst):
         # pool leaves are [n_pages, PS, KH, D] (per layer; see
@@ -1114,7 +1175,10 @@ class Engine:
         if batch.items:
             has_prefill = any(it.chunk_tokens > 0
                               for it in batch.prefill_items())
-            if self.fused and has_prefill:
+            # speculative engines route decode-only iterations through
+            # _run_mixed too: their decode slots become verify chunks,
+            # still ONE target dispatch per iteration either way
+            if self.fused and (has_prefill or self.draft is not None):
                 newly_prefilled = self._run_mixed(batch)
             else:
                 # -- prefill items (each runs alone: variable chunk/position)
@@ -1135,9 +1199,12 @@ class Engine:
                 if item.phase == "decode" and r.output_tokens:
                     r.output_tokens[-1] = self.live[r.request_id]["next"]
             for r in finished:
-                self.live.pop(r.request_id, None)
+                lv = self.live.pop(r.request_id, None)
                 self.pool.release(("req", r.request_id) if self.paged
                                   else r.request_id)
+                if self.draft is not None:
+                    self.draft.release(r.request_id)
+                    self._observe_spec(r, lv, now)
         # land this step's speculative restores (the publish runs after
         # _store_prefix so a same-step split cancels cleanly first),
         # then any demote DMA — both gathers/scatters were dispatched
@@ -1226,10 +1293,48 @@ class Engine:
         dec_items = batch.decode_items()
         if not chunk_items and not dec_items:
             return []
-        Lc = _bucket(len(chunk_items))
-        Cb = _bucket(max((it.chunk_tokens for it in chunk_items),
-                         default=1))
-        Ld = _bucket(len(dec_items))
+        # --- speculative split (§14): decode slots with >= 2 tokens of
+        # output headroom become K+1-token verify chunks; the rest (and
+        # any lane the draft pool couldn't stage) stay plain decode ---
+        spec_lanes: List[Tuple[Request, int, List[int], int]] = []
+        plain_dec = dec_items
+        if self.draft is not None and dec_items:
+            want: List[Tuple[Request, int]] = []
+            plain_dec = []
+            for it in dec_items:
+                r = it.request
+                # committing a + 1 <= k_eff + 1 tokens this step must
+                # never overshoot max_new_tokens (output_tokens already
+                # holds the pending token)
+                k_eff = min(self.draft.k,
+                            r.max_new_tokens - len(r.output_tokens) - 1)
+                if k_eff > 0:
+                    want.append((r, k_eff))
+                else:
+                    plain_dec.append(it)
+            props = self.draft.propose(want) if want else {}
+            for r, k_eff in want:
+                d = props.get(r.request_id)
+                if d is None:       # draft pool squeeze: degrade
+                    plain_dec.append(next(
+                        it for it in dec_items if it.request is r))
+                else:
+                    pos = r.prompt_len + len(r.output_tokens) - 1
+                    spec_lanes.append((r, k_eff, d, pos))
+            self.stats["spec_draft_dispatches"] = self.draft.dispatches
+            self.stats["spec_degraded"] = self.draft.degraded
+            if not chunk_items and not spec_lanes:
+                # everything degraded / out of headroom: keep the plain
+                # bucketed pure-decode dispatch (still one per step)
+                if plain_dec:
+                    self._decode_batch_paged(
+                        [it.request for it in plain_dec])
+                return []
+        n_pref = len(chunk_items)
+        Lc = _bucket(n_pref + len(spec_lanes))
+        Cb = _bucket(max([it.chunk_tokens for it in chunk_items]
+                         + [k + 1 for _, k, _, _ in spec_lanes] + [1]))
+        Ld = _bucket(len(plain_dec))
         ctoks = np.zeros((Lc, Cb), np.int32)
         cstart = np.zeros(Lc, np.int32)
         clen = np.zeros(Lc, np.int32)
@@ -1237,17 +1342,27 @@ class Engine:
             r, s, n = it.request, it.request.prefill_done, it.chunk_tokens
             ctoks[i, :n] = r.tokens[s:s + n]
             cstart[i], clen[i] = s, n
+        # verify lanes ride the SAME chunk half: [pending, d1..dK] at
+        # the request's current context position against its own pages
+        # (pre-reserved at admission, so no append — rejected target KV
+        # is overwritten positionally by the next step's chunk)
+        for v, (r, k_eff, d, pos) in enumerate(spec_lanes):
+            i = n_pref + v
+            ctoks[i, 0] = self.live[r.request_id]["next"]
+            ctoks[i, 1:k_eff + 1] = d
+            cstart[i], clen[i] = pos, k_eff + 1
         cpt = self._page_table_rows(
-            [("req", it.request.request_id) for it in chunk_items],
+            [("req", it.request.request_id) for it in chunk_items]
+            + [("req", r.request_id) for r, _, _, _ in spec_lanes],
             n_rows=Lc)
         dtoks = np.zeros(Ld, np.int32)
         dpos = np.zeros(Ld, np.int32)
-        for i, it in enumerate(dec_items):
+        for i, it in enumerate(plain_dec):
             r = it.request
             dtoks[i] = self.live[r.request_id]["next"]
             dpos[i] = r.prompt_len + len(r.output_tokens) - 1
         dpt = self._page_table_rows(
-            [("req", it.request.request_id) for it in dec_items],
+            [("req", it.request.request_id) for it in plain_dec],
             n_rows=Ld)
         # ScheduleBatch -> ModelWorkerBatch -> ForwardBatch (§13): the
         # host-side arrays above lower in ONE device transfer, then the
@@ -1255,15 +1370,22 @@ class Engine:
         # state and page tables never live on device
         wb = ModelWorkerBatch(ctoks, cstart, clen, cpt, dtoks, dpos, dpt)
         fb = self._lower_batch(wb)
-        nxt, self.pages = self._mixed_paged_fn(
-            self.pages, fb.chunk_tokens, fb.chunk_start, fb.chunk_len,
-            fb.chunk_page_table, fb.dec_tokens, fb.dec_pos,
-            fb.dec_page_table)
+        if spec_lanes:
+            nxt, cpred, self.pages = self._mixed_spec_fn(
+                self.pages, fb.chunk_tokens, fb.chunk_start, fb.chunk_len,
+                fb.chunk_page_table, fb.dec_tokens, fb.dec_pos,
+                fb.dec_page_table)
+            cpred = np.asarray(cpred)
+        else:
+            nxt, self.pages = self._mixed_paged_fn(
+                self.pages, fb.chunk_tokens, fb.chunk_start, fb.chunk_len,
+                fb.chunk_page_table, fb.dec_tokens, fb.dec_pos,
+                fb.dec_page_table)
         nxt = self._fetch_result(nxt)
         self.stats["model_dispatches"] += 1
         self.stats["fused_iterations"] += 1
         self.stats["fused_padded_tokens"] += (
-            Lc * Cb + Ld - int(clen.sum()) - len(dec_items))
+            Lc * Cb + Ld - int(clen.sum()) - len(plain_dec))
         newly_prefilled: List[Request] = []
         for i, it in enumerate(chunk_items):
             r = it.request
@@ -1274,13 +1396,52 @@ class Engine:
                 self.live[r.request_id]["next"] = tok
                 r.output_tokens.append(tok)
                 newly_prefilled.append(r)
-        for i, it in enumerate(dec_items):
+        # --- verification (§14): chunk_pred[lane, j] is the target's
+        # greedy prediction AFTER chunk token j, i.e. p_j. Accept d_j
+        # iff d_j == p_{j-1}; with `a` leading accepts the step commits
+        # d1..da + the target's correction p_a (= the plain path's next
+        # token when a = 0 — greedy spec is token-exact by induction).
+        for v, (r, k_eff, d, pos) in enumerate(spec_lanes):
+            preds = cpred[n_pref + v]
+            a = 0
+            while a < k_eff and d[a] == int(preds[a]):
+                a += 1
+            # accepted drafts land now; complete_iteration then appends
+            # its usual placeholder (the a+1-th committed token) which
+            # step()'s overwrite loop sets to the correction p_a
+            r.output_tokens.extend(d[:a])
+            lv = self.live[r.request_id]
+            lv["next"] = int(preds[a])
+            lv["spec_prop"] = lv.get("spec_prop", 0) + k_eff
+            lv["spec_acc"] = lv.get("spec_acc", 0) + a
+            self.draft.commit(r.request_id, pos, a)
+            self.stats["spec_proposed_tokens"] += k_eff
+            self.stats["spec_accepted_tokens"] += a
+            self.stats["spec_rejected_tokens"] += k_eff - a
+        for i, it in enumerate(plain_dec):
             r = it.request
             self.live[r.request_id]["next"] = int(nxt[Lc + i])
         if dec_items:
             self.stats["decode_steps"] += len(dec_items)
             self.stats["decode_batches"] += 1
+            self.stats["spec_verify_lanes"] += len(spec_lanes)
         return newly_prefilled
+
+    def _observe_spec(self, r: Request, lv: Optional[Dict[str, Any]],
+                      now: float) -> None:
+        """Terminal speculative observation for one finished request:
+        the per-request acceptance-rate histogram + a `spec` trace point
+        (surfaced by RequestTrace.breakdown as informational keys)."""
+        if not lv or not lv.get("spec_prop"):
+            return
+        prop, acc = lv["spec_prop"], lv["spec_acc"]
+        if self.telemetry is not None:
+            self.telemetry.registry.histogram(
+                "engine_spec_acceptance",
+                buckets=(0.1, 0.25, 0.5, 0.75, 0.9, 1.0),
+                instance=self.econf.instance_id).observe(acc / prop)
+        if r.trace is not None:
+            r.trace.point("spec", now, proposed=prop, accepted=acc)
 
     def _decode_batch_paged(self, dec: List[Request]) -> None:
         """Slot/bucket decode (DESIGN.md §3): live requests fill the

@@ -70,6 +70,16 @@ class SimConfig:
     # un-prefetched remainder, the same physics the engine's second
     # DMA stream realizes with real bytes.
     prefetch_budget_tokens: int = 0
+    # Speculative decoding pricing (DESIGN.md §14; accounting-only —
+    # the simulator still advances one committed token per decode slot
+    # per iteration, but with spec_k > 0 every decode token is priced
+    # at CostModel.spec_factor() x decode_a: the draft-propose overhead
+    # divided by the expected (1 - a^(K+1)) / (1 - a) committed tokens
+    # per target dispatch, matching the engine's fused draft/verify
+    # plane and E2's placement pricing).
+    spec_k: int = 0
+    spec_acceptance: float = 0.8
+    spec_draft_cost: float = 0.15
     speed_factors: Optional[Dict[int, float]] = None  # stragglers
     # ---- fault model (DESIGN.md §11; None = fault-free, zero-cost) ----
     faults: Optional[FaultConfig] = None
@@ -120,6 +130,9 @@ class Simulator:
         self.telemetry = (telemetry if telemetry is not None
                           and telemetry.enabled else None)
         self.cm = cost_model_for(cfg.model, cfg.chips_per_instance)
+        if cfg.spec_k > 0:
+            self.cm = self.cm.with_speculative(
+                cfg.spec_k, cfg.spec_acceptance, cfg.spec_draft_cost)
         gs_cfg = GlobalSchedulerConfig(
             window=cfg.window, th_bal=cfg.th_bal,
             imbal_ratio=cfg.imbal_ratio,

@@ -1,0 +1,244 @@
+"""Draft-model speculative decoding for the fused paged plane
+(DESIGN.md §14).
+
+The engine's fused dispatch already verifies K drafted tokens for free:
+a decoding request whose next K tokens are guessed enters the step as a
+short extend "chunk" of K+1 tokens ([pending, d1..dK] at its current
+context position, against its own aliased pages), sharing the single
+donated ``forward_mixed_paged`` dispatch with ordinary prefill chunks
+and non-speculative decode slots. This module owns the OTHER half of
+the bargain — producing the guesses:
+
+  * ``SpeculativeConfig`` — the knob bundle an ``EngineConfig`` carries
+    (draft model config/params, K, pricing priors for the CostModel).
+  * ``DraftWorker`` — a miniature paged serving plane for the draft
+    model: its own ``PagedKVPool`` (``("dr", request_id)`` tables, one
+    per decoding request, never forked — drafts share no prefixes, so
+    append/trim need no CoW), its own page pytree, and ONE fused jit
+    that catches the draft KV up to the target sequence (the chunk half
+    of the draft's ``mixed_paged``) and then rolls K-1 bucketed paged
+    decode steps — all inside a single dispatch, so a speculative step
+    costs exactly one draft dispatch + one target dispatch.
+
+Accept/trim protocol (greedy, token-exact vs the plain fused plane):
+with ``a`` leading draft tokens accepted by the target, the request
+commits d1..da plus the target's correction p_a (= the plain path's
+next token when a = 0), and the draft table trims to ``pos + 1 + a``
+valid tokens — rejected draft KV is freed through the pool's normal
+``trim`` (refcounts; a == K is a no-op clamp since dK was proposed but
+never fed back). The engine overwrites rejected TARGET KV positionally
+on the next step, so the target pool needs no trim at all.
+
+SPMD (§13): on a multi-chip engine the draft params shard by the same
+``serve_policy`` and the draft pool by the same ``pool_shardings`` as
+the target's, and the propose jit pins its out-shardings so donation
+keeps aliasing. ``speculative=None`` engines never import-time-touch
+any of this — the plane stays byte-identical.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..launch import sharding as shard_lib
+from ..models import zoo, transformer as T
+from .kv_cache import PagedKVPool
+
+Pytree = Any
+
+
+def _bucket(n: int) -> int:
+    return 1 << max(n - 1, 0).bit_length()
+
+
+@dataclass
+class SpeculativeConfig:
+    """Speculation knobs carried by ``EngineConfig.speculative``.
+
+    ``draft_params`` defaults to a seeded random init of ``draft_cfg``
+    (useful for plumbing tests; real deployments pass trained weights).
+    ``acceptance``/``draft_cost`` are PRICING PRIORS for the CostModel
+    (E2 placement + simulator), not runtime behavior — the engine
+    measures the realized acceptance rate into its stats/telemetry."""
+    draft_cfg: ModelConfig
+    k: int = 4
+    draft_params: Optional[Pytree] = None
+    draft_seed: int = 0
+    # priors consumed by CostModel.with_speculative at cluster/sim wiring
+    acceptance: float = 0.8
+    draft_cost: float = 0.15
+
+
+class DraftWorker:
+    """The draft model's private paged serving plane.
+
+    One per speculative engine; rebuilt wholesale by ``Engine.fail()``
+    (fresh pool, fresh tables) exactly like the target plane. Tables are
+    keyed ``("dr", request_id)`` and live from a request's first propose
+    to its finish; a pool squeeze degrades the lane to plain decode for
+    the step (propose returns no drafts for it) instead of evicting —
+    the draft tier has no host tier and no cached nodes to reclaim."""
+
+    def __init__(self, spec: SpeculativeConfig, econf,
+                 mesh=None, rep_sharding=None):
+        self.spec = spec
+        self.k = max(int(spec.k), 1)
+        # same normalization the engine applies to the target config
+        self.cfg = dataclasses.replace(spec.draft_cfg, sliding_window=0)
+        self.api = zoo.build(self.cfg)
+        if self.api.mixed_paged is None:
+            raise ValueError(
+                f"draft model {self.cfg.name} is not paged-servable — "
+                "speculative decoding needs a paged draft plane")
+        self.params = (spec.draft_params if spec.draft_params is not None
+                       else self.api.init(
+                           jax.random.PRNGKey(spec.draft_seed)))
+        ps = econf.page_size
+        # mirror the target pool's sizing: the draft working set is
+        # bounded by the same live sequences (prompt + max_new each),
+        # minus any prefix sharing the target enjoys — the degrade path
+        # below absorbs the (rare) shortfall instead of evicting
+        n_pages = (econf.device_capacity_tokens // ps
+                   + 2 * econf.max_batch_requests + 1)
+        self.pool = PagedKVPool(n_pages, ps)
+        self._scratch_page = self.pool.reserve_page()   # page 0, pinned
+        assert self._scratch_page == 0
+        self._pages_per_req = -(-econf.max_context // ps)
+        specs = self.api.paged_cache_specs(n_pages, ps)
+        self.mesh = mesh
+        self._rep_sharding = rep_sharding
+        jit_kw: Dict[str, Any] = {}
+        if mesh is not None:
+            policy = shard_lib.serve_policy(mesh, self.api.n_bytes)
+            self.params = jax.device_put(
+                self.params,
+                shard_lib.param_shardings(self.api.specs, mesh, policy))
+            self._pool_shardings = shard_lib.pool_shardings(specs, mesh)
+            jit_kw = {"out_shardings": (rep_sharding,
+                                        self._pool_shardings)}
+            self.pages = jax.device_put(
+                jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), specs),
+                self._pool_shardings)
+        else:
+            self.pages = jax.tree.map(
+                lambda s: jnp.zeros(s.shape, s.dtype), specs)
+        self._propose_fn = jax.jit(self._propose_impl,
+                                   donate_argnums=(0,), **jit_kw)
+        self.dispatches = 0
+        self.degraded = 0
+
+    # ---- the fused propose dispatch ------------------------------------
+
+    def _propose_impl(self, pages, ctoks, cstart, clen, cpt, kvec):
+        """Catch-up + K-token rollout in ONE traced computation.
+
+        Chunk half: per-lane tokens [dlen, pos] of the TRUE sequence
+        (everything the target has committed that the draft KV lacks,
+        including the pending next token) — its last-position prediction
+        is d1. Then K-1 paged decode steps feed d_j at position
+        base + j - 1 to produce d_{j+1}. Lanes whose per-request budget
+        ``kvec`` is exhausted (k_i <= j) are masked: zeroed page-table
+        row / pos / token route their reads AND writes to the reserved
+        scratch page 0, so short lanes never write junk into real draft
+        pages. Returns drafts stacked [Lc, K] (masked entries are 0 and
+        ignored host-side) + the donated pool."""
+        Lc = ctoks.shape[0]
+        dec_t = jnp.zeros((1,), jnp.int32)
+        dec_p = jnp.zeros((1,), jnp.int32)
+        dec_pt = jnp.zeros((1, cpt.shape[1]), jnp.int32)
+        nxt, pages = self.api.mixed_paged(
+            self.params, pages,
+            {"chunk_tokens": ctoks, "chunk_start": cstart,
+             "chunk_len": clen, "chunk_page_table": cpt,
+             "dec_tokens": dec_t, "dec_pos": dec_p,
+             "dec_page_table": dec_pt})
+        cur = nxt[:Lc]
+        base = cstart + clen           # position d1 occupies when fed
+        drafts = [jnp.where(kvec > 0, cur, 0)]
+        for j in range(1, self.k):
+            live = kvec > j            # lanes still needing d_{j+1}
+            toks = jnp.where(live, cur, 0)
+            pos = jnp.where(live, base + (j - 1), 0)
+            pt = jnp.where(live[:, None], cpt, 0)
+            cur, pages = self.api.decode_paged(
+                self.params, pages,
+                {"tokens": toks, "pos": pos, "page_table": pt})
+            drafts.append(jnp.where(live, cur, 0))
+        return jnp.stack(drafts, axis=1), pages
+
+    # ---- host-side lifecycle -------------------------------------------
+
+    def propose(self, lanes: Sequence[Tuple[Any, int]]
+                ) -> Dict[int, List[int]]:
+        """Draft k_eff tokens for each (request, k_eff) lane.
+
+        Returns {request_id: [d1..d_{k_eff}]}; a lane missing from the
+        result degraded (draft pool squeeze) and must run as a plain
+        decode slot this step. Bookkeeping per lane: the table is
+        appended to exactly ``pos + k_eff`` tokens BEFORE the dispatch
+        (catch-up chunk ends at pos, then k_eff - 1 decode feeds), so
+        ``num_tokens`` always equals the tokens actually written."""
+        staged = []
+        for r, k_eff in lanes:
+            rid = ("dr", r.request_id)
+            full = list(r.tokens) + list(r.output_tokens)
+            pos = len(full) - 1        # context position of the pending
+            t = self.pool.tables.get(rid)     # token (output_tokens[-1])
+            if t is None:
+                t = self.pool.create(rid)
+            dlen = t.num_tokens
+            try:
+                self.pool.append(rid, pos + k_eff - dlen)
+            except MemoryError:
+                self.pool.release(rid)
+                self.degraded += 1
+                continue
+            staged.append((r, k_eff, full, pos, dlen))
+        if not staged:
+            return {}
+        Lc = _bucket(len(staged))
+        Cb = _bucket(max(pos + 1 - dlen
+                         for _, _, _, pos, dlen in staged))
+        ctoks = np.zeros((Lc, Cb), np.int32)
+        cstart = np.zeros(Lc, np.int32)
+        clen = np.zeros(Lc, np.int32)
+        kvec = np.zeros(Lc, np.int32)
+        cpt = np.zeros((Lc, self._pages_per_req), np.int32)
+        for i, (r, k_eff, full, pos, dlen) in enumerate(staged):
+            gap = pos + 1 - dlen
+            ctoks[i, :gap] = full[dlen:pos + 1]
+            cstart[i], clen[i], kvec[i] = dlen, gap, k_eff
+            pages = self.pool.tables[("dr", r.request_id)].pages
+            cpt[i, :len(pages)] = pages
+        arrs = (ctoks, cstart, clen, cpt, kvec)
+        if self.mesh is not None:
+            arrs = jax.device_put(arrs,
+                                  (self._rep_sharding,) * len(arrs))
+        else:
+            arrs = tuple(jnp.asarray(a) for a in arrs)
+        drafts, self.pages = self._propose_fn(self.pages, *arrs)
+        drafts = np.asarray(drafts)
+        self.dispatches += 1
+        return {r.request_id: [int(x) for x in drafts[i, :k_eff]]
+                for i, (r, k_eff, _, _, _) in enumerate(staged)}
+
+    def commit(self, request_id: int, pos: int, accepted: int) -> None:
+        """Trim the draft table to the verified prefix: positions
+        [0, pos + accepted] hold committed tokens (catch-up through the
+        pending token at ``pos``, then d1..d_accepted); everything past
+        that is rejected junk and its pages free through the pool's
+        refcounted trim. ``accepted == k_eff`` clamps without freeing
+        (dK was proposed but never fed into the draft KV)."""
+        rid = ("dr", request_id)
+        if rid in self.pool.tables:
+            self.pool.trim(rid, pos + 1 + accepted)
+
+    def release(self, request_id: int) -> None:
+        self.pool.release(("dr", request_id))

@@ -522,6 +522,11 @@ class RequestTrace:
         bd["prefetch_hidden"] = self._charge("prefetch_claim")
         bd["prefetch_hidden_tokens"] = self._charge("prefetch_claim",
                                                     "tokens")
+        # speculative decoding (§14): informational, NOT summed into the
+        # timeline components — `decode` already contains the wall time;
+        # these say how many draft tokens rode it and how many stuck
+        bd["spec_proposed_tokens"] = self._charge("spec", "proposed")
+        bd["spec_accepted_tokens"] = self._charge("spec", "accepted")
         return bd
 
     def to_dict(self) -> Dict[str, Any]:

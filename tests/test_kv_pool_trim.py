@@ -1,0 +1,227 @@
+"""``PagedKVPool.trim`` under adversarial aliasing (DESIGN.md §14).
+
+The speculative plane leans on ``trim`` every step (rejected draft
+tails), and the radix tree has always used it for partial node
+eviction — these regressions pin its refcount semantics when the
+trimmed table ALIASES other tables: CoW partial-tail boundaries,
+refcounted ``("node", key)`` prefix shares, and trims racing
+in-flight prefetch/demote style mutations of the peer table.
+"""
+
+import numpy as np
+import pytest
+
+from repro.serving.kv_cache import PagedKVPool
+
+PS = 8
+
+
+def _pool(n=32):
+    return PagedKVPool(n, PS)
+
+
+# ---------------------------------------------------------------------------
+# clamp / boundary basics the spec plane depends on
+# ---------------------------------------------------------------------------
+
+def test_trim_beyond_length_is_noop_clamp():
+    """accepted == k_eff in the spec plane trims to MORE tokens than the
+    table holds (dK was never fed back): must free nothing and keep
+    num_tokens unchanged."""
+    p = _pool()
+    p.create("a")
+    p.append("a", 13)
+    before = (list(p.tables["a"].pages), p.free_pages)
+    assert p.trim("a", 20) == 0
+    assert p.tables["a"].num_tokens == 13
+    assert (list(p.tables["a"].pages), p.free_pages) == before
+    p.check_invariants()
+
+
+def test_trim_keeps_partial_boundary_page():
+    p = _pool()
+    p.create("a")
+    p.append("a", 3 * PS)
+    assert p.trim("a", PS + 1) == 1          # only the third page frees
+    assert len(p.tables["a"].pages) == 2     # partial page 2 survives
+    assert p.tables["a"].num_tokens == PS + 1
+    p.check_invariants()
+
+
+def test_trim_to_zero_frees_everything():
+    p = _pool()
+    p.create("a")
+    p.append("a", 2 * PS + 5)
+    free0 = p.free_pages
+    assert p.trim("a", 0) == 3
+    assert p.tables["a"].pages == [] and p.tables["a"].num_tokens == 0
+    assert p.free_pages == free0 + 3
+    p.append("a", 10)                        # table is reusable after
+    assert p.tables["a"].num_tokens == 10
+    p.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# CoW boundary
+# ---------------------------------------------------------------------------
+
+def test_trim_across_cow_boundary_preserves_peer_tail():
+    """Parent and child share a PARTIAL tail page; the child CoWs it on
+    append. Trimming the parent through that boundary must free only
+    the parent's private copy-side pages and decrement — never free —
+    anything the child still references."""
+    p = _pool()
+    p.create("parent")
+    p.append("parent", 2 * PS + 4)           # pages [0,1,2], page 2 partial
+    p.fork("parent", "child")                # all 3 shared, refcount 2
+    p.append("child", 6)                     # CoW: child copies page 2
+    child_pages = list(p.tables["child"].pages)
+    parent_pages = list(p.tables["parent"].pages)
+    assert child_pages[:2] == parent_pages[:2]
+    assert child_pages[2] != parent_pages[2], "CoW must have copied"
+    p.check_invariants()
+
+    # trim the parent through the CoW boundary into the shared region
+    freed = p.trim("parent", PS + 2)         # keep pages [0,1(partial)]
+    assert freed == 1                        # only the parent's page 2
+    assert p.tables["child"].pages == child_pages, \
+        "trimming the parent disturbed the child's pages"
+    assert p.refcount[child_pages[0]] == 2   # still shared
+    assert p.refcount[child_pages[1]] == 2
+    p.check_invariants()
+
+    # and through the fully-shared region: pages must NOT free (child
+    # holds them), only the parent's reference drops
+    freed = p.trim("parent", 0)
+    assert freed == 0, "shared pages freed while the child references them"
+    assert p.refcount[child_pages[0]] == 1
+    p.check_invariants()
+    p.release("child")
+    p.release("parent")
+    assert p.free_pages == p.num_pages
+    p.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# ("node", key) alias overlap — the radix tree's table keying
+# ---------------------------------------------------------------------------
+
+def test_trim_request_overlapping_node_alias():
+    """A request table forked from a cached ``("node", key)`` table (the
+    engine's admission alias): trimming the request back through the
+    shared prefix must leave every node page resident (refcount 1),
+    and trimming the NODE's unshared tail must not disturb the
+    request."""
+    p = _pool()
+    node = ("node", ("prefix", 42))
+    p.create(node)
+    p.append(node, 4 * PS)                   # 4 whole pages
+    p.fork(node, ("req", 1), shared_tokens=2 * PS + 3)
+    req = p.tables[("req", 1)]
+    assert len(req.pages) == 3               # 2 whole + partial boundary
+    p.append(("req", 1), PS)                 # CoW page 2 + grow
+    p.check_invariants()
+
+    node_pages = list(p.tables[node].pages)
+    # request rolls back its speculative tail through the shared prefix
+    p.trim(("req", 1), PS + 1)
+    assert p.tables[node].pages == node_pages, "node lost pages"
+    assert all(pg in p.refcount for pg in node_pages)
+    assert p.refcount[node_pages[0]] == 2    # still aliased
+    assert p.refcount[node_pages[2]] == 1    # req's CoW dropped its ref
+    p.check_invariants()
+
+    # partial node eviction (the tree trims the cached tail) while the
+    # request still aliases the head
+    p.trim(node, PS)
+    assert p.tables[("req", 1)].num_tokens == PS + 1
+    assert p.refcount[node_pages[0]] == 2
+    p.check_invariants()
+    p.release(("req", 1))
+    p.release(node)
+    assert p.free_pages == p.num_pages
+
+
+# ---------------------------------------------------------------------------
+# trim racing in-flight prefetch/demote mutations of the peer table
+# ---------------------------------------------------------------------------
+
+def test_trim_races_prefetch_append_on_aliased_node():
+    """The prefetch stream appends restored tokens into a node table
+    in-flight while a request aliasing its head trims (rejected spec
+    tail) and releases — interleaved, repeatedly. Refcounts must stay
+    exact and no shared page may ever hit the free list early."""
+    p = _pool(64)
+    node = ("node", "doc")
+    p.create(node)
+    p.append(node, 2 * PS)                   # restored so far
+    p.fork(node, ("req", 7), shared_tokens=2 * PS)
+    p.append(("req", 7), 5)                  # private decode tail
+    shared = list(p.tables[node].pages)
+
+    p.append(node, PS + 3)                   # prefetch lands mid-step
+    p.trim(("req", 7), 2 * PS + 1)           # spec rollback, keeps alias
+    p.check_invariants()
+    assert p.tables[node].pages[:2] == shared
+    assert p.refcount[shared[0]] == 2
+
+    p.append(node, 5)                        # second prefetch chunk...
+    p.trim(("req", 7), PS)                   # ...racing a deeper trim
+    p.check_invariants()
+    assert p.refcount[shared[0]] == 2 and p.refcount[shared[1]] == 1
+
+    # demote completes: the node's device copy trims away entirely;
+    # the request's aliased head must keep its page alive
+    p.trim(node, 0)
+    assert shared[0] in p.refcount and p.refcount[shared[0]] == 1
+    assert shared[1] not in p.refcount       # truly unreferenced -> freed
+    p.check_invariants()
+    p.release(("req", 7))
+    p.release(node)
+    assert p.free_pages == p.num_pages
+
+
+def test_randomized_trim_fork_append_interleavings():
+    """Property-style sweep: random interleavings of create / fork /
+    append / trim / release across aliased tables never violate the
+    pool invariants, and a full drain returns every page."""
+    rng = np.random.default_rng(0)
+    for _ in range(40):
+        p = _pool(48)
+        ids, next_id = [], 0
+        for step in range(rng.integers(8, 25)):
+            op = rng.integers(0, 5)
+            if op == 0 or not ids:
+                sid, next_id = ("t", next_id), next_id + 1
+                p.create(sid)
+                ids.append(sid)
+                try:
+                    p.append(sid, int(rng.integers(1, 3 * PS)))
+                except MemoryError:
+                    p.release(sid)
+                    ids.remove(sid)
+            elif op == 1 and ids:
+                parent = ids[rng.integers(len(ids))]
+                sid, next_id = ("t", next_id), next_id + 1
+                share = int(rng.integers(
+                    0, p.tables[parent].num_tokens + 1))
+                p.fork(parent, sid, shared_tokens=share)
+                ids.append(sid)
+            elif op == 2:
+                sid = ids[rng.integers(len(ids))]
+                try:
+                    p.append(sid, int(rng.integers(1, 2 * PS)))
+                except MemoryError:
+                    pass                     # pool squeeze: fine, no-op
+            elif op == 3:
+                sid = ids[rng.integers(len(ids))]
+                p.trim(sid, int(rng.integers(
+                    0, p.tables[sid].num_tokens + PS)))
+            else:
+                sid = ids.pop(rng.integers(len(ids)))
+                p.release(sid)
+            p.check_invariants()
+        for sid in ids:
+            p.release(sid)
+        assert p.free_pages == p.num_pages
+        p.check_invariants()

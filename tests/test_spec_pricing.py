@@ -1,0 +1,144 @@
+"""Acceptance-aware decode pricing for speculative instances
+(DESIGN.md §14 — CostModel.with_speculative / spec_factor).
+
+Monotonicity and boundary properties of E(a, K) and the decode-time
+multiplier, plus the wiring: with_chips must carry the spec fields,
+the simulator must apply SimConfig.spec_k, and the cluster must price
+a speculative engine config through with_speculative.
+"""
+
+import pytest
+
+from repro.core.cost_model import (CostModel, cost_model_for,
+                                   expected_tokens_per_step)
+
+
+def _cm(**kw):
+    return cost_model_for("smollm-360m").with_speculative(
+        kw.pop("k", 4), kw.pop("acceptance", 0.8), **kw)
+
+
+# ---------------------------------------------------------------------------
+# E(a, K)
+# ---------------------------------------------------------------------------
+
+def test_expected_tokens_bounds_and_endpoints():
+    assert expected_tokens_per_step(0.0, 4) == 1.0
+    assert expected_tokens_per_step(1.0, 4) == 5.0
+    assert expected_tokens_per_step(0.5, 0) == 1.0          # k=0: plain
+    assert expected_tokens_per_step(-3.0, 4) == 1.0         # clamped
+    assert expected_tokens_per_step(7.0, 4) == 5.0          # clamped
+    for a in (0.1, 0.5, 0.9):
+        for k in (1, 2, 4, 8):
+            e = expected_tokens_per_step(a, k)
+            assert 1.0 <= e <= k + 1
+
+
+def test_expected_tokens_monotone_in_acceptance_and_k():
+    grid = [i / 20 for i in range(21)]
+    for k in (1, 3, 6):
+        es = [expected_tokens_per_step(a, k) for a in grid]
+        assert all(b >= a for a, b in zip(es, es[1:])), \
+            f"E not monotone in acceptance at k={k}"
+    for a in (0.3, 0.7, 0.95):
+        es = [expected_tokens_per_step(a, k) for k in range(0, 9)]
+        assert all(b >= a_ for a_, b in zip(es, es[1:])), \
+            f"E not monotone in k at a={a}"
+
+
+# ---------------------------------------------------------------------------
+# spec_factor / decode_time
+# ---------------------------------------------------------------------------
+
+def test_spec_factor_off_is_exactly_one():
+    cm = cost_model_for("smollm-360m")
+    assert cm.spec_k == 0 and cm.spec_factor() == 1.0
+    assert (cm.decode_time(100)
+            == cm.with_speculative(0, 0.9).decode_time(100))
+
+
+def test_spec_factor_cheapens_high_acceptance_and_taxes_low():
+    hi = _cm(acceptance=0.95)
+    lo = _cm(acceptance=0.05)
+    assert hi.spec_factor() < 1.0, \
+        "high acceptance must cut the per-token decode price"
+    assert lo.spec_factor() > 1.0, \
+        "low acceptance must pay for wasted draft work"
+    base = cost_model_for("smollm-360m")
+    assert hi.decode_time(200) < base.decode_time(200) < lo.decode_time(200)
+
+
+def test_decode_price_monotone_decreasing_in_acceptance():
+    prices = [_cm(acceptance=a).decode_time(100)
+              for a in (0.0, 0.2, 0.4, 0.6, 0.8, 1.0)]
+    assert all(b <= a for a, b in zip(prices, prices[1:])), \
+        "decode price must be non-increasing in acceptance at fixed k"
+    # draft work is never free: even at a=1.0 the factor stays above
+    # the no-draft lower bound (1 + k*c) / (k + 1)
+    cm = _cm(acceptance=1.0, k=4, draft_cost=0.15)
+    assert cm.spec_factor() == pytest.approx((1 + 4 * 0.15) / 5)
+
+
+def test_batch_time_prices_spec_decode_lanes():
+    base = cost_model_for("smollm-360m")
+    hi = base.with_speculative(4, 0.95)
+    assert hi.batch_time(0, 16) < base.batch_time(0, 16), \
+        "pure-decode batch must get cheaper under high acceptance"
+    # prefill term is NOT speculative: chunk-only batches price equally
+    assert hi.batch_time(512, 0) == base.batch_time(512, 0)
+
+
+def test_with_chips_carries_spec_fields():
+    cm = _cm(k=3, acceptance=0.7, draft_cost=0.2).with_chips(4)
+    assert (cm.spec_k, cm.spec_acceptance, cm.spec_draft_cost) \
+        == (3, 0.7, 0.2)
+    assert cm.hw.chips_per_instance == 4
+    assert cm.spec_factor() == _cm(k=3, acceptance=0.7,
+                                   draft_cost=0.2).spec_factor()
+
+
+def test_with_speculative_clamps_garbage():
+    cm = cost_model_for("smollm-360m").with_speculative(-2, 1.7, -0.5)
+    assert cm.spec_k == 0 and cm.spec_factor() == 1.0
+    cm = cost_model_for("smollm-360m").with_speculative(4, 1.7)
+    assert cm.spec_acceptance == 1.0
+
+
+# ---------------------------------------------------------------------------
+# wiring: simulator + cluster
+# ---------------------------------------------------------------------------
+
+def test_simulator_applies_spec_pricing():
+    from repro.serving.simulator import SimConfig, Simulator
+    plain = Simulator(SimConfig(num_instances=1))
+    spec = Simulator(SimConfig(num_instances=1, spec_k=4,
+                               spec_acceptance=0.95))
+    assert plain.cm.spec_k == 0
+    assert spec.cm.spec_k == 4
+    assert spec.cm.decode_time(100) < plain.cm.decode_time(100)
+
+
+def test_cluster_prices_speculative_engines():
+    import dataclasses
+
+    import jax
+
+    from repro.configs import ARCHS, reduced
+    from repro.models import zoo
+    from repro.serving.cluster import ClusterRuntime
+    from repro.serving.engine import EngineConfig
+    from repro.serving.speculative import SpeculativeConfig
+
+    cfg = dataclasses.replace(reduced(ARCHS["smollm-360m"]), n_layers=1,
+                              dtype="float32")
+    api = zoo.build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    sp = SpeculativeConfig(draft_cfg=cfg, k=4, draft_params=params,
+                           acceptance=0.9, draft_cost=0.1)
+    ec = EngineConfig(max_context=64, chunk_size=16, max_batch_tokens=64,
+                      capacity_tokens=2048, page_size=16, speculative=sp)
+    cl = ClusterRuntime(cfg, params, 1, engine_cfg=ec)
+    cm = cl.gs.cost_model
+    assert cm.spec_k == 4 and cm.spec_acceptance == 0.9
+    assert cm.spec_factor() < 1.0, \
+        "E2 must see the acceptance-discounted decode price"
